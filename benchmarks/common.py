@@ -1,0 +1,72 @@
+"""Shared benchmark plumbing: the synthetic federated setting + timing."""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import FederatedTrainer
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.models import build_model
+
+logging.getLogger("federated").setLevel(logging.WARNING)
+
+
+def federated_setting(*, vocab=16, clients=3, seq=32, alpha=0.3, seed=0,
+                      nseq=200, concentration=0.05, batch=16):
+    """The paper's 3-client cross-silo setting over a synthetic non-IID corpus."""
+    cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                              vocab_size=vocab)
+    model = build_model(cfg)
+    ds = SyntheticLM(vocab=vocab, num_tasks=clients, seed=seed,
+                     concentration=concentration)
+    seqs, labels = [], []
+    for t in range(clients):
+        s = ds.sample(task=t, num_sequences=nseq, seq_len=seq, seed=seed + t)
+        seqs.append(s)
+        labels += [t] * nseq
+    seqs = np.concatenate(seqs)
+    parts = dirichlet_partition(np.array(labels), clients, alpha=alpha, seed=seed)
+    loaders = [ClientLoader(seqs[p], batch_size=batch, seed=seed + i)
+               for i, p in enumerate(parts)]
+    evals = [ds.to_batch(ds.sample(task=t, num_sequences=16, seq_len=seq,
+                                   seed=seed + 500 + t)) for t in range(clients)]
+    return cfg, model, loaders, evals
+
+
+def run_method(method: str, *, rounds=5, local_steps=25, rank=8, lr=3e-2,
+               assignment="average", svd_rank=0, seed=0, setting_seed=0,
+               include_mlp=True, schedule="constant"):
+    cfg, model, loaders, evals = federated_setting(seed=setting_seed)
+    t0 = time.time()
+    tr = FederatedTrainer(
+        model=model,
+        lora_cfg=LoRAConfig(rank=rank, alpha=2 * rank, include_mlp=include_mlp),
+        fed_cfg=FedConfig(num_clients=3, rounds=rounds, local_steps=local_steps,
+                          method=method, assignment=assignment,
+                          svd_rank=svd_rank),
+        train_cfg=TrainConfig(learning_rate=lr, schedule=schedule,
+                              total_steps=rounds * local_steps),
+        client_loaders=loaders, eval_batches=evals, seed=seed)
+    hist = tr.run()
+    wall = time.time() - t0
+    return {
+        "method": method if assignment == "average" else f"fedex/{assignment}",
+        "rank": rank,
+        "final_eval_loss": hist[-1].eval_loss,
+        "final_eval_acc": hist[-1].eval_acc,
+        "divergence": hist[-1].divergence_scaled,
+        "history": [r.eval_loss for r in hist],
+        "divergence_history": [r.divergence_scaled for r in hist],
+        "wall_s": wall,
+        "us_per_call": 1e6 * wall / (rounds * local_steps * 3),
+    }
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

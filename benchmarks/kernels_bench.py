@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: wall time of the jnp reference paths on CPU (the
+Pallas kernels themselves target TPU; interpret-mode timing is meaningless,
+so we time the production jnp twins and validate the kernels' allclose here),
+plus derived arithmetic intensities used in §Perf napkin math.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ref
+from repro.kernels.fedex_residual import fedex_residual_apply
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.flash_swa import flash_swa
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.time() - t0) / reps
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+
+    # -- lora_matmul ---------------------------------------------------------
+    m, k, n, r = (256, 512, 512, 8) if quick else (512, 1024, 1024, 16)
+    x, w, a, b = mk((m, k)), mk((k, n)), mk((k, r)), mk((r, n))
+    base_flops = 2 * m * k * n
+    adapter_flops = 2 * m * r * (k + n)
+    us = _time(jax.jit(lambda *t: ref.lora_matmul_ref(*t, 0.5)), x, w, a, b)
+    kern = lora_matmul(x, w, a, b, scale=0.5, interpret=True)
+    err = float(jnp.abs(kern - ref.lora_matmul_ref(x, w, a, b, 0.5)).max())
+    rows.append(csv_row(
+        "kernels/lora_matmul", us,
+        f"adapter_flop_overhead={adapter_flops/base_flops:.4f};"
+        f"interpret_allclose_err={err:.2e}"))
+
+    # -- fedex_residual ------------------------------------------------------
+    c, m2, n2, r2 = 3, 512, 512, 8
+    w0, a_s, b_s = mk((m2, n2)), mk((c, m2, r2)), mk((c, r2, n2))
+    us = _time(jax.jit(lambda *t: ref.fedex_residual_ref(*t, 1.0)), w0, a_s, b_s)
+    kern = fedex_residual_apply(w0, a_s, b_s, scale=1.0, interpret=True)
+    err = float(jnp.abs(kern - ref.fedex_residual_ref(w0, a_s, b_s, 1.0)).max())
+    naive_hbm = 3 * m2 * n2 * 4  # dense residual write + read + W0 update
+    fused_hbm = 2 * m2 * n2 * 4 + (c + 1) * (m2 + n2) * r2 * 4
+    rows.append(csv_row(
+        "kernels/fedex_residual", us,
+        f"hbm_traffic_vs_naive={fused_hbm/naive_hbm:.3f};"
+        f"interpret_allclose_err={err:.2e}"))
+
+    # -- flash_swa -----------------------------------------------------------
+    bh, s, d, win = (4, 512, 64, 128) if quick else (8, 1024, 64, 256)
+    q, kk, v = mk((bh, s, d)), mk((bh, s, d)), mk((bh, s, d))
+    us = _time(jax.jit(lambda *t: ref.flash_swa_ref(*t, causal=True, window=win)),
+               q, kk, v)
+    kern = flash_swa(q, kk, v, causal=True, window=win, bq=128, bk=128,
+                     interpret=True)
+    err = float(jnp.abs(kern - ref.flash_swa_ref(q, kk, v, causal=True,
+                                                 window=win)).max())
+    # windowed kernel touches O(win) KV per query vs O(S) for dense
+    rows.append(csv_row(
+        "kernels/flash_swa", us,
+        f"kv_touched_fraction={min(1.0, 2*win/s):.3f};"
+        f"interpret_allclose_err={err:.2e}"))
+    return rows

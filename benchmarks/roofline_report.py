@@ -1,0 +1,42 @@
+"""§Roofline report: reads the dry-run JSONL records (dryrun_single.json)
+and emits the per-(arch × shape) three-term roofline rows used in
+EXPERIMENTS.md. If the dry-run hasn't been executed, emits a pointer row
+instead of failing (the dry-run is a separate 512-device process).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+CANDIDATES = ("dryrun_single.json", "/root/repo/dryrun_single.json")
+
+
+def run(quick: bool = False) -> List[str]:
+    path = next((p for p in CANDIDATES if os.path.exists(p)), None)
+    if path is None:
+        return [csv_row("roofline/missing", 0.0,
+                        "run: python -m repro.launch.dryrun --all --mesh single "
+                        "--out dryrun_single.json")]
+    rows = []
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            rows.append(csv_row(name, 0.0, "skipped=" + r["reason"][:60]))
+            continue
+        if r["status"] != "ok":
+            rows.append(csv_row(name, 0.0, "error=" + r.get("error", "?")[:80]))
+            continue
+        rf = r["roofline"]
+        step_us = 1e6 * max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(csv_row(
+            name, step_us,
+            f"compute_s={rf['compute_s']:.3e};memory_s={rf['memory_s']:.3e};"
+            f"collective_s={rf['collective_s']:.3e};dominant={rf['dominant']};"
+            f"useful_flops_ratio={(rf.get('useful_flops_ratio') or 0):.3f}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks budgets for CI.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table6,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig2_divergence_layers,
+    fig3_divergence_rounds,
+    kernels_bench,
+    roofline_report,
+    table5_assignment,
+    table6_comm,
+    table9_rank_sweep,
+    tables_convergence,
+)
+
+SUITES = {
+    "tables1-4": tables_convergence,
+    "table5": table5_assignment,
+    "table6": table6_comm,
+    "table9": table9_rank_sweep,
+    "fig2": fig2_divergence_layers,
+    "fig3": fig3_divergence_rounds,
+    "kernels": kernels_bench,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+
+    wanted = [s.strip() for s in args.only.split(",") if s.strip()] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        mod = SUITES[name]
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=args.quick):
+                print(row)
+        except Exception as e:  # report, keep the harness going
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{str(e)[:120]}")
+        print(f"{name}/_suite_wall,{1e6 * (time.time() - t0):.0f},ok",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

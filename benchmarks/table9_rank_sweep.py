@@ -1,0 +1,38 @@
+"""Paper Table 9 (Appendix C): effect of varying LoRA rank.
+
+FedEx vs FedIT vs FFA at r ∈ {1, 4, 8}; the claim checked is that FedEx stays
+≥ FedIT at every rank (paper: across all rank configurations).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row, run_method
+
+RANKS = (1, 4, 8)
+
+
+def run(quick: bool = False) -> List[str]:
+    rounds = 2 if quick else 5
+    steps = 10 if quick else 25
+    ranks = (1, 8) if quick else RANKS
+    rows = []
+    wins = 0
+    seeds = (0,) if quick else (0, 1)
+    for r in ranks:
+        res = {}
+        for m in ("fedex", "fedit", "ffa"):
+            runs = [run_method(m, rank=r, rounds=rounds, local_steps=steps,
+                               seed=s, setting_seed=s) for s in seeds]
+            res[m] = {
+                "final_eval_loss": sum(x["final_eval_loss"] for x in runs) / len(runs),
+                "us_per_call": runs[0]["us_per_call"],
+            }
+        wins += res["fedex"]["final_eval_loss"] <= res["fedit"]["final_eval_loss"] + 0.02
+        rows.append(csv_row(
+            f"table9/r{r}", res["fedex"]["us_per_call"],
+            ";".join(f"{m}={res[m]['final_eval_loss']:.4f}" for m in res)))
+    rows.append(csv_row("table9/fedex_ge_fedit_all_ranks", 0.0,
+                        f"wins={wins}/{len(ranks)}"))
+    return rows

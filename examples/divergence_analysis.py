@@ -1,0 +1,42 @@
+"""Reproduce the paper's §6 deviation analysis (Figures 2–3) as CSV.
+
+Trains 3 clients locally from a common adapter init, then prints the scaled
+Frobenius norm of (FedAvg-of-factors − ideal-mean-of-products) per layer for
+Q/V matrices at two local-training budgets, plus the round trajectory with a
+decaying lr — the paper's three observations, numerically.
+
+  PYTHONPATH=src python examples/divergence_analysis.py
+"""
+
+import numpy as np
+
+from benchmarks.common import run_method
+from benchmarks.fig2_divergence_layers import client_adapters_after
+from repro.core import fedit_aggregate, mean_deviation
+from repro.core.divergence import deviation_tree, flatten_deviations
+
+print("== Figure 2 analog: per-layer deviation after ONE aggregation step ==")
+print("layer,steps5_q,steps5_v,steps20_q,steps20_v")
+per = {}
+for steps in (5, 20):
+    loras = client_adapters_after(steps)
+    dev = flatten_deviations(deviation_tree(loras), "scaled")
+    per[steps] = (np.asarray(dev["layers/attn/q_proj"]),
+                  np.asarray(dev["layers/attn/v_proj"]))
+for layer in range(len(per[5][0])):
+    print(f"{layer},{per[5][0][layer]:.3e},{per[5][1][layer]:.3e},"
+          f"{per[20][0][layer]:.3e},{per[20][1][layer]:.3e}")
+print(f"\nobservation 2 (grows with local epochs): "
+      f"{per[5][0].mean():.3e} -> {per[20][0].mean():.3e}  "
+      f"holds={per[20][0].mean() > per[5][0].mean()}")
+
+print("\n== Figure 3 analog: deviation across rounds (cosine lr) ==")
+res = run_method("fedex", rounds=8, local_steps=20, schedule="cosine")
+print("round,pre_agg_divergence")
+for i, d in enumerate(res["divergence_history"]):
+    print(f"{i},{d:.3e}")
+
+print("\n== FedEx post-aggregation deviation (should be ~0) ==")
+loras = client_adapters_after(5)
+g = fedit_aggregate(loras)
+print(f"post-agg deviation: {mean_deviation([g, g, g]):.3e}")

@@ -1,0 +1,32 @@
+"""End-to-end driver: the paper's method comparison (Tables 1–4 analog).
+
+Trains a ~tiny decoder for a few hundred total steps per method on the
+3-client non-IID synthetic setting and reports final eval loss/acc + the
+pre-aggregation divergence — Centralized / FedEx / FedIT / FFA, as in the
+paper's main tables.
+
+  PYTHONPATH=src python examples/method_comparison.py [--rounds 6] [--steps 25]
+"""
+
+import argparse
+
+from benchmarks.common import run_method
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=25)
+    args = ap.parse_args()
+
+    print(f"{'method':<14} {'eval_loss':>9} {'eval_acc':>9} {'divergence':>11}")
+    for method in ("centralized", "fedex", "fedit", "ffa"):
+        r = run_method(method, rounds=args.rounds, local_steps=args.steps)
+        print(f"{method:<14} {r['final_eval_loss']:>9.4f} "
+              f"{r['final_eval_acc']:>9.4f} {r['divergence']:>11.3e}")
+    print("\nFedEx's post-aggregation divergence is identically 0 (exact);")
+    print("the divergence column reports pre-aggregation client drift.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Multi-pod dry-run example: lower + compile one (arch × shape) on the
+production meshes and print the roofline terms.
+
+This is a thin veneer over repro.launch.dryrun (which must own the process —
+jax locks the device count at first init, so run this as a FRESH process):
+
+  PYTHONPATH=src python examples/multi_pod_dryrun.py --arch gemma3-12b --shape long_500k
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import os
+import tempfile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    args = ap.parse_args()
+
+    out = tempfile.mktemp(suffix=".json")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--mesh", args.mesh, "--out", out]
+    subprocess.run(cmd, env=env, check=True)
+    print("\n=== roofline terms ===")
+    for line in open(out):
+        rec = json.loads(line)
+        if rec["status"] != "ok":
+            print(f"{rec['arch']} × {rec['shape']} × {rec['mesh']}: {rec['status']}")
+            continue
+        rf = rec["roofline"]
+        print(f"{rec['arch']} × {rec['shape']} × {rec['mesh']}:")
+        print(f"  compute    {rf['compute_s']:.3e} s")
+        print(f"  memory     {rf['memory_s']:.3e} s")
+        print(f"  collective {rf['collective_s']:.3e} s   ← dominant: {rf['dominant']}")
+        print(f"  useful-FLOPs ratio: {rf.get('useful_flops_ratio') or 0:.3f}")
+    os.remove(out)
+
+
+if __name__ == "__main__":
+    main()

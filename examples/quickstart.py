@@ -1,0 +1,66 @@
+"""Quickstart: FedEx-LoRA in ~60 lines.
+
+Three clients fine-tune LoRA adapters on non-IID synthetic data; the server
+aggregates with the paper's exact-aggregation rule (residual folded into W0)
+and we verify Eq. 7–9 numerically at the end.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import (FederatedTrainer, fedex_aggregate, merge_lora,
+                        product_mean, apply_residual)
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.models import build_model
+from repro.util.tree import flatten_with_paths
+
+# ---- model: a tiny llama-style decoder (the math is size-independent) -------
+cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32", vocab_size=16)
+model = build_model(cfg)
+
+# ---- data: 3 clients, Dirichlet non-IID task mixture -------------------------
+ds = SyntheticLM(vocab=16, num_tasks=3, seed=0, concentration=0.05)
+seqs, labels = [], []
+for t in range(3):
+    s = ds.sample(task=t, num_sequences=150, seq_len=32, seed=t)
+    seqs.append(s)
+    labels += [t] * 150
+seqs, labels = np.concatenate(seqs), np.array(labels)
+parts = dirichlet_partition(labels, 3, alpha=0.3, seed=0)
+loaders = [ClientLoader(seqs[p], batch_size=16, seed=i) for i, p in enumerate(parts)]
+evals = [ds.to_batch(ds.sample(task=t, num_sequences=16, seq_len=32, seed=100 + t))
+         for t in range(3)]
+
+# ---- federated fine-tuning with exact aggregation ----------------------------
+trainer = FederatedTrainer(
+    model=model,
+    lora_cfg=LoRAConfig(rank=8, alpha=16, include_mlp=True),
+    fed_cfg=FedConfig(num_clients=3, rounds=3, local_steps=20, method="fedex"),
+    train_cfg=TrainConfig(learning_rate=3e-2, schedule="constant"),
+    client_loaders=loaders, eval_batches=evals, seed=0)
+history = trainer.run()
+print(f"\neval loss: {history[0].eval_loss:.4f} → {history[-1].eval_loss:.4f} "
+      f"(uniform = {np.log(16):.4f})")
+
+# ---- verify the paper's exactness claim (Eq. 7–9) on live adapters -----------
+params0 = model.init(jax.random.key(0))
+client_loras = [trainer.global_lora] * 3  # identical post-aggregation
+# perturb to simulate fresh local training
+client_loras = [jax.tree.map(
+    lambda x, i=i: x + 0.01 * jax.random.normal(jax.random.key(i), x.shape), l)
+    for i, l in enumerate(client_loras)]
+g, res = fedex_aggregate(client_loras)
+scale = trainer.scale
+w_fedex = merge_lora(apply_residual(params0, res, scale), g, scale)
+w_ideal = apply_residual(params0, product_mean(client_loras), scale)
+err = max(float(jnp.abs(a - b).max()) for a, b in zip(
+    flatten_with_paths(w_fedex).values(), flatten_with_paths(w_ideal).values()))
+print(f"FedEx aggregation vs ideal FedAvg of products: max |Δ| = {err:.2e}")
+assert err < 1e-5, "exact aggregation violated!"
+print("Eq. 7–9 verified: aggregation is EXACT.")

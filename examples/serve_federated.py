@@ -1,0 +1,68 @@
+"""Serve a federated-fine-tuned model with batched requests.
+
+Runs a short FedEx-LoRA training, merges the aggregated adapters into the
+base (core.merge_lora — mathematically identical to serving with adapters),
+then answers a batch of prompts with prefill + greedy decode through the KV
+cache machinery (the same code paths the decode_32k / long_500k dry-run
+shapes exercise at production scale).
+
+  PYTHONPATH=src python examples/serve_federated.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import FederatedTrainer, merge_lora
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+
+cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32", vocab_size=16)
+model = build_model(cfg)
+
+ds = SyntheticLM(vocab=16, num_tasks=3, seed=0, concentration=0.05)
+seqs = np.concatenate([ds.sample(task=t, num_sequences=100, seq_len=32, seed=t)
+                       for t in range(3)])
+labels = np.repeat(np.arange(3), 100)
+parts = dirichlet_partition(labels, 3, alpha=0.3, seed=0)
+loaders = [ClientLoader(seqs[p], batch_size=16, seed=i) for i, p in enumerate(parts)]
+
+trainer = FederatedTrainer(
+    model=model, lora_cfg=LoRAConfig(rank=8, alpha=16, include_mlp=True),
+    fed_cfg=FedConfig(num_clients=3, rounds=2, local_steps=15, method="fedex"),
+    train_cfg=TrainConfig(learning_rate=3e-2, schedule="constant"),
+    client_loaders=loaders, seed=0)
+trainer.run()
+
+# ---- merge + serve -----------------------------------------------------------
+served_params = merge_lora(trainer.params, trainer.global_lora, trainer.scale)
+lcfg = LoRAConfig(rank=8)
+prefill = jax.jit(make_prefill_step(model, lcfg))
+decode = jax.jit(make_decode_step(model, lcfg))
+
+batch_size, prompt_len, gen_steps = 4, 16, 12
+prompts = ds.sample(task=0, num_sequences=batch_size, seq_len=prompt_len, seed=77)
+batch = {"tokens": jnp.asarray(prompts[:, :prompt_len], jnp.int32)}
+cache = model.init_cache(batch_size, prompt_len + gen_steps + 1)
+
+logits, cache = prefill(served_params, None, batch, cache)
+tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+out = [tok]
+for i in range(gen_steps):
+    tok, _, cache = decode(served_params, None, tok, cache,
+                           jnp.asarray(prompt_len + i, jnp.int32))
+    out.append(tok)
+gen = np.asarray(jnp.concatenate(out, axis=1))
+for b in range(batch_size):
+    print(f"prompt {prompts[b, :prompt_len].tolist()} → generated {gen[b].tolist()}")
+
+# sanity: generations follow the task-0 Markov chain more than uniform chance
+trans = ds.transitions[0]
+probs = [trans[a, b] for row in np.concatenate([prompts[:, prompt_len - 1:prompt_len], gen], 1)
+         for a, b in zip(row[:-1], row[1:])]
+print(f"\nmean transition prob of generated tokens: {np.mean(probs):.3f} "
+      f"(uniform would be {1 / 16:.3f})")

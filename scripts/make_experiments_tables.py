@@ -1,0 +1,76 @@
+"""Generate the §Dry-run / §Roofline markdown tables from the dry-run JSONs.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        return [json.loads(l) for l in open(path) if l.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "?"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | compile_s | peak_bytes/dev | dominant |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "ok":
+            peak = (r.get("memory", {}) or {}).get("peak_bytes")
+            dom = r["roofline"]["dominant"]
+            print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+                  f"{fmt_bytes(peak)} | {dom} |")
+        elif r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | skipped | — | — | — |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — |")
+
+
+def roofline_table(recs, base=None):
+    base_map = {}
+    if base:
+        base_map = {(r["arch"], r["shape"]): r for r in base if r["status"] == "ok"}
+    print("\n| arch | shape | compute_s | memory_s | collective_s | dominant | useful | Δdominant vs baseline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        dom = rf["dominant"]
+        dom_val = rf[f"{dom}_s"]
+        delta = ""
+        b = base_map.get((r["arch"], r["shape"]))
+        if b:
+            bf = b["roofline"]
+            bdom_val = max(bf["compute_s"], bf["memory_s"], bf["collective_s"])
+            if dom_val > 0:
+                delta = f"{bdom_val / dom_val:.1f}×"
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+              f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | {dom} | "
+              f"{(rf.get('useful_flops_ratio') or 0):.3f} | {delta} |")
+
+
+if __name__ == "__main__":
+    single = load("dryrun_single.json")
+    multi = load("dryrun_multi.json")
+    base_s = load("dryrun_baseline_single.json")
+    dryrun_table(single, "Single-pod (16×16 = 256 chips)")
+    dryrun_table(multi, "Multi-pod (2×16×16 = 512 chips)")
+    print("\n### Roofline (single-pod, optimized; Δ vs paper-faithful baseline)")
+    roofline_table(single, base_s)
+    print("\n### Roofline (single-pod, paper-faithful BASELINE)")
+    roofline_table(base_s)

@@ -1,0 +1,13 @@
+"""FedEx-LoRA: exact federated LoRA aggregation as a multi-pod JAX framework.
+
+See README.md / DESIGN.md. Public entry points:
+
+    repro.configs      — model/shape/LoRA/federated config registry
+    repro.models       — build_model(cfg) for all 6 architecture families
+    repro.core         — the paper's aggregation math + federated driver
+    repro.kernels      — Pallas TPU kernels (lora_matmul, fedex_residual, flash_swa)
+    repro.sharding     — 2D training + weight-stationary serving layouts
+    repro.launch       — dryrun / train / serve drivers, mesh, HLO analysis
+"""
+
+__version__ = "1.0.0"

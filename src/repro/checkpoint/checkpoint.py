@@ -1,0 +1,63 @@
+"""Flat-path ``.npz`` checkpointing for pytrees + federated round state.
+
+No external deps (orbax unavailable offline): trees are flattened to
+``path → array`` with '/'-joined keys and stored via numpy. Scalars/metadata
+ride along in a JSON sidecar entry.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+_META_KEY = "__meta__"
+
+
+def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    flat = flatten_with_paths(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            arr = arr.astype(np.float32)
+        arrays[k.replace("=", "_")] = arr
+    payload = {"meta": meta or {}, "bf16_keys": dtypes}
+    arrays[_META_KEY] = np.frombuffer(json.dumps(payload).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str) -> tuple[Any, Dict]:
+    with np.load(path, allow_pickle=False) as z:
+        payload = json.loads(bytes(z[_META_KEY].tobytes()).decode())
+        bf16 = payload.get("bf16_keys", {})
+        flat = {}
+        for k in z.files:
+            if k == _META_KEY:
+                continue
+            arr = z[k]
+            if k in bf16:
+                arr = jnp.asarray(arr, jnp.bfloat16)
+            else:
+                arr = jnp.asarray(arr)
+            flat[k] = arr
+    return unflatten_from_paths(flat), payload.get("meta", {})

@@ -1,0 +1,81 @@
+"""Config registry: ``get_config(name)`` / ``list_configs()`` / shapes."""
+
+from repro.configs.base import (
+    FedConfig,
+    LoRAConfig,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    config_dict,
+)
+from repro.configs.shapes import SHAPES, get_shape
+from repro.util.registry import Registry
+
+CONFIGS: Registry = Registry("model-configs")
+
+from repro.configs import (  # noqa: E402
+    deepseek_v2_236b,
+    gemma3_12b,
+    granite_8b,
+    internvl2_76b,
+    mixtral_8x22b,
+    paper_models,
+    qwen2_5_3b,
+    starcoder2_15b,
+    whisper_medium,
+    xlstm_1_3b,
+    zamba2_7b,
+)
+
+# The ten assigned architectures.
+ASSIGNED = {
+    "whisper-medium": whisper_medium.CONFIG,
+    "starcoder2-15b": starcoder2_15b.CONFIG,
+    "granite-8b": granite_8b.CONFIG,
+    "mixtral-8x22b": mixtral_8x22b.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "gemma3-12b": gemma3_12b.CONFIG,
+    "internvl2-76b": internvl2_76b.CONFIG,
+    "deepseek-v2-236b": deepseek_v2_236b.CONFIG,
+    "xlstm-1.3b": xlstm_1_3b.CONFIG,
+    "qwen2.5-3b": qwen2_5_3b.CONFIG,
+}
+
+_ALL = dict(ASSIGNED)
+_ALL.update(
+    {
+        "paper-gpt2": paper_models.GPT2_SMALL,
+        "paper-llama3.2-3b": paper_models.LLAMA32_3B,
+        "paper-tiny": paper_models.TINY,
+    }
+)
+
+for _name, _cfg in _ALL.items():
+    CONFIGS.register(_name)(_cfg)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Look up a model config; ``<name>-smoke`` returns the reduced variant."""
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    return CONFIGS.get(name)
+
+
+def list_configs():
+    return CONFIGS.names()
+
+
+__all__ = [
+    "ASSIGNED",
+    "CONFIGS",
+    "FedConfig",
+    "LoRAConfig",
+    "ModelConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "TrainConfig",
+    "config_dict",
+    "get_config",
+    "get_shape",
+    "list_configs",
+]

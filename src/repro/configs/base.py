@@ -1,0 +1,214 @@
+"""Config dataclasses for the model zoo, input shapes, LoRA and federated runs.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The single
+dataclass covers the six architecture families (dense / moe / ssm / hybrid /
+encdec / vlm) — family-specific fields default to "off" values so dense configs
+stay small. ``reduced()`` derives the CPU smoke-test variant mandated by the
+assignment (≤2 layers, d_model ≤ 512, ≤4 experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""  # citation for the config (paper / model card)
+
+    # --- attention ----------------------------------------------------------
+    head_dim: int = 0  # 0 → d_model // num_heads
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    sliding_window: int = 0  # >0 → SWA with this window on ALL attn layers
+    local_global_ratio: int = 0  # gemma3: N local layers per 1 global
+    local_window: int = 0  # window used by "local" layers
+    max_position_embeddings: int = 131_072
+    learned_pos_embeddings: bool = False  # whisper-style
+
+    # --- MLA (DeepSeek-V2) ---------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # per-expert hidden; 0 → d_ff
+    first_k_dense: int = 0  # leading dense layers (deepseek)
+    dense_d_ff: int = 0  # d_ff for those leading dense layers
+    router_aux_loss_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid --------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0  # zamba2: shared attention block every N mamba layers
+
+    # --- xLSTM ---------------------------------------------------------------
+    slstm_every: int = 0  # one sLSTM block per period of this many blocks
+
+    # --- encoder-decoder (whisper) -------------------------------------------
+    enc_layers: int = 0
+    enc_seq_len: int = 0  # frames emitted by the (stubbed) audio frontend
+
+    # --- vlm -----------------------------------------------------------------
+    vision_tokens: int = 0  # patch embeddings emitted by the (stubbed) ViT
+
+    # --- misc ----------------------------------------------------------------
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode at 500k tokens is sub-quadratic / windowed (DESIGN §4)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0 or self.local_global_ratio > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path (whisper is enc-dec)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: ≤2 layers, d_model ≤ 512, ≤4 experts, small vocab."""
+        d_model = min(self.d_model, 256)
+        num_heads = min(self.num_heads, 4)
+        num_kv_heads = max(1, min(self.num_kv_heads, num_heads))
+        kw: Dict = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv_heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64 if self.head_dim else 0,
+            max_position_embeddings=4096,
+        )
+        if self.is_moe:
+            kw.update(
+                num_experts=min(self.num_experts, 4),
+                num_experts_per_tok=min(self.num_experts_per_tok, 2),
+                num_shared_experts=min(self.num_shared_experts, 1),
+                moe_d_ff=min(self.moe_d_ff or self.d_ff, 256),
+                first_k_dense=min(self.first_k_dense, 1),
+                dense_d_ff=min(self.dense_d_ff, 256) if self.dense_d_ff else 0,
+            )
+        if self.mla:
+            kw.update(kv_lora_rank=32, q_lora_rank=64, qk_rope_head_dim=16,
+                      qk_nope_head_dim=32, v_head_dim=32)
+        if self.ssm_state:
+            kw.update(ssm_state=min(self.ssm_state, 16), ssm_head_dim=32)
+        if self.attn_every:
+            kw.update(attn_every=1, num_layers=2)
+        if self.slstm_every:
+            kw.update(slstm_every=2, num_layers=2)
+        if self.enc_layers:
+            kw.update(enc_layers=2, enc_seq_len=64)
+        if self.vision_tokens:
+            kw.update(vision_tokens=16)
+        if self.sliding_window:
+            kw.update(sliding_window=64)
+        if self.local_global_ratio:
+            # keep exactly one (1 local + 1 global) period
+            kw.update(local_global_ratio=1, local_window=64, num_layers=2)
+        elif self.local_window:
+            kw.update(local_window=64)
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 4
+    alpha: float = 8.0
+    target_modules: Tuple[str, ...] = ("q_proj", "k_proj", "v_proj", "o_proj")
+    include_mlp: bool = False  # also adapt FFN / expert projections
+    lora_experts: bool = False  # per-expert adapters on MoE expert matrices
+    dropout: float = 0.0  # kept for config parity; applied host-side in train
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Federated run settings (paper: 3-client cross-silo, FedAvg-style rounds)."""
+
+    num_clients: int = 3
+    rounds: int = 5
+    local_steps: int = 10  # steps per client per round ("local epochs" analog)
+    method: str = "fedex"  # fedex | fedit | ffa | fedex_svd | centralized
+    svd_rank: int = 0  # fedex_svd: truncation rank r' (0 → k*r, i.e. exact)
+    assignment: str = "average"  # average | keep_local | reinit  (Table 5)
+    dirichlet_alpha: float = 0.5  # non-IID split concentration
+    seed: int = 0
+    # differential privacy on uploads (paper §7 future work; core/privacy.py):
+    dp_clip: float = 0.0  # 0 → off; else L2 clip on the adapter delta
+    dp_noise_multiplier: float = 0.0  # Gaussian σ = multiplier · clip
+    # heterogeneous client ranks (paper §6 open problem; core/hetero.py):
+    client_ranks: Tuple[int, ...] = ()  # non-empty → method "fedex_hetero"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-3
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_ratio: float = 0.02
+    schedule: str = "cosine"  # cosine | linear | constant
+    total_steps: int = 1000
+    batch_size: int = 8
+    seq_len: int = 128
+    microbatch: int = 0  # 0 → no grad accumulation
+    seed: int = 0
+
+
+def config_dict(cfg) -> Dict:
+    return dataclasses.asdict(cfg)

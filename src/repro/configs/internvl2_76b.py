@@ -1,0 +1,26 @@
+"""internvl2-76b [vlm]: InternViT (STUBBED) + Llama-3-70B-style LM. [arXiv:2404.16821]
+
+The vision encoder + MLP projector is a stub: ``input_specs`` provides
+``vision_tokens`` precomputed patch embeddings of shape (batch, 256, d_model)
+which the LM consumes by prefix-concatenation with the token embeddings.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28_672,
+    vocab_size=128_256,
+    vision_tokens=256,
+    rope=True,
+    rope_theta=500_000.0,
+    norm="rmsnorm",
+    act="silu",
+    max_position_embeddings=32_768,
+)

@@ -1,0 +1,22 @@
+"""qwen2.5-3b [dense]: GQA kv=2, QKV bias. [hf:Qwen/Qwen2.5-0.5B]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11_008,
+    vocab_size=151_936,
+    rope=True,
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    norm="rmsnorm",
+    act="silu",
+    max_position_embeddings=32_768,
+    tie_embeddings=True,
+)

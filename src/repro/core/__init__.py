@@ -1,0 +1,56 @@
+"""FedEx-LoRA core: exact federated aggregation of LoRA adapters (paper §4)."""
+
+from repro.core.aggregation import (
+    apply_residual,
+    apply_residual_fused,
+    assign_after_aggregation,
+    fedex_aggregate,
+    fedex_residual,
+    fedex_svd_aggregate,
+    fedit_aggregate,
+    ffa_aggregate,
+    map_factors,
+    per_client_residuals,
+    product_mean,
+    tree_mean,
+)
+from repro.core.decompose import (
+    factored_residual_params,
+    reconstruct,
+    residual_factors,
+    truncated_residual_params,
+    truncated_svd_product,
+)
+from repro.core.divergence import deviation_tree, flatten_deviations, mean_deviation
+from repro.core.federated import FederatedTrainer, make_eval_fn, make_local_step
+from repro.core.lora import init_lora, lora_param_count, merge_lora, resolve_targets
+
+__all__ = [
+    "FederatedTrainer",
+    "apply_residual",
+    "apply_residual_fused",
+    "assign_after_aggregation",
+    "deviation_tree",
+    "factored_residual_params",
+    "fedex_aggregate",
+    "fedex_residual",
+    "fedex_svd_aggregate",
+    "fedit_aggregate",
+    "ffa_aggregate",
+    "flatten_deviations",
+    "init_lora",
+    "lora_param_count",
+    "make_eval_fn",
+    "make_local_step",
+    "map_factors",
+    "mean_deviation",
+    "merge_lora",
+    "per_client_residuals",
+    "product_mean",
+    "reconstruct",
+    "residual_factors",
+    "resolve_targets",
+    "tree_mean",
+    "truncated_residual_params",
+    "truncated_svd_product",
+]

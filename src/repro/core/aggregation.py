@@ -1,0 +1,262 @@
+"""Federated aggregation operators — the paper's contribution (§4).
+
+All operators act on *lists of client adapter trees* (k trees of identical
+structure; every factor leaf is ``a: (..., d_in, r)`` / ``b: (..., r, d_out)``
+possibly with leading stacked-layer axes — ``jnp.matmul`` batches over them).
+
+* ``fedit``      — FedIT/FedAvg of factors (inexact; Eq. 3–4).
+* ``fedex``      — factor averages + residual  ΔW_res = mean(aᵢ bᵢ) − ā b̄
+                   (Eq. 11–12). Folding scale·ΔW_res into W0 makes aggregation
+                   EXACT (Eq. 7–9).
+* ``fedex_svd``  — FedEx with Eckart–Young-optimal rank-r' truncation of the
+                   residual (Eq. 15–16) for server-controlled communication.
+* ``ffa``        — FFA-LoRA: a frozen at init, b averaged (exact by
+                   construction, fewer trainable params).
+* assignment strategies (§6, Table 5): ``average`` (FedEx), ``keep_local``,
+  ``reinit`` — all exact, different post-aggregation (aᵢ, bᵢ).
+
+The mesh-collective twin of ``fedex`` (psum-mean over a client axis inside a
+pjit'd program) lives in launch/train.py; THIS module is the mathematical
+ground truth both paths share.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# tree utilities
+# --------------------------------------------------------------------------
+
+def tree_mean(trees: List[Params]) -> Params:
+    k = len(trees)
+    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / k, *trees)
+
+
+def _is_factor(node: Any) -> bool:
+    return isinstance(node, dict) and set(node.keys()) >= {"a", "b"}
+
+
+def map_factors(fn, *trees: Params) -> Params:
+    """Apply ``fn(*factor_dicts) → value`` at every {a, b} node."""
+
+    def walk(*nodes):
+        if _is_factor(nodes[0]):
+            return fn(*nodes)
+        if isinstance(nodes[0], dict):
+            return {k: walk(*[n[k] for n in nodes]) for k in nodes[0]}
+        return nodes[0]
+
+    return walk(*trees)
+
+
+# --------------------------------------------------------------------------
+# aggregation operators
+# --------------------------------------------------------------------------
+
+def fedit_aggregate(client_loras: List[Params]) -> Params:
+    """FedAvg of A and B independently (Eq. 3). Inexact (Eq. 4)."""
+    return tree_mean(client_loras)
+
+
+def product_mean(client_loras: List[Params]) -> Params:
+    """Ideal update per factor: mean_i(aᵢ @ bᵢ)  (full-rank tree)."""
+    k = len(client_loras)
+
+    def fn(*factors):
+        return sum(jnp.matmul(f["a"].astype(jnp.float32), f["b"].astype(jnp.float32))
+                   for f in factors) / k
+
+    return map_factors(fn, *client_loras)
+
+
+def fedex_residual(client_loras: List[Params],
+                   global_lora: Optional[Params] = None) -> Params:
+    """ΔW_res = mean_i(aᵢ bᵢ) − ā b̄ per factor (Eq. 12), f32."""
+    if global_lora is None:
+        global_lora = fedit_aggregate(client_loras)
+    k = len(client_loras)
+
+    def fn(g, *factors):
+        mean_prod = sum(jnp.matmul(f["a"].astype(jnp.float32),
+                                   f["b"].astype(jnp.float32)) for f in factors) / k
+        prod_mean = jnp.matmul(g["a"].astype(jnp.float32), g["b"].astype(jnp.float32))
+        return mean_prod - prod_mean
+
+    return map_factors(fn, global_lora, *client_loras)
+
+
+def fedex_aggregate(client_loras: List[Params]
+                    ) -> Tuple[Params, Params]:
+    """Returns (global_lora, residual_tree). Eq. 11–12."""
+    global_lora = fedit_aggregate(client_loras)
+    residual = fedex_residual(client_loras, global_lora)
+    return global_lora, residual
+
+
+def fedex_svd_aggregate(client_loras: List[Params], svd_rank: int
+                        ) -> Tuple[Params, Params]:
+    """FedEx with rank-r' truncated residual (Eq. 15–16, Eckart–Young optimal)."""
+    global_lora, residual = fedex_aggregate(client_loras)
+
+    def trunc(r):
+        if r.ndim == 2:
+            u, s, vt = jnp.linalg.svd(r, full_matrices=False)
+            return (u[:, :svd_rank] * s[:svd_rank]) @ vt[:svd_rank]
+        # stacked leading axes: vmap over them
+        return jax.vmap(trunc)(r)
+
+    residual_trunc = jax.tree.map(trunc, residual)
+    return global_lora, residual_trunc
+
+
+def ffa_aggregate(client_loras: List[Params]) -> Params:
+    """FFA-LoRA: a is frozen (identical across clients) → average b only.
+    Averaging a too is a no-op but keeps the code uniform; aggregation is
+    exact because mean(a bᵢ) = a mean(bᵢ)."""
+    return tree_mean(client_loras)
+
+
+# --------------------------------------------------------------------------
+# assignment strategies (Table 5)
+# --------------------------------------------------------------------------
+
+def assign_after_aggregation(
+    strategy: str,
+    client_loras: List[Params],
+    rng: Optional[jax.Array] = None,
+) -> Tuple[List[Params], Params]:
+    """Returns (per-client new adapters, residual to fold into W0).
+
+    Every strategy is EXACT: residual is chosen so that for each client
+    ``W0 + scale·(residual + aᵢ_new bᵢ_new) = W0 + scale·mean(aᵢ bᵢ)``.
+    """
+    k = len(client_loras)
+    ideal = product_mean(client_loras)
+
+    if strategy == "average":  # FedEx-LoRA
+        global_lora, residual = fedex_aggregate(client_loras)
+        return [global_lora] * k, residual
+
+    if strategy == "keep_local":
+        # clients keep their own adapters; per-client offset folded server-side.
+        # A single SHARED residual keeps one global W0: we use the mean offset,
+        # i.e. residual = mean(aᵢbᵢ) − mean over clients of their own product —
+        # which is 0; instead the paper's variant gives each client
+        # W0 + mean(ab) − aᵢbᵢ. We return per-client adapters and the mean
+        # residual so the caller can apply per-client offsets where supported.
+        # residual returned is for client 0's view; federated.py handles
+        # per-client residuals for this strategy.
+        return list(client_loras), per_client_residuals(client_loras)[0]
+
+    if strategy == "reinit":
+        if rng is None:
+            rng = jax.random.key(0)
+
+        def reinit(factor):
+            a = jax.random.normal(
+                jax.random.fold_in(rng, hash(str(factor["a"].shape)) % (2**31)),
+                factor["a"].shape, jnp.float32) * 0.02
+            return {"a": a, "b": jnp.zeros_like(factor["b"])}
+
+        new = map_factors(reinit, client_loras[0])
+        # b = 0 → product 0 → the FULL ideal update goes into the residual.
+        return [new] * k, ideal
+
+    raise ValueError(f"unknown assignment strategy {strategy!r}")
+
+
+def per_client_residuals(client_loras: List[Params]) -> List[Params]:
+    """keep_local strategy: residual_i = mean(a b) − aᵢ bᵢ for every client."""
+    ideal = product_mean(client_loras)
+    out = []
+    for i in range(len(client_loras)):
+        def fn(factor, ideal_leaf):
+            own = jnp.matmul(factor["a"].astype(jnp.float32),
+                             factor["b"].astype(jnp.float32))
+            return ideal_leaf - own
+        # walk is keyed on the FACTOR tree (first arg); the ideal tree has
+        # plain array leaves at the factor positions.
+        out.append(map_factors(fn, client_loras[i], ideal))
+    return out
+
+
+# --------------------------------------------------------------------------
+# residual fold-in
+# --------------------------------------------------------------------------
+
+def apply_residual_fused(params: Params, client_loras: List[Params],
+                         scale: float, *, interpret: Optional[bool] = None
+                         ) -> Params:
+    """W0 ← W0 + scale·ΔW_res via the Pallas fedex_residual kernel.
+
+    The TPU path of Eq. 12+14: client factors stream through VMEM and the
+    dense m×n residual is never materialised in HBM (kernels/fedex_residual).
+    Semantically identical to ``apply_residual(params, fedex_residual(...))``
+    — asserted by tests/test_kernels.py and test_federated.py.
+    """
+    from repro.kernels import fedex_fold
+
+    def walk(p: Any, nodes: List[Any]) -> Any:
+        if _is_factor(nodes[0]):
+            a_stack = jnp.stack([n["a"] for n in nodes])  # (C, ..., m, r)
+            b_stack = jnp.stack([n["b"] for n in nodes])
+            if a_stack.ndim > 3:  # stacked layers: move client axis inside
+                perm = tuple(range(1, a_stack.ndim - 2)) + (0, a_stack.ndim - 2,
+                                                            a_stack.ndim - 1)
+                a_stack = a_stack.transpose(perm)
+                b_stack = b_stack.transpose(perm)
+            if isinstance(p, dict) and "kernel" in p:
+                new_k = fedex_fold(p["kernel"], a_stack, b_stack, scale,
+                                   interpret=interpret)
+                return dict(p, kernel=new_k.astype(p["kernel"].dtype))
+            return (fedex_fold(p, a_stack, b_stack, scale,
+                               interpret=interpret)).astype(p.dtype)
+        if isinstance(nodes[0], dict):
+            out = dict(p) if isinstance(p, dict) else p
+            for key in nodes[0]:
+                if isinstance(p, dict) and key in p:
+                    out[key] = walk(p[key], [n[key] for n in nodes])
+            return out
+        return p
+
+    return walk(params, list(client_loras))
+
+
+def apply_residual(params: Params, residual: Params, scale: float) -> Params:
+    """W0 ← W0 + scale·ΔW_res at every adapted kernel (Eq. 14).
+
+    ``residual`` mirrors the adapter-tree structure with dense ΔW leaves; the
+    Pallas twin (kernels/fedex_residual) computes the same quantity fused and
+    tiled on TPU — this is the jnp reference path.
+    """
+
+    def walk(p: Any, r: Any) -> Any:
+        if r is None:
+            return p
+        if isinstance(p, dict):
+            out = dict(p)
+            for key, rv in r.items():
+                if key not in p:
+                    continue
+                pv = p[key]
+                if isinstance(rv, jnp.ndarray):
+                    if isinstance(pv, dict) and "kernel" in pv:
+                        out[key] = dict(pv, kernel=(pv["kernel"].astype(jnp.float32)
+                                                    + scale * rv).astype(pv["kernel"].dtype))
+                    else:  # raw tensor target (MoE experts)
+                        out[key] = (pv.astype(jnp.float32) + scale * rv).astype(pv.dtype)
+                elif isinstance(rv, dict):
+                    out[key] = walk(pv, rv)
+            return out
+        return p
+
+    return walk(params, residual)
+
+

@@ -1,0 +1,92 @@
+"""Communication accounting (paper §6, Table 6).
+
+Counts parameters transmitted per aggregation round for each method, given the
+set of adapted matrices. Uplink (clients → server) is identical for all LoRA
+methods: k · Σ (m·r + r·n). Downlink differs:
+
+* FedIT:      Σ (m·r + r·n) broadcast to k clients
+* FFA-LoRA:   Σ (r·n) — only b (a frozen) [trainable side only]
+* FedEx-LoRA: FedIT downlink + factored residual (rank ≤ (k+1)r; see
+              core/decompose.py) — the "marginal overhead" of Table 6
+* FedEx-SVD:  FedIT downlink + truncated rank-r' residual factors
+* full FT:    Σ m·n both directions
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.decompose import factored_residual_params, truncated_residual_params
+
+
+@dataclass(frozen=True)
+class MatrixSpec:
+    name: str
+    m: int
+    n: int
+
+
+def adapted_matrices(cfg, lora_cfg) -> List[MatrixSpec]:
+    """The matrices that carry adapters for a decoder-style config (per layer),
+    expanded over layers. Attention q/k/v/o by default, MLP if configured."""
+    hd = cfg.resolved_head_dim
+    per_layer = [
+        MatrixSpec("q_proj", cfg.d_model, cfg.num_heads * hd),
+        MatrixSpec("k_proj", cfg.d_model, cfg.num_kv_heads * hd),
+        MatrixSpec("v_proj", cfg.d_model, cfg.num_kv_heads * hd),
+        MatrixSpec("o_proj", cfg.num_heads * hd, cfg.d_model),
+    ]
+    if lora_cfg.include_mlp and cfg.d_ff:
+        per_layer += [
+            MatrixSpec("up_proj", cfg.d_model, cfg.d_ff),
+            MatrixSpec("gate_proj", cfg.d_model, cfg.d_ff),
+            MatrixSpec("down_proj", cfg.d_ff, cfg.d_model),
+        ]
+    out = []
+    for layer in range(cfg.num_layers):
+        for ms in per_layer:
+            out.append(MatrixSpec(f"layer{layer}/{ms.name}", ms.m, ms.n))
+    return out
+
+
+def round_comm_params(method: str, mats: List[MatrixSpec], r: int, k: int,
+                      svd_rank: int = 0) -> Dict[str, int]:
+    """Parameters communicated in ONE aggregation round."""
+    adapters = sum(ms.m * r + r * ms.n for ms in mats)
+    full = sum(ms.m * ms.n for ms in mats)
+
+    if method == "full_ft":
+        up = k * full
+        down = k * full
+    elif method == "fedit":
+        up = k * adapters
+        down = k * adapters
+    elif method == "ffa":
+        b_only = sum(r * ms.n for ms in mats)
+        up = k * b_only
+        down = k * b_only
+    elif method == "fedex":
+        up = k * adapters
+        residual = sum(factored_residual_params(ms.m, ms.n, r, k) for ms in mats)
+        down = k * (adapters + residual)
+    elif method == "fedex_svd":
+        up = k * adapters
+        residual = sum(truncated_residual_params(ms.m, ms.n, svd_rank or r)
+                       for ms in mats)
+        down = k * (adapters + residual)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return {"uplink": up, "downlink": down, "total": up + down}
+
+
+def comm_table(cfg, lora_cfg, k: int, rounds: int, svd_rank: int = 0
+               ) -> Dict[str, Dict[str, float]]:
+    """Table-6 style: per-method totals over ``rounds`` + ratio to FedEx."""
+    mats = adapted_matrices(cfg, lora_cfg)
+    methods = ["full_ft", "fedex", "fedit", "ffa", "fedex_svd"]
+    totals = {m: rounds * round_comm_params(m, mats, lora_cfg.rank, k, svd_rank)["total"]
+              for m in methods}
+    base = totals["fedex"]
+    return {m: {"params": totals[m], "ratio_to_fedex": totals[m] / base}
+            for m in methods}

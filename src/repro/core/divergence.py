@@ -1,0 +1,62 @@
+"""Deviation analysis (paper §6, Figures 2–9): scaled Frobenius norm of the
+divergence between FedAvg-of-factors (FedIT) updates and ideal LoRA updates.
+
+deviation(path) = ‖ mean_i(aᵢbᵢ) − ā b̄ ‖_F / sqrt(m·n)   (scaled by size)
+relative(path) = ‖ mean_i(aᵢbᵢ) − ā b̄ ‖_F / ‖ mean_i(aᵢbᵢ) ‖_F
+
+FedEx-LoRA's post-aggregation deviation is identically ZERO — asserted by the
+property tests; FedIT's is positive, grows with local epochs, shrinks with
+depth and over rounds (reproduced in benchmarks/divergence.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import fedit_aggregate, map_factors
+
+Params = Dict[str, Any]
+
+
+def deviation_tree(client_loras: List[Params]) -> Params:
+    """Per-factor dict of {"scaled": float, "relative": float, "fro": float}."""
+    k = len(client_loras)
+    global_lora = fedit_aggregate(client_loras)
+
+    def fn(g, *factors):
+        mean_prod = sum(jnp.matmul(f["a"].astype(jnp.float32),
+                                   f["b"].astype(jnp.float32)) for f in factors) / k
+        prod_mean = jnp.matmul(g["a"].astype(jnp.float32), g["b"].astype(jnp.float32))
+        dev = mean_prod - prod_mean
+        fro = jnp.sqrt(jnp.sum(jnp.square(dev), axis=(-2, -1)))
+        size = dev.shape[-2] * dev.shape[-1]
+        ideal_fro = jnp.sqrt(jnp.sum(jnp.square(mean_prod), axis=(-2, -1)))
+        return {
+            "fro": fro,
+            "scaled": fro / np.sqrt(size),
+            "relative": fro / jnp.maximum(ideal_fro, 1e-12),
+        }
+
+    return map_factors(fn, global_lora, *client_loras)
+
+
+def flatten_deviations(dev_tree: Params, metric: str = "scaled") -> Dict[str, np.ndarray]:
+    """path → value (stacked-layer leaves stay as arrays over the layer axis)."""
+    from repro.util.tree import flatten_with_paths
+
+    flat = flatten_with_paths(dev_tree)
+    out = {}
+    for path, val in flat.items():
+        if path.endswith("/" + metric):
+            out[path[: -len("/" + metric)]] = np.asarray(val)
+    return out
+
+
+def mean_deviation(client_loras: List[Params], metric: str = "scaled") -> float:
+    dev = flatten_deviations(deviation_tree(client_loras), metric)
+    vals = np.concatenate([np.atleast_1d(v).ravel() for v in dev.values()])
+    return float(vals.mean())

@@ -1,0 +1,105 @@
+"""Heterogeneous-rank exact aggregation — beyond the paper.
+
+Paper §6: "To extend our method to rank-heterogeneous settings, the
+assignments for Aᵢ and Bᵢ must also accommodate rank heterogeneity. Further
+investigation is required…". This module supplies one such scheme with the
+SAME exactness guarantee as FedEx-LoRA:
+
+1. Ideal update Δ̄ = mean_i(aᵢ bᵢ) is formed ONLY in factored form
+   (rank ≤ Σᵢ rᵢ; `core/decompose.py` machinery — never densified server-side
+   until fold-in).
+2. Client i (capacity rank rᵢ) receives the Eckart–Young-optimal rank-rᵢ
+   truncation (aᵢ', bᵢ') of Δ̄ — the best adapters its budget can hold.
+3. Its residual ΔWᵢ = Δ̄ − aᵢ'bᵢ' folds into ITS copy of W0 (per-client
+   fold-in, as in the paper's keep_local strategy), so every client's
+   effective weights equal the ideal FedAvg of products EXACTLY:
+
+       W0 + ΔWᵢ + aᵢ'bᵢ' = W0 + Δ̄        ∀i.
+
+Singular-factor split: aᵢ' = U√S, bᵢ' = √S Vᵀ keeps both factors balanced
+(the LoRA-friendly parameterisation).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import map_factors, _is_factor
+from repro.core.decompose import truncated_svd_product
+
+Params = Dict[str, Any]
+
+
+def _mean_product_factors(factors: List[Params]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Factored mean of products: Δ̄ = L @ R with L=(m, Σrᵢ), R=(Σrᵢ, n)."""
+    k = len(factors)
+    lefts = [f["a"].astype(jnp.float32) / k for f in factors]
+    rights = [f["b"].astype(jnp.float32) for f in factors]
+    return jnp.concatenate(lefts, axis=-1), jnp.concatenate(rights, axis=-2)
+
+
+def hetero_fedex_aggregate(
+    client_loras: List[Params],
+    client_ranks: Sequence[int],
+) -> Tuple[List[Params], List[Params]]:
+    """Returns (per-client new adapters, per-client residuals).
+
+    ``client_loras[i]`` may have rank rᵢ ≠ rⱼ. Stacked-layer leaves are
+    handled by vmapping the per-matrix computation over leading axes.
+    """
+    k = len(client_loras)
+    assert len(client_ranks) == k
+
+    def per_matrix(*factors):
+        def one(fs):
+            L, R = _mean_product_factors(list(fs))
+
+            outs = []
+            for r_i in client_ranks:
+                u, s, vt = truncated_svd_product(L, R, r_i)
+                sq = jnp.sqrt(jnp.maximum(s, 0.0))
+                a_new = u * sq  # (m, rᵢ)
+                b_new = sq[:, None] * vt  # (rᵢ, n)
+                resid = L @ R - a_new @ b_new
+                outs.append((a_new, b_new, resid))
+            return outs
+
+        lead_ndim = factors[0]["a"].ndim - 2
+        if lead_ndim == 0:
+            return one(factors)
+        # vmap over stacked-layer axes, one level at a time
+        def vone(*fs_flat):
+            fs = [{"a": fs_flat[2 * i], "b": fs_flat[2 * i + 1]} for i in range(k)]
+            outs = one(fs)
+            return tuple(x for o in outs for x in o)
+
+        fn = vone
+        for _ in range(lead_ndim):
+            fn = jax.vmap(fn)
+        flat = [x for f in factors for x in (f["a"], f["b"])]
+        res_flat = fn(*flat)
+        return [(res_flat[3 * i], res_flat[3 * i + 1], res_flat[3 * i + 2])
+                for i in range(k)]
+
+    # walk the factor tree once, collecting per-client trees
+    new_loras: List[Params] = [dict() for _ in range(k)]
+    residuals: List[Params] = [dict() for _ in range(k)]
+
+    def walk(nodes, out_l, out_r):
+        for key in nodes[0]:
+            children = [n[key] for n in nodes]
+            if _is_factor(children[0]):
+                outs = per_matrix(*children)
+                for i, (a_new, b_new, resid) in enumerate(outs):
+                    out_l[i][key] = {"a": a_new, "b": b_new}
+                    out_r[i][key] = resid
+            elif isinstance(children[0], dict):
+                subs_l = [o.setdefault(key, {}) for o in out_l]
+                subs_r = [o.setdefault(key, {}) for o in out_r]
+                walk(children, subs_l, subs_r)
+
+    walk(client_loras, new_loras, residuals)
+    return new_loras, residuals

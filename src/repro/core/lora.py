@@ -1,0 +1,136 @@
+"""LoRA adapter state: init / target selection / merge.
+
+Layout: factors are ``a: (..., d_in, r)``, ``b: (..., r, d_out)`` with the
+adapter update ``ΔW = a @ b`` in our ``x @ W`` convention (paper mapping:
+``a = Aᵀ``, ``b = Bᵀ``; see models/common.py). Standard LoRA init (paper
+Eq. 10): ``a`` ~ Gaussian, ``b`` = 0, so the adapter starts as a no-op.
+
+The adapter tree MIRRORS the parameter tree at target projections — including
+the stacked layer axes introduced by scan-over-layers — so it threads through
+``lax.scan`` as xs alongside the params. Targets are matched by module name
+anywhere in the tree (e.g. ``q_proj``), which makes the same machinery work
+for attention, MLA latents, MLPs, Mamba in/out projections and xLSTM gates.
+Per-expert adapters on MoE expert tensors are behind ``lora_cfg.lora_experts``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LoRAConfig, ModelConfig
+
+Params = Dict[str, Any]
+
+# module names adapted per family when the user doesn't override targets
+FAMILY_TARGETS = {
+    "dense": ("q_proj", "k_proj", "v_proj", "o_proj"),
+    "vlm": ("q_proj", "k_proj", "v_proj", "o_proj"),
+    "encdec": ("q_proj", "k_proj", "v_proj", "o_proj"),
+    "moe": ("q_proj", "k_proj", "v_proj", "o_proj",
+            "q_down", "q_up", "kv_down", "k_up", "v_up"),
+    "hybrid": ("q_proj", "k_proj", "v_proj", "o_proj", "in_proj", "out_proj"),
+    "ssm": ("q_proj", "k_proj", "v_proj", "up_proj", "down_proj", "w_gates"),
+}
+MLP_TARGETS = ("up_proj", "gate_proj", "down_proj")
+
+
+def resolve_targets(cfg: ModelConfig, lora_cfg: LoRAConfig) -> Tuple[str, ...]:
+    targets = tuple(lora_cfg.target_modules)
+    if targets == LoRAConfig().target_modules:  # default → family-specific
+        targets = FAMILY_TARGETS[cfg.family]
+    if lora_cfg.include_mlp:
+        targets = tuple(dict.fromkeys(targets + MLP_TARGETS))
+    return targets
+
+
+def init_lora(rng, params: Params, cfg: ModelConfig, lora_cfg: LoRAConfig) -> Params:
+    """Build the adapter tree mirroring ``params`` at target projections."""
+    targets = set(resolve_targets(cfg, lora_cfg))
+    r = lora_cfg.rank
+    counter = [0]
+
+    def fresh_rng():
+        counter[0] += 1
+        return jax.random.fold_in(rng, counter[0])
+
+    def make_factor(kernel: jnp.ndarray) -> Params:
+        *lead, d_in, d_out = kernel.shape
+        a = jax.random.normal(fresh_rng(), (*lead, d_in, r), jnp.float32) * 0.02
+        b = jnp.zeros((*lead, r, d_out), jnp.float32)
+        return {"a": a, "b": b}
+
+    def walk(node: Any) -> Optional[Params]:
+        if not isinstance(node, dict):
+            return None
+        out = {}
+        for key, child in node.items():
+            if key in targets and isinstance(child, dict) and "kernel" in child:
+                if child["kernel"].ndim >= 2:
+                    out[key] = make_factor(child["kernel"])
+            elif key == "experts" and lora_cfg.lora_experts and isinstance(child, dict):
+                sub = {}
+                for ek, ev in child.items():
+                    if hasattr(ev, "ndim") and ev.ndim >= 3:
+                        sub[ek] = make_factor(ev)
+                if sub:
+                    out["experts"] = sub
+            elif isinstance(child, dict):
+                sub = walk(child)
+                if sub:
+                    out[key] = sub
+        return out or None
+
+    tree = walk(params)
+    return tree or {}
+
+
+def merge_lora(params: Params, lora: Params, scale: float) -> Params:
+    """Fold adapters into kernels: W ← W + scale·(a @ b). For eval/export."""
+
+    def walk(p: Any, l: Any) -> Any:
+        if l is None:
+            return p
+        if isinstance(p, dict):
+            out = dict(p)
+            for key, lv in l.items():
+                if key not in p:
+                    continue
+                pv = p[key]
+                if isinstance(lv, dict) and "a" in lv and "b" in lv:
+                    if isinstance(pv, dict) and "kernel" in pv:
+                        delta = scale * jnp.matmul(lv["a"], lv["b"])
+                        out[key] = dict(pv, kernel=(pv["kernel"].astype(jnp.float32)
+                                                    + delta).astype(pv["kernel"].dtype))
+                    else:  # raw expert tensor
+                        delta = scale * jnp.matmul(lv["a"], lv["b"])
+                        out[key] = (pv.astype(jnp.float32) + delta).astype(pv.dtype)
+                elif isinstance(lv, dict):
+                    out[key] = walk(pv, lv)
+            return out
+        return p
+
+    return walk(params, lora)
+
+
+def lora_param_count(lora: Params) -> int:
+    import numpy as np
+
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(lora))
+
+
+def zero_like_b(lora: Params) -> Params:
+    """Adapter tree with b zeroed (used by the 'reinit' assignment strategy)."""
+    def fn(path_leaf):
+        return path_leaf
+
+    def walk(node):
+        if isinstance(node, dict) and "a" in node and "b" in node:
+            return {"a": node["a"], "b": jnp.zeros_like(node["b"])}
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(lora)

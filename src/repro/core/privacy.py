@@ -1,0 +1,62 @@
+"""Differentially-private client uploads — the paper's stated future work.
+
+Paper §7: "Testing in privacy-preserving scenarios is a natural extension of
+our work. FFA-LoRA demonstrated that noise in differential privacy leads to
+greater deviations from ideal updates. Given that our method achieves exact
+aggregation… we anticipate similar success in privacy-sensitive applications."
+
+We implement the upload-level mechanism used in that line of work: each
+client's adapter DELTA (lora_i − lora_global) is L2-clipped to ``clip`` and
+Gaussian noise N(0, σ²·clip²) is added before transmission (central-DP with
+per-client sensitivity bounding; σ maps to (ε, δ) via the Gaussian mechanism
+for a given number of rounds — accounting is the caller's policy choice).
+
+The key structural point the paper predicts — and our property test verifies
+(tests/test_privacy.py) — is that FedEx aggregation stays EXACT with respect
+to the noised adapters: the server's residual absorbs whatever the clients
+sent, noise included, so DP costs accuracy only through the noise itself, not
+through an additional aggregation mismatch (FedIT pays both).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def l2_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_delta(delta: Params, clip: float) -> Tuple[Params, jnp.ndarray]:
+    norm = l2_norm(delta)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        delta), norm
+
+
+def gaussian_noise_like(rng, tree: Params, std: float) -> Params:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    noised = [std * jax.random.normal(k, x.shape, jnp.float32)
+              for k, x in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def privatize_upload(rng, lora_local: Params, lora_global: Params, *,
+                     clip: float, noise_multiplier: float) -> Params:
+    """Clip + noise the adapter delta; returns the privatized local adapters.
+
+    noise std = noise_multiplier · clip (per coordinate, Gaussian mechanism).
+    """
+    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                         lora_local, lora_global)
+    delta, _ = clip_delta(delta, clip)
+    noise = gaussian_noise_like(rng, delta, noise_multiplier * clip)
+    return jax.tree.map(lambda g, d, n: (g.astype(jnp.float32) + d + n).astype(g.dtype),
+                        lora_global, delta, noise)

@@ -1,0 +1,11 @@
+from repro.data.synthetic import SyntheticLM, make_batch_for
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.loader import ClientLoader
+
+__all__ = [
+    "SyntheticLM",
+    "make_batch_for",
+    "dirichlet_partition",
+    "iid_partition",
+    "ClientLoader",
+]

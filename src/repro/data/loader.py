@@ -1,0 +1,45 @@
+"""Per-client batching over a materialised corpus (host-side, numpy)."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class ClientLoader:
+    """Infinite shuffled batch iterator over one client's sequences.
+
+    sequences: (N, seq_len + 1) int32 — inputs are [:, :-1], targets [:, 1:].
+    """
+
+    def __init__(self, sequences: np.ndarray, batch_size: int, seed: int = 0):
+        if len(sequences) == 0:
+            raise ValueError("empty client shard")
+        self.sequences = sequences
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(sequences))
+        self._cursor = 0
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        n = len(self.sequences)
+        idx = []
+        while len(idx) < self.batch_size:
+            if self._cursor >= n:
+                self._order = self.rng.permutation(n)
+                self._cursor = 0
+            take = min(self.batch_size - len(idx), n - self._cursor)
+            idx.extend(self._order[self._cursor : self._cursor + take].tolist())
+            self._cursor += take
+        seqs = self.sequences[np.asarray(idx)]
+        return {
+            "tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+            "targets": jnp.asarray(seqs[:, 1:], jnp.int32),
+            "loss_mask": jnp.ones(seqs[:, 1:].shape, jnp.float32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute of FedEx-LoRA training:
+
+* lora_matmul     — fused base+adapter projection (every LoRA'd matmul)
+* fedex_residual  — the paper's aggregation residual, fused into the W0 update
+* flash_swa       — sliding-window flash attention (mixtral/gemma3 long ctx)
+
+Each ships a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+Validated with interpret=True on CPU; the BlockSpec tiling targets TPU v5e
+VMEM/MXU geometry (128-aligned tiles).
+"""
+
+from repro.kernels.ops import fedex_fold, lora_dense, swa_attention
+
+__all__ = ["fedex_fold", "lora_dense", "swa_attention"]

@@ -1,0 +1,61 @@
+"""FedEx-LoRA residual fold-in Pallas kernel (the paper's Eq. 12+14, fused).
+
+Computes  W0 + scale·( mean_c(a_c @ b_c) − ā @ b̄ )  tile-by-tile: for each
+MXU-aligned (bm, bn) output tile, the stacked client factors stream through
+VMEM once and the dense m×n residual is NEVER materialised in HBM (the naive
+host path builds the full ΔW_res then adds — an extra 2·m·n f32 HBM round
+trip per adapted matrix per round; at deepseek-v2 scale that is ~5 GB of
+avoidable traffic per aggregation).
+
+The client mean over C is unrolled inside the kernel (C = cross-silo client
+count, 3–16 — small); ā/b̄ tiles are recomputed per tile from the same VMEM
+slabs, trading negligible FLOPs for zero extra memory traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w0_ref, a_ref, b_ref, o_ref, *, scale: float, num_clients: int):
+    a = a_ref[...].astype(jnp.float32)  # (C, bm, r)
+    b = b_ref[...].astype(jnp.float32)  # (C, r, bn)
+    inv_c = 1.0 / num_clients
+    mean_prod = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    for c in range(num_clients):  # static unroll: C is small (cross-silo)
+        mean_prod += jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
+    mean_prod *= inv_c
+    abar = a.sum(0) * inv_c
+    bbar = b.sum(0) * inv_c
+    residual = mean_prod - jnp.dot(abar, bbar, preferred_element_type=jnp.float32)
+    o_ref[...] = w0_ref[...].astype(jnp.float32) + scale * residual
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def fedex_residual_apply(w0: jnp.ndarray, a_stack: jnp.ndarray,
+                         b_stack: jnp.ndarray, *, scale: float = 1.0,
+                         bm: int = 256, bn: int = 256,
+                         interpret: bool = False) -> jnp.ndarray:
+    """w0: (m, n), a_stack: (C, m, r), b_stack: (C, r, n) → (m, n) f32."""
+    m, n = w0.shape
+    c, _, r = a_stack.shape
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not divisible by ({bm},{bn})"
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, num_clients=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(w0, a_stack, b_stack)

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container, kernels execute with ``interpret=True`` (Pallas
+reference interpreter); on TPU the same calls compile to Mosaic. The wrappers
+pad to tile multiples, handle batching/GQA reshapes, and fall back to the
+ref.py oracles when a shape can't be tiled sensibly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fedex_residual import fedex_residual_apply
+from repro.kernels.flash_swa import flash_swa
+from repro.kernels.lora_matmul import lora_matmul
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+DEFAULT_INTERPRET = not _ON_TPU
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def lora_dense(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+               scale: float, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused LoRA projection for arbitrary leading dims of x. Returns x-dtype."""
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    bm = 128 if m % 128 == 0 else (m if m <= 512 else 0)
+    bn = 128 if n % 128 == 0 else (n if n <= 512 else 0)
+    bk = 128 if kdim % 128 == 0 else (kdim if kdim <= 512 else 0)
+    if 0 in (bm, bn, bk):
+        y = ref.lora_matmul_ref(x2, w, a, b, scale)
+    else:
+        y = lora_matmul(x2, w, a, b, scale=scale, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+def fedex_fold(w0: jnp.ndarray, a_stack: jnp.ndarray, b_stack: jnp.ndarray,
+               scale: float, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """W0 + scale·ΔW_res, fused & tiled. Handles stacked-layer leading axes."""
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if w0.ndim > 2:  # stacked layers: vmap over the leading axes
+        return jax.vmap(lambda w, a, b: fedex_fold(w, a, b, scale,
+                                                   interpret=interpret)
+                        )(w0, a_stack, b_stack)
+    m, n = w0.shape
+    bm = 256 if m % 256 == 0 else (128 if m % 128 == 0 else (m if m <= 1024 else 0))
+    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else (n if n <= 1024 else 0))
+    if 0 in (bm, bn):
+        return ref.fedex_residual_ref(w0, a_stack, b_stack, scale).astype(w0.dtype)
+    out = fedex_residual_apply(w0, a_stack, b_stack, scale=scale, bm=bm, bn=bn,
+                               interpret=interpret)
+    return out.astype(w0.dtype)
+
+
+def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(B, S, H, D) GQA-aware wrapper over the flash_swa kernel."""
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:  # GQA: repeat kv heads (kernel sees BH streams)
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    sk = kf.shape[1]
+    bq = 256 if sq % 256 == 0 else (128 if sq % 128 == 0 else (sq if sq <= 512 else 0))
+    bk = 256 if sk % 256 == 0 else (128 if sk % 128 == 0 else (sk if sk <= 512 else 0))
+    if 0 in (bq, bk):
+        out = ref.flash_swa_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        out = flash_swa(qf, kf, vf, causal=causal, window=window, bq=bq, bk=bk,
+                        interpret=interpret)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """y = x @ w + scale * (x @ a) @ b, accumulated in f32."""
+    base = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    adapter = jnp.dot(jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32)),
+                      b.astype(jnp.float32))
+    return base + scale * adapter
+
+
+def fedex_residual_ref(w0: jnp.ndarray, a_stack: jnp.ndarray,
+                       b_stack: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """W0 + scale·(mean_c(a_c @ b_c) − ā @ b̄).
+
+    a_stack: (C, m, r), b_stack: (C, r, n), w0: (m, n).
+    """
+    af = a_stack.astype(jnp.float32)
+    bf = b_stack.astype(jnp.float32)
+    mean_prod = jnp.einsum("cmr,crn->mn", af, bf) / af.shape[0]
+    abar = af.mean(0)
+    bbar = bf.mean(0)
+    return w0.astype(jnp.float32) + scale * (mean_prod - abar @ bbar)
+
+
+def flash_swa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Materialised attention oracle. q,k,v: (BH, S, D)."""
+    _, sq, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

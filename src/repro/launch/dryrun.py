@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on the
+production mesh(es) with ShapeDtypeStruct inputs — no allocation — and extract
+memory / cost / collective statistics for EXPERIMENTS.md §Dry-run / §Roofline.
+
+The two lines above MUST precede any other import: jax locks the device count
+on first initialisation. 512 placeholder host devices back both the 16×16
+single-pod mesh (256) and the 2×16×16 multi-pod mesh (512).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, LoRAConfig, TrainConfig, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_per_step
+from repro.launch.steps import (
+    abstract_cache,
+    abstract_state,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import build_model
+from repro.sharding import (batch_spec, cache_spec, data_axes, param_spec,
+                            param_spec_serving, tree_shardings)
+from repro.sharding import act
+from repro.util.logging import get_logger
+
+logger = get_logger("dryrun")
+
+SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+# microbatch split for the train_4k global batch of 256 (activation memory)
+TRAIN_MICROBATCHES = 8
+
+
+def should_skip(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 500k decode skipped per assignment "
+                "(see DESIGN.md §4)")
+    return None
+
+
+def _sharding_tree(tree, mesh, fn, *args):
+    return tree_shardings(tree, mesh, fn, *args)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, moe_impl: str = "ragged",
+            extra_tags: Optional[Dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                           "moe_impl": moe_impl}
+    if extra_tags:
+        rec.update(extra_tags)
+
+    skip = should_skip(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dp = data_axes(mesh)
+        model = build_model(cfg, moe_impl=moe_impl)
+        lora_cfg = LoRAConfig(rank=16, alpha=32)
+        params, lora, opt_state = abstract_state(model, cfg, lora_cfg)
+
+        # decode shapes use the weight-stationary serving layout (§Perf it. 7)
+        pspec_fn = param_spec_serving if shape.is_decode else param_spec
+        p_sh = _sharding_tree(params, mesh, pspec_fn)
+        l_sh = _sharding_tree(lora, mesh, pspec_fn)
+        o_sh = jax.tree.map(
+            lambda s: s, jax.eval_shape(lambda l: l, lora))  # placeholder
+        from repro.optim import init_adamw
+        o_sh = {
+            "step": NamedSharding(mesh, P()),
+            "mu": _sharding_tree(opt_state.mu, mesh, param_spec),
+            "nu": _sharding_tree(opt_state.nu, mesh, param_spec),
+        }
+        from repro.optim.adamw import AdamWState
+        o_sh = AdamWState(step=o_sh["step"], mu=o_sh["mu"], nu=o_sh["nu"])
+
+        batch = input_specs(cfg, shape)
+        b_sh = _sharding_tree(batch, mesh, batch_spec, dp)
+        scalar_sh = NamedSharding(mesh, P())
+
+        act.configure(dp, "model", mesh.shape["model"])
+        with mesh:
+            if shape.kind == "train":
+                step_fn = make_train_step(model, lora_cfg,
+                                          TrainConfig(total_steps=1000),
+                                          num_microbatches=TRAIN_MICROBATCHES)
+                step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(p_sh, l_sh, o_sh, b_sh, scalar_sh))
+                lowered = jitted.lower(params, lora, opt_state, batch, step_spec)
+            elif shape.kind == "prefill":
+                cache = abstract_cache(model, shape.global_batch, shape.seq_len)
+                c_sh = _sharding_tree(cache, mesh, cache_spec, dp)
+                step_fn = make_prefill_step(model, lora_cfg)
+                jitted = jax.jit(step_fn, in_shardings=(p_sh, l_sh, b_sh, c_sh))
+                lowered = jitted.lower(params, lora, batch, cache)
+            else:  # decode
+                cache = abstract_cache(model, shape.global_batch, shape.seq_len)
+                c_sh = _sharding_tree(cache, mesh, cache_spec, dp)
+                step_fn = make_decode_step(model, lora_cfg)
+                tok_spec = batch["tokens"]
+                tok_sh = _sharding_tree({"tokens": tok_spec}, mesh, batch_spec, dp)["tokens"]
+                pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(p_sh, l_sh, tok_sh, c_sh, scalar_sh))
+                lowered = jitted.lower(params, lora, tok_spec, cache, pos_spec)
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        act.reset()
+
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+
+        # ---- memory -------------------------------------------------------
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+                "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)[:200]}
+
+        # ---- cost + collectives (loop-aware HLO accounting) -----------------
+        try:
+            xla_cost = compiled.cost_analysis()
+            if isinstance(xla_cost, (list, tuple)):
+                xla_cost = xla_cost[0]
+            rec["xla_cost_flops"] = float((xla_cost or {}).get("flops", 0.0))
+        except Exception as e:
+            rec["cost_error"] = str(e)[:200]
+        costs = hlo_analyze(compiled.as_text())
+        compute_s = costs.flops / PEAK_FLOPS
+        memory_s = costs.bytes_accessed / HBM_BW
+        collective_s = costs.total_collective_bytes / ICI_BW
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", collective_s)), key=lambda kv: kv[1])[0]
+        mflops = model_flops_per_step(cfg, shape)
+        n_dev = mesh.size
+        rec["roofline"] = {
+            "flops": costs.flops,
+            "hbm_bytes": costs.bytes_accessed,
+            "collective_bytes": costs.total_collective_bytes,
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "collectives": costs.collective_bytes,
+            "collective_counts": costs.collective_counts,
+            "model_flops_global": mflops,
+            "model_flops_per_device": mflops / n_dev,
+            "useful_flops_ratio": (mflops / n_dev) / costs.flops if costs.flops else None,
+        }
+        logger.info(
+            "%s × %s × %s: OK compile=%.1fs flops/dev=%.3e coll=%.3e B dominant=%s useful=%.2f",
+            arch, shape_name, mesh_tag, t_compile, costs.flops,
+            costs.total_collective_bytes, dominant,
+            (mflops / n_dev) / costs.flops if costs.flops else -1)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        logger.error("%s × %s × %s: FAILED %s", arch, shape_name, mesh_tag,
+                     rec["error"][:200])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all' (assigned pool)")
+    ap.add_argument("--shape", default="all", choices=("all",) + SHAPE_NAMES)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--moe-impl", default="dense", choices=("ragged", "dense"),
+                    help="dense partitions cleanly under GSPMD (§Perf it.5); "
+                         "ragged is FLOP-proportional for single-host runs")
+    ap.add_argument("--out", default="", help="append JSON-lines records here")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_NAMES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, multi_pod=mp, moe_impl=args.moe_impl)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run summary: {ok} ok, {sk} skipped, {err} failed / {len(records)} total")
+    if err:
+        for r in records:
+            if r["status"] == "error":
+                print(f"  FAIL {r['arch']} × {r['shape']} × {r['mesh']}: {r['error'][:160]}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Roofline constants + MODEL_FLOPS yardsticks (assignment §Roofline).
+
+Three terms per (arch × shape × mesh), seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+FLOPs / bytes / collective bytes come from the LOOP-AWARE analyzer in
+launch/hlo_analysis.py (XLA's cost_analysis counts scan bodies once).
+This module keeps the hardware constants and the analytic MODEL_FLOPS
+yardstick (6·N_active·D train / 2·N_active·D inference) used for the
+"useful FLOPs" ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def model_flops_per_step(cfg, shape, lora_rank: int = 0) -> float:
+    """MODEL_FLOPS = 6·N_active·D for training, 2·N_active·D for inference —
+    the 'useful FLOPs' yardstick for the HLO_FLOPs ratio."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameter count touched per token (MoE: top-k experts only)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    v = cfg.vocab_size
+    emb = v * d
+
+    if cfg.family == "ssm":  # xlstm
+        d_inner = cfg.ssm_expand * d
+        per_mlstm = 2 * d * d_inner + 3 * d_inner * d_inner + d_inner * d + 2 * d_inner * cfg.num_heads
+        per_slstm = 4 * d * d + int(d * 4 / 3) * d * 3
+        period = cfg.slstm_every
+        nper = cfg.num_layers // period
+        return emb + nper * ((period - 1) * per_mlstm + per_slstm)
+
+    def attn_params():
+        if cfg.mla:
+            qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            return (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk
+                    + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                    + cfg.kv_lora_rank * cfg.num_heads
+                    * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                    + cfg.num_heads * cfg.v_head_dim * d)
+        return (d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd
+                + cfg.num_heads * hd * d)
+
+    def mlp_params(ff):
+        gated = cfg.act == "silu"
+        return (3 if gated else 2) * d * ff
+
+    if cfg.family == "moe":
+        ff = cfg.moe_d_ff or cfg.d_ff
+        active_ff = ff * (cfg.num_experts_per_tok + cfg.num_shared_experts)
+        n_moe = cfg.num_layers - cfg.first_k_dense
+        total = emb + n_moe * (attn_params() + mlp_params(active_ff) + d * cfg.num_experts)
+        total += cfg.first_k_dense * (attn_params() + mlp_params(cfg.dense_d_ff or cfg.d_ff))
+        return total
+
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        per_mamba = d * (2 * d_inner + 2 * n + d_inner // cfg.ssm_head_dim) + d_inner * d
+        napp = cfg.num_layers // cfg.attn_every
+        return emb + cfg.num_layers * per_mamba + napp * (attn_params() + mlp_params(cfg.d_ff))
+
+    if cfg.family == "encdec":
+        per_enc = attn_params() + mlp_params(cfg.d_ff)
+        per_dec = 2 * attn_params() + mlp_params(cfg.d_ff)
+        return emb + cfg.enc_layers * per_enc + cfg.num_layers * per_dec
+
+    # dense / vlm
+    return emb + cfg.num_layers * (attn_params() + mlp_params(cfg.d_ff))

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill + greedy decode with the KV/state caches.
+
+Serves a (optionally LoRA-adapted, FedEx-aggregated) model: the federated
+artifact of train.py can be merged (core.merge_lora) or applied as adapters at
+request time. CPU-runnable demo:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b-smoke --steps 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LoRAConfig, get_config
+from repro.core import init_lora
+from repro.data import make_batch_for
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+from repro.util.logging import get_logger
+
+logger = get_logger("serve")
+
+
+def serve(arch: str, *, batch_size: int = 2, prompt_len: int = 32,
+          steps: int = 8, max_len: int = 128, rank: int = 4,
+          use_lora: bool = True, seed: int = 0):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    lora_cfg = LoRAConfig(rank=rank)
+    lora = init_lora(jax.random.key(seed + 1), params, cfg, lora_cfg) if use_lora else None
+
+    batch = make_batch_for(cfg, batch_size, prompt_len, seed=seed)
+    cache = model.init_cache(batch_size, max_len)
+
+    prefill = jax.jit(make_prefill_step(model, lora_cfg))
+    decode = jax.jit(make_decode_step(model, lora_cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, lora, batch, cache)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    pos0 = prompt_len + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    generated = [next_tok]
+    t0 = time.time()
+    for i in range(steps):
+        next_tok, logits, cache = decode(params, lora, next_tok, cache,
+                                         jnp.asarray(pos0 + i, jnp.int32))
+        generated.append(next_tok)
+    tokens = jnp.concatenate(generated, axis=1)
+    t_decode = time.time() - t0
+    logger.info("arch=%s prefill=%.3fs decode=%.3fs (%.1f ms/token)",
+                arch, t_prefill, t_decode, 1000 * t_decode / max(steps, 1))
+    return np.asarray(tokens)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2.5-3b-smoke")
+    ap.add_argument("--batch-size", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--no-lora", action="store_true")
+    args = ap.parse_args()
+    toks = serve(args.arch, batch_size=args.batch_size, prompt_len=args.prompt_len,
+                 steps=args.steps, max_len=args.max_len, rank=args.rank,
+                 use_lora=not args.no_lora)
+    print("generated token ids:\n", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Step builders shared by the dry-run, trainer and server: jit-able
+``train_step`` / ``prefill_step`` / ``decode_step`` closures plus the
+``input_specs`` ShapeDtypeStruct factory for every (arch × input shape).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LoRAConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.optim import adamw_update, clip_by_global_norm, init_adamw, lr_at
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    Decode shapes describe ONE decode step: tokens (B, 1) + scalar position
+    (the KV cache spec is built separately from ``model.init_cache``).
+    """
+    gb, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    if shape.is_decode:
+        batch = {"tokens": sd((gb, 1), i32)}
+        if cfg.family == "encdec":
+            pass  # cross-KV lives in the cache
+        return batch
+
+    text_len = s
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        text_len = s - cfg.vision_tokens
+        batch["vision_embeds"] = sd((gb, cfg.vision_tokens, cfg.d_model), f32)
+    if cfg.family == "encdec":
+        batch["frames"] = sd((gb, cfg.enc_seq_len, cfg.d_model), f32)
+    batch["tokens"] = sd((gb, text_len), i32)
+    if shape.kind == "train":
+        batch["targets"] = sd((gb, text_len), i32)
+        batch["loss_mask"] = sd((gb, text_len), f32)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def make_train_step(model, lora_cfg: LoRAConfig, train_cfg: TrainConfig,
+                    num_microbatches: int = 1) -> Callable:
+    """LoRA fine-tuning step: grads w.r.t. adapters only; W0 frozen.
+
+    With ``num_microbatches > 1`` the global batch is split and gradients
+    accumulate through a ``lax.scan`` — the activation-memory lever for
+    train_4k at global batch 256 (DESIGN §5).
+    """
+    scale = lora_cfg.scale
+
+    def loss_fn(lora, params, batch):
+        loss, metrics = model.loss(params, batch, lora=lora, lora_scale=scale)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, lora, opt_state, batch, step):
+        if num_microbatches > 1:
+            def split(x):
+                return x.reshape(num_microbatches, x.shape[0] // num_microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = grad_fn(lora, params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), lora)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+        else:
+            (loss, _), grads = grad_fn(lora, params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        lr = lr_at(step, base_lr=train_cfg.learning_rate,
+                   total_steps=train_cfg.total_steps,
+                   warmup_ratio=train_cfg.warmup_ratio, kind=train_cfg.schedule)
+        lora, opt_state = adamw_update(
+            grads, opt_state, lora, learning_rate=lr,
+            beta1=train_cfg.beta1, beta2=train_cfg.beta2, eps=train_cfg.eps,
+            weight_decay=train_cfg.weight_decay)
+        return lora, opt_state, loss, gnorm
+
+    return train_step
+
+
+def make_prefill_step(model, lora_cfg: LoRAConfig) -> Callable:
+    scale = lora_cfg.scale
+
+    def prefill_step(params, lora, batch, cache):
+        logits, cache = model.prefill(params, batch, cache, lora=lora,
+                                      lora_scale=scale)
+        # serving returns only the last-position logits
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_decode_step(model, lora_cfg: LoRAConfig) -> Callable:
+    scale = lora_cfg.scale
+
+    def decode_step(params, lora, tokens, cache, position):
+        logits, cache = model.decode_step(params, tokens, cache, position,
+                                          lora=lora, lora_scale=scale)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+
+    return decode_step
+
+
+def abstract_state(model, cfg: ModelConfig, lora_cfg: LoRAConfig
+                   ) -> Tuple[Any, Any, Any]:
+    """(params, lora, opt_state) as ShapeDtypeStructs — no allocation."""
+    from repro.core.lora import init_lora
+
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    lora = jax.eval_shape(
+        lambda p: init_lora(jax.random.key(0), p, cfg, lora_cfg), params)
+    opt_state = jax.eval_shape(init_adamw, lora)
+    return params, lora, opt_state
+
+
+def abstract_cache(model, batch_size: int, cache_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch_size, cache_len))

@@ -1,0 +1,169 @@
+"""Encoder-decoder stack (whisper-style). The mel/conv audio frontend is a
+STUB per the assignment: the encoder consumes precomputed frame embeddings
+``(B, enc_seq_len, d_model)`` supplied by ``input_specs``.
+
+Encoder: bidirectional attention layers (scan). Decoder: causal self-attention
++ cross-attention to the encoder output + FFN. Decode caches: per-layer
+self-attn ring/full cache + cross-attn K/V computed once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_block,
+    init_kv_cache,
+    make_attention_params,
+)
+from repro.models.common import (
+    Params,
+    apply_norm,
+    embed,
+    make_dense_params,
+    make_embedding_params,
+    make_norm_params,
+    unembed,
+)
+from repro.models.mlp import make_mlp_params, mlp_block
+from repro.models.transformer import stacked_init
+
+
+def _enc_layer_init(cfg):
+    def init(rng):
+        ks = jax.random.split(rng, 2)
+        return {
+            "attn_norm": make_norm_params(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": make_attention_params(ks[0], cfg),
+            "mlp_norm": make_norm_params(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": make_mlp_params(ks[1], cfg),
+        }
+    return init
+
+
+def _dec_layer_init(cfg):
+    def init(rng):
+        ks = jax.random.split(rng, 3)
+        return {
+            "self_norm": make_norm_params(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "self_attn": make_attention_params(ks[0], cfg),
+            "cross_norm": make_norm_params(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "cross_attn": make_attention_params(ks[1], cfg),
+            "mlp_norm": make_norm_params(cfg.norm, cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": make_mlp_params(ks[2], cfg),
+        }
+    return init
+
+
+def make_params(rng, cfg) -> Params:
+    ks = jax.random.split(rng, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "embed": make_embedding_params(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": make_embedding_params(ks[1], cfg.max_position_embeddings,
+                                           cfg.d_model, dtype),
+        "enc_pos_embed": make_embedding_params(ks[2], cfg.enc_seq_len, cfg.d_model, dtype),
+        "encoder": stacked_init(ks[3], cfg.enc_layers, _enc_layer_init(cfg)),
+        "enc_final_norm": make_norm_params(cfg.norm, cfg.d_model, dtype),
+        "decoder": stacked_init(ks[4], cfg.num_layers, _dec_layer_init(cfg)),
+        "final_norm": make_norm_params(cfg.norm, cfg.d_model, dtype),
+    } | ({} if cfg.tie_embeddings else
+         {"lm_head": make_dense_params(ks[5], cfg.d_model, cfg.vocab_size, dtype)})
+
+
+def encode(cfg, params: Params, frames: jnp.ndarray, *, lora: Optional[Params] = None,
+           lora_scale: float = 0.0, remat: bool = False,
+           block_size: int = 1024) -> jnp.ndarray:
+    """frames: (B, enc_seq, d_model) stub embeddings → encoder output."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + params["enc_pos_embed"]["embedding"][: x.shape[1]][None]
+    lora = lora or {}
+
+    def body(xc, inp):
+        p, lo = inp
+        h, _ = attention_block(cfg, p["attn"],
+                               apply_norm(cfg.norm, p["attn_norm"], xc),
+                               lora=(lo or {}).get("attn"), lora_scale=lora_scale,
+                               causal=False, block_size=block_size)
+        xc = xc + h
+        m = mlp_block(cfg, p["mlp"], apply_norm(cfg.norm, p["mlp_norm"], xc),
+                      lora=(lo or {}).get("mlp"), lora_scale=lora_scale)
+        return xc + m, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, (params["encoder"], lora.get("encoder")))
+    return apply_norm(cfg.norm, params["enc_final_norm"], x)
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    one_self = init_kv_cache(batch, cache_len, cfg.num_kv_heads, hd, dtype)
+    one_cross = init_kv_cache(batch, cfg.enc_seq_len, cfg.num_kv_heads, hd, dtype)
+    stack = lambda tree: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), tree)
+    return {"self": stack(one_self), "cross": stack(one_cross)}
+
+
+def decoder_forward(cfg, params: Params, tokens: jnp.ndarray, enc_out: Optional[jnp.ndarray],
+                    *, lora: Optional[Params] = None, lora_scale: float = 0.0,
+                    mode: str = "train", cache: Optional[Params] = None,
+                    position: Optional[jnp.ndarray] = None,
+                    block_size: int = 1024) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s = tokens.shape
+    decode = mode == "decode"
+    remat = mode == "train"
+    lora = lora or {}
+    x = embed(params["embed"], tokens)
+    if decode:
+        dpos = position.astype(jnp.int32)
+        pe = jnp.take(params["pos_embed"]["embedding"],
+                      jnp.minimum(dpos, cfg.max_position_embeddings - 1), axis=0)
+        x = x + pe[None, None, :]
+        positions = None
+    else:
+        dpos = None
+        positions = jnp.arange(s)
+        x = x + params["pos_embed"]["embedding"][:s][None]
+
+    def body(xc, inp):
+        p, lo, ca = inp
+        self_ca = None if ca is None else ca["self"]
+        cross_ca = None if ca is None else ca["cross"]
+        h, nc_self = attention_block(
+            cfg, p["self_attn"], apply_norm(cfg.norm, p["self_norm"], xc),
+            lora=(lo or {}).get("self_attn"), lora_scale=lora_scale,
+            positions=positions, cache=self_ca, decode_position=dpos,
+            block_size=block_size)
+        xc = xc + h
+        # cross-attention: at decode, read precomputed cross K/V from cache.
+        h, nc_cross = attention_block(
+            cfg, p["cross_attn"], apply_norm(cfg.norm, p["cross_norm"], xc),
+            lora=(lo or {}).get("cross_attn"), lora_scale=lora_scale,
+            kv_x=enc_out, cross=True,
+            cache=cross_ca, decode_position=dpos, causal=False,
+            block_size=block_size)
+        xc = xc + h
+        m = mlp_block(cfg, p["mlp"], apply_norm(cfg.norm, p["mlp_norm"], xc),
+                      lora=(lo or {}).get("mlp"), lora_scale=lora_scale)
+        ys = None if ca is None else {"self": nc_self, "cross": nc_cross}
+        return xc + m, ys
+
+    lo = lora.get("decoder")
+    if cache is None:
+        def bnc(xc, inp):
+            p, l = inp
+            xo, _ = body(xc, (p, l, None))
+            return xo, None
+        fn = jax.checkpoint(bnc) if remat else bnc
+        x, _ = jax.lax.scan(fn, x, (params["decoder"], lo))
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], lo, cache))
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    tied = params["embed"]["embedding"] if cfg.tie_embeddings else None
+    logits = unembed(params.get("lm_head", {}), x, tied_embedding=tied)
+    return logits, new_cache

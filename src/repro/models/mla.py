@@ -1,0 +1,162 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to ``kv_lora_rank`` latents plus one shared decoupled-RoPE key
+per position — the decode cache stores ONLY ``(c_kv, k_rope)`` per token
+(512 + 64 dims for the full config vs 128·(128+128) for vanilla GQA: ~57×
+smaller).
+
+Training/prefill decompresses K/V and uses the shared blockwise core.
+Decode uses *weight absorption* (the TPU-friendly form): queries are mapped
+into the latent space through ``w_uk`` so scores are taken directly against the
+compressed cache, and attention output is re-expanded through ``w_uv`` — per
+step cost is O(S · kv_lora_rank) per head instead of decompressing the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention
+from repro.models.common import (
+    Params,
+    apply_rope,
+    dense,
+    make_dense_params,
+    make_norm_params,
+    apply_norm,
+    maybe_lora,
+)
+
+NEG_INF = -1e30
+
+
+def make_mla_params(rng, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        # query path: d → q_lora_rank → heads × (nope + rope)
+        "q_down": make_dense_params(ks[0], d, qr, dtype),
+        "q_norm": make_norm_params("rmsnorm", qr, dtype),
+        "q_up": make_dense_params(ks[1], qr, h * (qk_nope + qk_rope), dtype),
+        # kv path: d → kv_lora_rank (+ shared rope key)
+        "kv_down": make_dense_params(ks[2], d, kvr + qk_rope, dtype),
+        "kv_norm": make_norm_params("rmsnorm", kvr, dtype),
+        "k_up": make_dense_params(ks[3], kvr, h * qk_nope, dtype),
+        "v_up": make_dense_params(ks[4], kvr, h * dv, dtype),
+        "o_proj": make_dense_params(ks[5], h * dv, d, dtype),
+    }
+
+
+def _project_q(cfg, params, x, lora, lora_scale):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_nope, qk_rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    qd = dense(x, params["q_down"], maybe_lora(lora, "q_down"), lora_scale)
+    qd = apply_norm("rmsnorm", params["q_norm"], qd)
+    q = dense(qd, params["q_up"], maybe_lora(lora, "q_up"), lora_scale)
+    q = q.reshape(b, s, h, qk_nope + qk_rope)
+    return q[..., :qk_nope], q[..., qk_nope:]
+
+
+def _project_kv_latent(cfg, params, x, lora, lora_scale):
+    kvr, qk_rope = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = dense(x, params["kv_down"], maybe_lora(lora, "kv_down"), lora_scale)
+    c_kv = apply_norm("rmsnorm", params["kv_norm"], kv[..., :kvr])
+    k_rope = kv[..., kvr:]  # (B, S, qk_rope) — ONE shared rope key per position
+    return c_kv, k_rope
+
+
+def init_mla_cache(batch: int, length: int, cfg, dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def mla_block(
+    cfg,
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    lora: Optional[Params] = None,
+    lora_scale: float = 0.0,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Params] = None,
+    decode_position: Optional[jnp.ndarray] = None,
+    block_size: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(s)
+    is_decode = decode_position is not None
+
+    q_nope, q_rope = _project_q(cfg, params, x, lora, lora_scale)
+    q_pos = decode_position[None] if is_decode else positions
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+
+    c_kv, k_rope = _project_kv_latent(cfg, params, x, lora, lora_scale)
+    k_rope = apply_rope(k_rope[..., None, :], q_pos, cfg.rope_theta)[..., 0, :]
+
+    new_cache = cache
+    if is_decode:
+        # -- absorbed decode against the compressed cache ---------------------
+        length = cache["c_kv"].shape[1]
+        slot = decode_position % length
+        c_kv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slot, axis=1)
+        k_rope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], decode_position[None], slot, axis=0)
+        new_cache = {"c_kv": c_kv_c, "k_rope": k_rope_c, "pos": pos}
+
+        w_uk = params["k_up"]["kernel"].reshape(kvr, h, qk_nope)
+        w_uv = params["v_up"]["kernel"].reshape(kvr, h, dv)
+        # absorb: query → latent space
+        q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)  # (B,1,H,kvr)
+        scale = (qk_nope + qk_rope) ** -0.5
+        s_nope = jnp.einsum("bqhc,bsc->bhqs", q_lat, c_kv_c, preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope_c, preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        valid = (pos >= 0) & (pos <= decode_position)
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhqs,bsc->bqhc", w.astype(c_kv_c.dtype), c_kv_c)
+        out = jnp.einsum("bqhc,chd->bqhd", ctx_lat, w_uv)  # (B,1,H,dv)
+    else:
+        # -- decompressed training/prefill ------------------------------------
+        k_nope = dense(c_kv, params["k_up"], maybe_lora(lora, "k_up"), lora_scale)
+        v = dense(c_kv, params["v_up"], maybe_lora(lora, "v_up"), lora_scale)
+        k_nope = k_nope.reshape(b, s, h, qk_nope)
+        v = v.reshape(b, s, h, dv)
+        k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, qk_rope))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        out = flash_attention(q_full, k_full, v, True, 0, 0, block_size)
+        if cache is not None:
+            length = cache["c_kv"].shape[1]
+            ck, kr = c_kv[:, -length:], k_rope[:, -length:]
+            ppos = positions[-length:]
+            pad = length - ck.shape[1]
+            if pad > 0:
+                ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0)))
+                kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))
+                ppos = jnp.concatenate([ppos, jnp.full((pad,), -1, ppos.dtype)])
+            new_cache = {"c_kv": ck.astype(cache["c_kv"].dtype),
+                         "k_rope": kr.astype(cache["k_rope"].dtype),
+                         "pos": ppos.astype(jnp.int32)}
+
+    out = out.reshape(b, s, h * dv).astype(x.dtype)
+    out = dense(out, params["o_proj"], maybe_lora(lora, "o_proj"), lora_scale)
+    return out.astype(x.dtype), new_cache

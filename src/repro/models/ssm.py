@@ -1,0 +1,225 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like with decay mask) + inter-chunk recurrence over per-chunk
+states via ``lax.scan``. Decode is the O(1) recurrent update on the carried
+state ``h ∈ (B, H, P, N)``.
+
+LoRA targets: ``in_proj`` / ``out_proj`` (the frozen matmuls — the FedEx-LoRA
+machinery applies unchanged; see DESIGN §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Params,
+    dense,
+    make_dense_params,
+    maybe_lora,
+    normal_init,
+)
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n  # x, B, C all pass through the causal conv
+    return d_inner, nheads, n, conv_ch
+
+
+def make_mamba2_params(rng, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, nheads, n, conv_ch = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    # in_proj emits [z (d_inner), x (d_inner), B (n), C (n), dt (nheads)]
+    d_in_proj = 2 * d_inner + 2 * n + nheads
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, nheads))  # A = -exp(A_log)
+    return {
+        "in_proj": make_dense_params(ks[0], d, d_in_proj, dtype),
+        "conv": {
+            "kernel": normal_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, stddev=0.1),
+            "bias": jnp.zeros((conv_ch,), dtype),
+        },
+        "A_log": a_init.astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": make_dense_params(ks[2], d_inner, d, dtype),
+    }
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray, bias: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d. x: (B, S, C); kernel: (K, C).
+
+    Returns (y, new_state) where state holds the last K-1 inputs.
+    """
+    k = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    # windows: y_t = Σ_j kernel[j] * xx[t+j]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(k):
+        y = y + xx[:, j : j + x.shape[1]].astype(jnp.float32) * kernel[j].astype(jnp.float32)
+    y = (y + bias.astype(jnp.float32)).astype(x.dtype)
+    new_state = xx[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """segsum(x)[..., i, j] = Σ_{j < l <= i} x[..., l]  (−inf above diagonal)."""
+    t = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 256,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    x:  (B, S, H, P) inputs per head
+    dt: (B, S, H)    positive step sizes
+    a:  (H,)         negative per-head decay
+    b:  (B, S, N)    input projections (shared across heads, n_groups=1)
+    c:  (B, S, N)    output projections
+    h0: (B, H, P, N) initial state
+    → (y (B,S,H,P), h_final (B,H,P,N))
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]  # (B, NC, L, H) log-decay per step
+    da_cs = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (diagonal) term ----------------------------------------
+    # L_mat[i,j] = exp(Σ_{j<l<=i} da_l): (B, NC, H, L, L)
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,NC,H,L,L)
+    cb = jnp.einsum("bzln,bzmn->bzlm", cc, bc)  # (B,NC,L,L)
+    y_diag = jnp.einsum("bzhlm,bzlm,bzmh,bzmhp->bzlhp", lmat, cb, dtc, xc)
+
+    # ---- per-chunk final states ---------------------------------------------
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,NC,L,H)
+    states = jnp.einsum("bzlh,bzlh,bzln,bzlhp->bzhpn",
+                        decay_to_end, dtc, bc, xc)  # (B,NC,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk states ---------------------------
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B, NC, H) total decay per chunk
+
+    def scan_body(h_prev, inputs):
+        st, dec = inputs  # st: (B,H,P,N), dec: (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit state ENTERING this chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    st_t = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    dec_t = chunk_decay.transpose(1, 0, 2)
+    h_final, h_enter = jax.lax.scan(scan_body, h0, (st_t, dec_t))
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # ---- inter-chunk (off-diagonal) output ----------------------------------
+    state_decay = jnp.exp(da_cs)  # decay from chunk start to position i
+    y_off = jnp.einsum("bzln,bzlh,bzhpn->bzlhp", cc, state_decay, h_enter)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(h: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. h: (B,H,P,N); x: (B,H,P); dt: (B,H); b,c: (B,N)."""
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    inp = jnp.einsum("bh,bn,bhp->bhpn", dt, b, x)
+    h_new = h * decay[..., None, None] + inp
+    y = jnp.einsum("bn,bhpn->bhp", c, h_new.astype(c.dtype))
+    return h_new, y
+
+
+def init_mamba_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Params:
+    d_inner, nheads, n, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_block(cfg, params: Params, x: jnp.ndarray, *,
+                 lora: Optional[Params] = None, lora_scale: float = 0.0,
+                 cache: Optional[Params] = None, decode: bool = False,
+                 chunk: int = 256) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, d_model) → (y, new_cache)."""
+    bsz, s, _ = x.shape
+    d_inner, nheads, n, conv_ch = _dims(cfg)
+    p_dim = cfg.ssm_head_dim
+
+    zxbcdt = dense(x, params["in_proj"], maybe_lora(lora, "in_proj"), lora_scale)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt_pre = zxbcdt[..., d_inner + conv_ch :]  # (B, S, H)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv_state = _causal_conv(xbc, params["conv"]["kernel"],
+                                       params["conv"]["bias"], conv_state)
+    xs = xbc[..., :d_inner]
+    b = xbc[..., d_inner : d_inner + n]
+    c = xbc[..., d_inner + n :]
+
+    a = -jnp.exp(params["A_log"])  # (H,)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    xh = xs.reshape(bsz, s, nheads, p_dim)
+
+    if decode:
+        assert s == 1 and cache is not None
+        h_new, y = ssd_step(cache["ssm"], xh[:, 0].astype(jnp.float32),
+                            dt[:, 0], a, b[:, 0].astype(jnp.float32),
+                            c[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = {"ssm": h_new, "conv": new_conv_state}
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        pad = (-s) % chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, b, c
+        y, h_final = ssd_chunked(xh_p, dt_p, a, b_p.astype(jnp.float32),
+                                 c_p.astype(jnp.float32), chunk=chunk, h0=h0)
+        y = y[:, :s]
+        new_cache = None if cache is None else {"ssm": h_final, "conv": new_conv_state}
+
+    y = y + xh.astype(y.dtype) * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, params["norm"]["scale"])
+    out = dense(y, params["out_proj"], maybe_lora(lora, "out_proj"), lora_scale)
+    return out.astype(x.dtype), new_cache

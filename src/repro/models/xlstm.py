@@ -1,0 +1,323 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar memory) blocks.
+
+mLSTM training path is *chunkwise-parallel* with full log-space stabilization:
+within-chunk quadratic (decay-masked attention-like) + inter-chunk recurrence
+over the stabilized matrix memory ``(C, n, m)`` via ``lax.scan``. Decode is the
+O(1) recurrent update. sLSTM is a true recurrence (``lax.scan`` over time) with
+block-diagonal per-head recurrent weights and exponential-gate stabilization.
+
+Block layout follows the paper: mLSTM blocks are pre-LN up-projected (factor
+``ssm_expand``) with causal-conv q/k path and output gating; sLSTM blocks are
+post-normed with a gated FFN (factor 4/3). ``slstm_every`` controls the period
+(xLSTM[7:1] → one sLSTM per 8 blocks).
+
+LoRA targets: ``up_proj``/``down_proj`` (mLSTM) and the gate input projections
+(sLSTM) — all frozen matmuls, so FedEx-LoRA aggregation applies unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense, make_dense_params, maybe_lora, normal_init
+from repro.models.ssm import _causal_conv
+
+
+# ==========================================================================
+# mLSTM cell
+# ==========================================================================
+
+def mlstm_step(state, q, k, v, i_pre, lf):
+    """One stabilized recurrent step.
+
+    state: (C (B,H,Dk,Dv), n (B,H,Dk), m (B,H))
+    q,k,v: (B,H,D); i_pre, lf: (B,H)  [lf = log f = logsigmoid(f_pre)]
+    """
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    C_new = f_s[..., None, None] * C + i_s[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_s[..., None] * n + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_chunked(q, k, v, i_pre, lf, *, chunk: int = 256, state=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, S, H, D) (k pre-scaled by D^-0.5); i_pre, lf: (B, S, H).
+    state: optional (C, n, m). Returns (h (B,S,H,D), final_state).
+    """
+    bsz, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    qc = q.reshape(bsz, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)  # (NC,B,H,L,D)
+    kc = k.reshape(bsz, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(bsz, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    ic = i_pre.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)  # (NC,B,H,L)
+    lfc = lf.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)
+
+    if state is None:
+        state = (
+            jnp.zeros((bsz, h, d, d), jnp.float32),
+            jnp.zeros((bsz, h, d), jnp.float32),
+            jnp.full((bsz, h), -jnp.inf, jnp.float32),
+        )
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inputs):
+        C, n, m = carry
+        qb, kb, vb, ib, lfb = inputs  # (B,H,L,D) / (B,H,L)
+        b_cum = jnp.cumsum(lfb, axis=-1)  # (B,H,L) inclusive
+        # D_ij = b_i - b_j + i_j (j <= i)
+        dmat = b_cum[..., :, None] - b_cum[..., None, :] + ib[..., None, :]
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        state_scale = b_cum + m[..., None]  # (B,H,L): log-scale of state branch
+        m_i = jnp.maximum(dmat.max(axis=-1), state_scale)
+        m_i = jnp.maximum(m_i, -1e30)  # keep finite when everything is empty
+        w = jnp.exp(dmat - m_i[..., None])  # (B,H,L,L)
+        sc = jnp.einsum("bhld,bhmd->bhlm", qb, kb) * w
+        num_intra = jnp.einsum("bhlm,bhmv->bhlv", sc, vb)
+        # normalizer via n-vector: den_i = q_i · (Σ_j w_ij k_j + state_w_i n)
+        n_intra = jnp.einsum("bhlm,bhmd->bhld", w, kb)
+        state_w = jnp.exp(state_scale - m_i)  # (B,H,L)
+        num = num_intra + state_w[..., None] * jnp.einsum("bhld,bhdv->bhlv", qb, C)
+        n_comb = n_intra + state_w[..., None] * n[..., None, :]
+        den = jnp.abs(jnp.einsum("bhld,bhld->bhl", qb, n_comb))
+        den = jnp.maximum(den, jnp.exp(-m_i))
+        hout = num / den[..., None]  # (B,H,L,D)
+
+        # ---- state update to chunk end ----
+        b_tot = b_cum[..., -1]  # (B,H)
+        g = b_tot[..., None] - b_cum + ib  # (B,H,L): decay j→L + input gate
+        m_next = jnp.maximum(b_tot + m, g.max(axis=-1))
+        m_next = jnp.maximum(m_next, -1e30)
+        w_state = jnp.exp(g - m_next[..., None])  # (B,H,L)
+        C_next = jnp.exp(b_tot + m - m_next)[..., None, None] * C + jnp.einsum(
+            "bhl,bhld,bhlv->bhdv", w_state, kb, vb)
+        n_next = jnp.exp(b_tot + m - m_next)[..., None] * n + jnp.einsum(
+            "bhl,bhld->bhd", w_state, kb)
+        return (C_next, n_next, m_next), hout
+
+    final_state, hs = jax.lax.scan(body, state, (qc.astype(jnp.float32),
+                                                 kc.astype(jnp.float32),
+                                                 vc.astype(jnp.float32),
+                                                 ic.astype(jnp.float32),
+                                                 lfc.astype(jnp.float32)))
+    # hs: (NC, B, H, L, D) → (B, S, H, D)
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, d)
+    return hs, final_state
+
+
+# ==========================================================================
+# mLSTM block
+# ==========================================================================
+
+def _xlstm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.num_heads
+    d_head = d_inner // nheads
+    return d_inner, nheads, d_head
+
+
+def make_mlstm_params(rng, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, nheads, d_head = _xlstm_dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "norm": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "up_proj": make_dense_params(ks[0], d, 2 * d_inner, dtype),
+        "conv": {
+            "kernel": normal_init(ks[1], (4, d_inner), dtype, stddev=0.1),
+            "bias": jnp.zeros((d_inner,), dtype),
+        },
+        "q_proj": make_dense_params(ks[2], d_inner, d_inner, dtype),
+        "k_proj": make_dense_params(ks[3], d_inner, d_inner, dtype),
+        "v_proj": make_dense_params(ks[4], d_inner, d_inner, dtype),
+        "gate_proj": make_dense_params(ks[5], d_inner, 2 * nheads, dtype),
+        "head_norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "down_proj": make_dense_params(ks[6], d_inner, d, dtype),
+    }
+
+
+def init_mlstm_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Params:
+    d_inner, nheads, d_head = _xlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nheads, d_head, d_head), jnp.float32),
+        "n": jnp.zeros((batch, nheads, d_head), jnp.float32),
+        "m": jnp.full((batch, nheads), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_inner), dtype),
+    }
+
+
+def _per_head_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, nheads: int,
+                      eps: float = 1e-6) -> jnp.ndarray:
+    """GroupNorm-style per-head RMS norm over (B, S, H*Dh)."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, nheads, d // nheads)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = (xf * jax.lax.rsqrt(var + eps)).reshape(b, s, d)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_block(cfg, params: Params, x: jnp.ndarray, *,
+                lora: Optional[Params] = None, lora_scale: float = 0.0,
+                cache: Optional[Params] = None, decode: bool = False,
+                chunk: int = 256) -> Tuple[jnp.ndarray, Optional[Params]]:
+    from repro.models.common import apply_norm
+
+    bsz, s, _ = x.shape
+    d_inner, nheads, d_head = _xlstm_dims(cfg)
+
+    xn = apply_norm("layernorm", params["norm"], x)
+    up = dense(xn, params["up_proj"], maybe_lora(lora, "up_proj"), lora_scale)
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    x_conv, new_conv = _causal_conv(x_in, params["conv"]["kernel"],
+                                    params["conv"]["bias"], conv_state)
+
+    q = dense(x_conv, params["q_proj"], maybe_lora(lora, "q_proj"), lora_scale)
+    k = dense(x_conv, params["k_proj"], maybe_lora(lora, "k_proj"), lora_scale)
+    v = dense(x_in, params["v_proj"], maybe_lora(lora, "v_proj"), lora_scale)
+    gates = dense(x_conv, params["gate_proj"], None, 0.0).astype(jnp.float32)
+    i_pre = gates[..., :nheads]
+    lf = jax.nn.log_sigmoid(gates[..., nheads:])
+
+    qh = q.reshape(bsz, s, nheads, d_head).astype(jnp.float32)
+    kh = k.reshape(bsz, s, nheads, d_head).astype(jnp.float32) * (d_head ** -0.5)
+    vh = v.reshape(bsz, s, nheads, d_head).astype(jnp.float32)
+
+    if decode:
+        assert s == 1 and cache is not None
+        state = (cache["C"], cache["n"], cache["m"])
+        state, h = mlstm_step(state, qh[:, 0], kh[:, 0], vh[:, 0],
+                              i_pre[:, 0], lf[:, 0])
+        h = h[:, None]
+        new_cache = {"C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+    else:
+        state = None
+        if cache is not None:
+            state = (cache["C"], cache["n"], cache["m"])
+        pad = (-s) % chunk
+        if pad:
+            qh = jnp.pad(qh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            i_pre_p = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+            lf_p = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        else:
+            i_pre_p, lf_p = i_pre, lf
+        h, state = mlstm_chunked(qh, kh, vh, i_pre_p, lf_p, chunk=chunk, state=state)
+        h = h[:, :s]
+        new_cache = None if cache is None else {
+            "C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+
+    h = h.reshape(bsz, s, d_inner).astype(x.dtype)
+    h = _per_head_rmsnorm(h, params["head_norm"]["scale"], nheads)
+    h = h * jax.nn.silu(z)
+    out = x + dense(h, params["down_proj"], maybe_lora(lora, "down_proj"), lora_scale).astype(x.dtype)
+    return out, new_cache
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def make_slstm_params(rng, cfg) -> Params:
+    d = cfg.d_model
+    nheads = cfg.num_heads
+    d_head = d // nheads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 7)
+    ff = int(d * 4 / 3)
+    return {
+        "norm": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "w_gates": make_dense_params(ks[0], d, 4 * d, dtype),  # z,i,f,o stacked
+        "r_gates": normal_init(ks[1], (4, nheads, d_head, d_head), dtype, stddev=0.05),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "head_norm": {"scale": jnp.ones((d,), dtype)},
+        "ffn_norm": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "ffn": {
+            "up_proj": make_dense_params(ks[2], d, ff, dtype),
+            "gate_proj": make_dense_params(ks[3], d, ff, dtype),
+            "down_proj": make_dense_params(ks[4], ff, d, dtype),
+        },
+    }
+
+
+def init_slstm_cache(batch: int, cfg, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), dtype),
+    }
+
+
+def slstm_step(params: Params, state: Dict, x_t: jnp.ndarray, nheads: int):
+    """x_t: (B, 4d) pre-computed input gate pre-activations W x + b."""
+    c, n, m, h_prev = state["c"], state["n"], state["m"], state["h"]
+    b, d = c.shape
+    d_head = d // nheads
+    hp = h_prev.astype(jnp.float32).reshape(b, nheads, d_head)
+    rec = jnp.einsum("ghij,bhj->gbhi", params["r_gates"].astype(jnp.float32), hp)
+    rec = rec.reshape(4, b, d)
+    pre = x_t.astype(jnp.float32).reshape(b, 4, d).transpose(1, 0, 2) + rec
+    z = jnp.tanh(pre[0])
+    i_pre = pre[1]
+    lf = jax.nn.log_sigmoid(pre[2])
+    o = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(lf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new.astype(h_prev.dtype)}, h_new
+
+
+def slstm_block(cfg, params: Params, x: jnp.ndarray, *,
+                lora: Optional[Params] = None, lora_scale: float = 0.0,
+                cache: Optional[Params] = None, decode: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    from repro.models.common import apply_norm
+    from repro.models.mlp import mlp_block
+
+    bsz, s, d = x.shape
+    nheads = cfg.num_heads
+    xn = apply_norm("layernorm", params["norm"], x)
+    pre = dense(xn, params["w_gates"], maybe_lora(lora, "w_gates"), lora_scale)
+    pre = pre.astype(jnp.float32) + params["b_gates"]
+
+    state = cache if cache is not None else init_slstm_cache(bsz, cfg, x.dtype)
+
+    if decode:
+        assert s == 1
+        new_state, h = slstm_step(params, state, pre[:, 0], nheads)
+        hs = h[:, None]
+    else:
+        def body(st, x_t):
+            st2, h = slstm_step(params, st, x_t, nheads)
+            return st2, h
+        new_state, hs = jax.lax.scan(body, state, pre.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+
+    hs = _per_head_rmsnorm(hs.astype(x.dtype), params["head_norm"]["scale"], nheads)
+    y = x + hs
+    yn = apply_norm("layernorm", params["ffn_norm"], y)
+    ff = mlp_block(cfg, params["ffn"], yn, lora=(lora or {}).get("ffn"), lora_scale=lora_scale)
+    out = (y + ff).astype(x.dtype)
+    new_cache = new_state if cache is not None else None
+    return out, new_cache

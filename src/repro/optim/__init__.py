@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWState, adamw_update, clip_by_global_norm, init_adamw
+from repro.optim.schedule import lr_at
+
+__all__ = ["AdamWState", "adamw_update", "clip_by_global_norm", "init_adamw", "lr_at"]

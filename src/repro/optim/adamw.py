@@ -1,0 +1,72 @@
+"""AdamW (decoupled weight decay, arXiv:1711.05101) over arbitrary pytrees.
+
+The paper trains LoRA adapters with AdamW (Appendix B); in this framework the
+optimizer state exists ONLY for the trainable (LoRA) tree — the frozen base
+never gets moments, which is where LoRA's memory saving comes from.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any  # first moments (pytree like params)
+    nu: Any  # second moments
+
+
+def init_adamw(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    *,
+    learning_rate: jnp.ndarray | float,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). Grads may be lower precision; math is f32."""
+    step = state.step + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = beta1 * m + (1.0 - beta1) * g
+        v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+        m_hat = m_new / b1c
+        v_hat = v_new / b2c
+        delta = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - learning_rate * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm

@@ -1,0 +1,22 @@
+"""LR schedules: constant / linear / cosine with warmup (paper Appendix B)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_at(step, *, base_lr: float, total_steps: int, warmup_ratio: float = 0.02,
+          kind: str = "cosine", min_ratio: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warmup = jnp.maximum(1.0, warmup_ratio * total_steps)
+    warm = step / warmup
+    frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup), 0.0, 1.0)
+    if kind == "cosine":
+        decay = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif kind == "linear":
+        decay = min_ratio + (1 - min_ratio) * (1.0 - frac)
+    elif kind == "constant":
+        decay = jnp.ones_like(frac)
+    else:
+        raise ValueError(f"unknown schedule {kind!r}")
+    return base_lr * jnp.where(step < warmup, warm, decay)

@@ -1,0 +1,19 @@
+from repro.sharding.specs import (
+    batch_spec,
+    cache_spec,
+    data_axes,
+    param_spec,
+    param_spec_serving,
+    tree_shardings,
+    tree_specs,
+)
+
+__all__ = [
+    "batch_spec",
+    "cache_spec",
+    "data_axes",
+    "param_spec",
+    "param_spec_serving",
+    "tree_shardings",
+    "tree_specs",
+]

@@ -1,0 +1,77 @@
+"""Activation-sharding context: explicit with_sharding_constraint hints that
+model code applies when a launcher has configured mesh axes.
+
+Why this exists (§Perf finding #1): GSPMD fails to shard GQA attention
+internals when num_kv_heads < model-axis size (granite: kv=8 on a 16-way
+axis) — the (kvh, group) reshape has no valid propagation, so XLA silently
+REPLICATES the entire attention computation on every model-parallel device
+(16× redundant FLOPs + activation bytes, confirmed in the granite-8b HLO).
+The fix: repeat KV up to the head count when needed and pin the flattened
+head axis to ``model`` explicitly.
+
+Model code stays mesh-agnostic: constraints are no-ops unless a launcher
+calls ``configure()`` (dryrun.py / train.py do; CPU tests never do).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX = {"dp": None, "model": None, "model_size": 1, "enabled": False}
+
+
+def configure(dp: Union[str, Tuple[str, ...], None], model: Optional[str],
+              model_size: int) -> None:
+    _CTX.update(dp=dp, model=model, model_size=model_size, enabled=True)
+
+
+def reset() -> None:
+    _CTX.update(dp=None, model=None, model_size=1, enabled=False)
+
+
+@contextmanager
+def configured(dp, model, model_size):
+    configure(dp, model, model_size)
+    try:
+        yield
+    finally:
+        reset()
+
+
+def enabled() -> bool:
+    return _CTX["enabled"]
+
+
+def model_size() -> int:
+    return _CTX["model_size"]
+
+
+def _resolve(axis):
+    if axis == "dp":
+        return _CTX["dp"]
+    if axis == "model":
+        return _CTX["model"]
+    return axis
+
+
+def constrain(x: jax.Array, spec: Sequence) -> jax.Array:
+    """Apply a symbolic spec ('dp' / 'model' / None per dim); no-op unless
+    configured. Dims whose size doesn't divide the axis stay unconstrained."""
+    if not _CTX["enabled"]:
+        return x
+    resolved = []
+    for dim, axis in zip(x.shape, spec):
+        a = _resolve(axis)
+        if a is None:
+            resolved.append(None)
+            continue
+        size = _CTX["model_size"] if axis == "model" else None
+        if size is not None and dim % size != 0:
+            resolved.append(None)
+        else:
+            resolved.append(a)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,252 @@
+"""Parameter / activation / cache PartitionSpec rules (2D: FSDP × tensor).
+
+Mesh axes: ``pod``/``data`` shard the batch; ``model`` shards tensor dims.
+Weight matrices are 2D-sharded — tensor-parallel on ``model`` (Megatron
+column→row pairs) AND fully-sharded on ``data`` over the other dim (ZeRO-3 /
+FSDP) so 236B-class configs fit v5e HBM: deepseek-v2 = 472 GB bf16 →
+472/(16·16) ≈ 1.8 GB/chip. The ``pod`` axis is pure data parallelism
+(weights replicated across pods; only grad reduction crosses DCI).
+
+KV caches shard the SEQUENCE dim on ``model`` (32k×128-batch caches are tens
+of GB; attention reductions over a sharded S lower to psum) and the batch dim
+on the data axes. SSM/xLSTM states shard heads on ``model`` where divisible.
+
+LoRA factors stay replicated: rank-r is tiny and replication makes the FedEx
+aggregation a pure psum-mean with no resharding (DESIGN §5).
+
+Every axis assignment is guarded by divisibility — non-divisible dims fall
+back to replication rather than relying on GSPMD padding.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+MODEL = "model"
+FSDP = "data"  # weights are additionally sharded over the data axis (ZeRO-3)
+
+_COLUMN_MODULES = (
+    "q_proj", "k_proj", "v_proj", "up_proj", "gate_proj", "in_proj",
+    "w_gates", "q_down", "q_up", "k_up", "v_up", "kv_down", "lm_head",
+    "vision_proj",
+)
+_ROW_MODULES = ("o_proj", "down_proj", "out_proj")
+_EXPERT_TENSORS = ("up_proj", "gate_proj", "down_proj")
+
+# matrices smaller than this on both dims stay replicated (sharding overhead
+# beats the memory win for tiny matrices)
+_MIN_SHARD_DIM = 512
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    try:
+        return mesh.shape[name]
+    except (KeyError, TypeError):
+        return 1
+
+
+def _ok(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= _axis_size(mesh, a)
+    else:
+        size = _axis_size(mesh, axis)
+    return dim % size == 0 and dim >= size
+
+
+def _guard(shape, mesh: Mesh, spec) -> P:
+    out = []
+    for dim, axis in zip(shape, spec):
+        out.append(axis if _ok(dim, mesh, axis) else None)
+    return P(*out)
+
+
+def param_spec(path: str, leaf, mesh: Mesh) -> P:
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) >= 2 else ""
+    grandparent = parts[-3] if len(parts) >= 3 else ""
+    shape = leaf.shape
+
+    def tail_spec(tail):
+        lead = (None,) * (leaf.ndim - len(tail))
+        return _guard(shape, mesh, lead + tuple(tail))
+
+    # LoRA factors: replicated
+    if name in ("a", "b"):
+        return P(*([None] * leaf.ndim))
+
+    # MoE expert tensors — expert-parallel over `model` + FSDP on the
+    # contracting dim (§Perf iterations 4–5, EXPERIMENTS.md):
+    #   · ragged_dot + expert-sharded weights → GSPMD all-gathers the FULL
+    #     expert weights every call (deepseek-v2: 45.8 TB/step, measured);
+    #   · ragged_dot + ff-sharded weights → group_sizes are global, so GSPMD
+    #     all-gathers token ROWS ×16 across data (6× redundant compute);
+    #   · dense-dispatch einsum + expert sharding (this layout, with
+    #     moe_impl="dense" in distributed runs) partitions cleanly: tokens
+    #     stay data-sharded, experts stay model-sharded, only FSDP weight
+    #     gathers (~0.5 GB/layer) + an 84 MB combine all-reduce move.
+    # When E doesn't divide the model axis (mixtral: 8 experts on 16-way),
+    # fall back to ff-on-model TP inside each expert (§Perf it. 6) — otherwise
+    # the guard would silently REPLICATE 271 GB of expert weights per device
+    # row and every decode step would re-read all of them.
+    if parent == "experts" and name in _EXPERT_TENSORS and leaf.ndim >= 3:
+        e_dim = leaf.shape[-3]
+        if _ok(e_dim, mesh, MODEL):
+            return tail_spec((MODEL, FSDP, None))
+        if name == "down_proj":  # (E, ff, d)
+            return tail_spec((None, MODEL, FSDP))
+        return tail_spec((None, FSDP, MODEL))  # (E, d, ff)
+
+    if parent == "router":
+        return P(*([None] * leaf.ndim))
+
+    if parent == "embed" and name == "embedding":
+        return tail_spec((MODEL, FSDP))
+    if parent in ("pos_embed", "enc_pos_embed") and name == "embedding":
+        return tail_spec((None, FSDP))
+
+    if parent == "conv":
+        if name == "kernel":
+            return tail_spec((None, MODEL))
+        return tail_spec((MODEL,))
+
+    if parent in _COLUMN_MODULES:
+        if name == "kernel":
+            d_in, d_out = shape[-2], shape[-1]
+            fsdp = FSDP if min(d_in, d_out) >= _MIN_SHARD_DIM else None
+            return tail_spec((fsdp, MODEL))
+        if name == "bias":
+            return tail_spec((MODEL,))
+    if parent in _ROW_MODULES:
+        if name == "kernel":
+            d_in, d_out = shape[-2], shape[-1]
+            fsdp = FSDP if min(d_in, d_out) >= _MIN_SHARD_DIM else None
+            return tail_spec((MODEL, fsdp))
+        if name == "bias":
+            return P(*([None] * leaf.ndim))
+
+    # norms, gates, per-head scalars, r_gates, b_gates, A_log, D, dt_bias …
+    return P(*([None] * leaf.ndim))
+
+
+# --------------------------------------------------------------------------
+# caches — (name, base_rank, tail spec builder)
+# --------------------------------------------------------------------------
+
+def param_spec_serving(path: str, leaf, mesh: Mesh) -> P:
+    """Decode-shape layout (§Perf iteration 7): weight-stationary.
+
+    Training wants FSDP (re-gather weights per microbatch, amortised over
+    thousands of tokens). A decode step touches every weight ONCE for a
+    handful of tokens — re-gathering FSDP shards per step dominates
+    (mixtral-8x22b decode_32k: 23.6 GB of all-gather per token, measured).
+    Serving layout shards every large matrix over BOTH mesh axes: fully
+    resident, zero per-step weight collectives; the tiny activations take the
+    psum instead.
+    """
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) >= 2 else ""
+    shape = leaf.shape
+    both = ("data", "model")
+
+    def tail_spec(tail):
+        lead = (None,) * (leaf.ndim - len(tail))
+        return _guard(shape, mesh, lead + tuple(tail))
+
+    if name in ("a", "b"):
+        return P(*([None] * leaf.ndim))
+    if parent == "experts" and name in _EXPERT_TENSORS and leaf.ndim >= 3:
+        # experts consume REPLICATED tokens at decode (moe_block constrains
+        # them) → both axes available for weight residency.
+        if name == "down_proj":  # (E, ff, d)
+            return tail_spec((None, both, None))
+        return tail_spec((None, None, both))  # (E, d, ff)
+    if parent == "router":
+        return P(*([None] * leaf.ndim))
+    if parent == "embed" and name == "embedding":
+        return tail_spec((MODEL, None))
+    if parent in ("pos_embed", "enc_pos_embed") and name == "embedding":
+        return tail_spec((None, None))
+    if parent == "conv":
+        return tail_spec((None, MODEL)) if name == "kernel" else tail_spec((MODEL,))
+    # MLP weights are the residency bottleneck for 70B+ dense archs
+    # (internvl2-76b: 66% of layer params; model-only sharding left 9.5 GB of
+    # weights/device → 18.5 GiB peak, over v5e HBM). Both-axes sharding works
+    # because mlp_block REPLICATES the (tiny) decode tokens, like the MoE path.
+    if parent in ("up_proj", "gate_proj") and name == "kernel":
+        return tail_spec((None, both))
+    if parent == "down_proj" and name == "kernel":
+        return tail_spec((both, None))
+    # attention projections: batch stays data-sharded at decode, so only the
+    # model axis is conflict-free (data+model sharding forces an 8.5 GB/step
+    # o_proj gather — measured); attention weights are small enough resident.
+    if parent in _COLUMN_MODULES:
+        if name == "kernel":
+            return tail_spec((None, MODEL))
+        if name == "bias":
+            return tail_spec((MODEL,))
+    if parent in _ROW_MODULES:
+        if name == "kernel":
+            return tail_spec((MODEL, None))
+        return P(*([None] * leaf.ndim))
+    return P(*([None] * leaf.ndim))
+
+
+def cache_spec(path: str, leaf, mesh: Mesh, dp) -> P:
+    name = path.split("/")[-1]
+    shape = leaf.shape
+    rules = [
+        ("k", 4, (dp, MODEL, None, None)),       # (B, S, KV, D): shard SEQ
+        ("v", 4, (dp, MODEL, None, None)),
+        ("pos", 1, (MODEL,)),                     # position slots follow S
+        ("c_kv", 3, (dp, MODEL, None)),           # MLA latents: shard SEQ
+        ("k_rope", 3, (dp, MODEL, None)),
+        ("ssm", 4, (dp, MODEL, None, None)),      # (B, H, P, N): shard heads
+        ("conv", 3, (dp, None, MODEL)),           # (B, K-1, C): shard channels
+        ("C", 4, (dp, MODEL, None, None)),        # mLSTM memory: shard heads
+        ("n", 3, (dp, MODEL, None)),
+        ("n", 2, (dp, None)),
+        ("m", 2, (dp, MODEL)),
+        ("c", 2, (dp, None)),
+        ("h", 2, (dp, None)),
+    ]
+    for rule_name, rank, tail in rules:
+        if name == rule_name and leaf.ndim >= rank:
+            lead = (None,) * (leaf.ndim - rank)
+            return _guard(shape, mesh, lead + tuple(tail))
+    return P(*([None] * leaf.ndim))
+
+
+def batch_spec(path: str, leaf, mesh: Mesh, dp) -> P:
+    return _guard(leaf.shape, mesh, (dp,) + (None,) * (leaf.ndim - 1))
+
+
+# --------------------------------------------------------------------------
+# tree-level helpers
+# --------------------------------------------------------------------------
+
+def tree_specs(tree: Any, fn, *args) -> Any:
+    flat = flatten_with_paths(tree)
+    return unflatten_from_paths({p: fn(p, leaf, *args) for p, leaf in flat.items()})
+
+
+def tree_shardings(tree: Any, mesh: Mesh, fn, *args) -> Any:
+    specs = tree_specs(tree, fn, mesh, *args)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_axes(mesh: Mesh):
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return dp if len(dp) > 1 else dp[0]

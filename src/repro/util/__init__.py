@@ -1,0 +1,22 @@
+from repro.util.registry import Registry
+from repro.util.tree import (
+    tree_paths,
+    flatten_with_paths,
+    unflatten_from_paths,
+    count_params,
+    tree_bytes,
+    tree_allclose,
+)
+from repro.util.logging import get_logger, MetricLogger
+
+__all__ = [
+    "Registry",
+    "tree_paths",
+    "flatten_with_paths",
+    "unflatten_from_paths",
+    "count_params",
+    "tree_bytes",
+    "tree_allclose",
+    "get_logger",
+    "MetricLogger",
+]

@@ -1,0 +1,54 @@
+"""Structured stdout logging + CSV metric sink (no external deps)."""
+
+from __future__ import annotations
+
+import csv
+import logging
+import os
+import sys
+import time
+from typing import Dict, Optional
+
+_FORMAT = "%(asctime)s %(levelname).1s %(name)s] %(message)s"
+
+
+def get_logger(name: str) -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stdout)
+        handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+        logger.addHandler(handler)
+        logger.setLevel(os.environ.get("REPRO_LOGLEVEL", "INFO"))
+        logger.propagate = False
+    return logger
+
+
+class MetricLogger:
+    """Accumulates step metrics; optionally mirrors to a CSV file."""
+
+    def __init__(self, csv_path: Optional[str] = None, logger_name: str = "metrics"):
+        self.logger = get_logger(logger_name)
+        self.csv_path = csv_path
+        self._writer = None
+        self._file = None
+        self._t0 = time.time()
+        self.history = []
+
+    def log(self, step: int, metrics: Dict[str, float]) -> None:
+        rec = {"step": step, "wall_s": round(time.time() - self._t0, 3), **metrics}
+        self.history.append(rec)
+        msg = " ".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}" for k, v in rec.items())
+        self.logger.info(msg)
+        if self.csv_path:
+            if self._writer is None:
+                self._file = open(self.csv_path, "w", newline="")
+                self._writer = csv.DictWriter(self._file, fieldnames=list(rec.keys()))
+                self._writer.writeheader()
+            self._writer.writerow(rec)
+            self._file.flush()
+
+    def close(self) -> None:
+        if self._file:
+            self._file.close()
+            self._file = None
+            self._writer = None

@@ -1,0 +1,67 @@
+"""Pytree helpers: path flattening, parameter counting, size accounting."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts: List[str] = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: Any) -> List[str]:
+    """Sorted list of '/'-joined key paths for every leaf."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [_path_str(path) for path, _ in leaves]
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(path): leaf for path, leaf in leaves}
+
+
+def unflatten_from_paths(flat: Dict[str, Any]) -> Dict[str, Any]:
+    """Inverse of :func:`flatten_with_paths` for dict-of-dict trees."""
+    out: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        dt = getattr(x, "dtype", None)
+        itemsize = jnp.dtype(dt).itemsize if dt is not None else 4
+        total += int(np.prod(x.shape)) * itemsize
+    return total
+
+
+def tree_allclose(a: Any, b: Any, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol) for x, y in zip(la, lb))

@@ -1,0 +1,159 @@
+"""Unit tests for the paper's aggregation operators (core/aggregation.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    apply_residual,
+    assign_after_aggregation,
+    fedex_aggregate,
+    fedex_svd_aggregate,
+    fedit_aggregate,
+    per_client_residuals,
+    product_mean,
+    reconstruct,
+    residual_factors,
+    truncated_svd_product,
+)
+from repro.core.aggregation import map_factors
+
+
+def make_client_loras(k=3, m=24, r=4, n=16, seed=0, layers=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(k):
+        lead = () if layers is None else (layers,)
+        out.append({
+            "blk": {
+                "q_proj": {
+                    "a": jnp.asarray(rng.normal(size=lead + (m, r)), jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=lead + (r, n)), jnp.float32),
+                },
+            }
+        })
+    return out
+
+
+def dense_update(lora):
+    return jnp.matmul(lora["blk"]["q_proj"]["a"], lora["blk"]["q_proj"]["b"])
+
+
+class TestFedExExactness:
+    def test_fedex_equals_ideal(self):
+        """Eq. 7–9: global + residual == mean of client products."""
+        loras = make_client_loras()
+        g, res = fedex_aggregate(loras)
+        ideal = sum(dense_update(l) for l in loras) / len(loras)
+        got = dense_update(g) + res["blk"]["q_proj"]
+        np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-6)
+
+    def test_fedit_is_inexact(self):
+        loras = make_client_loras()
+        g = fedit_aggregate(loras)
+        ideal = sum(dense_update(l) for l in loras) / len(loras)
+        assert float(jnp.abs(dense_update(g) - ideal).max()) > 1e-3
+
+    def test_stacked_layers(self):
+        loras = make_client_loras(layers=5)
+        g, res = fedex_aggregate(loras)
+        ideal = sum(dense_update(l) for l in loras) / len(loras)
+        got = dense_update(g) + res["blk"]["q_proj"]
+        assert got.shape == (5, 24, 16)
+        np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-6)
+
+    def test_single_client_residual_zero(self):
+        loras = make_client_loras(k=1)
+        _, res = fedex_aggregate(loras)
+        np.testing.assert_allclose(res["blk"]["q_proj"], 0.0, atol=1e-5)
+
+    def test_identical_clients_residual_zero(self):
+        l = make_client_loras(k=1)[0]
+        _, res = fedex_aggregate([l, l, l])
+        np.testing.assert_allclose(res["blk"]["q_proj"], 0.0, atol=1e-4)
+
+
+class TestAssignmentStrategies:
+    """Table 5: every strategy must be exact; they differ in (aᵢ, bᵢ)."""
+
+    @pytest.mark.parametrize("strategy", ["average", "keep_local", "reinit"])
+    def test_strategy_exactness(self, strategy):
+        loras = make_client_loras()
+        ideal = sum(dense_update(l) for l in loras) / len(loras)
+        new_loras, residual = assign_after_aggregation(
+            strategy, loras, jax.random.key(0))
+        if strategy == "keep_local":
+            residuals = per_client_residuals(loras)
+            for lora_i, res_i in zip(new_loras, residuals):
+                got = dense_update(lora_i) + res_i["blk"]["q_proj"]
+                np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-5)
+        else:
+            for lora_i in new_loras:
+                got = dense_update(lora_i) + residual["blk"]["q_proj"]
+                np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-5)
+
+    def test_reinit_b_is_zero(self):
+        loras = make_client_loras()
+        new_loras, _ = assign_after_aggregation("reinit", loras, jax.random.key(0))
+        np.testing.assert_allclose(new_loras[0]["blk"]["q_proj"]["b"], 0.0)
+
+
+class TestResidualDecomposition:
+    def test_factored_form_exact(self):
+        """§4.2 communication protocol: rank-(k+1)r factors are lossless."""
+        loras = make_client_loras(m=32, n=20)
+        _, res = fedex_aggregate(loras)
+        factors = [l["blk"]["q_proj"] for l in loras]
+        L, R = residual_factors(factors)
+        assert L.shape[1] == (len(loras) + 1) * 4
+        np.testing.assert_allclose(L @ R, res["blk"]["q_proj"], rtol=1e-5, atol=1e-5)
+
+    def test_truncated_svd_is_optimal(self):
+        """Eckart–Young: QR+small-SVD == dense SVD truncation."""
+        loras = make_client_loras(k=4, m=40, n=28)
+        _, res = fedex_aggregate(loras)
+        dense = np.asarray(res["blk"]["q_proj"])
+        factors = [l["blk"]["q_proj"] for l in loras]
+        L, R = residual_factors(factors)
+        for rank in (1, 3, 8):
+            u, s, vt = truncated_svd_product(L, R, rank)
+            approx = np.asarray(reconstruct(u, s, vt))
+            u2, s2, vt2 = np.linalg.svd(dense, full_matrices=False)
+            best = (u2[:, :rank] * s2[:rank]) @ vt2[:rank]
+            np.testing.assert_allclose(
+                np.linalg.norm(dense - approx),
+                np.linalg.norm(dense - best), rtol=1e-4)
+
+    def test_truncation_error_decreases_with_rank(self):
+        loras = make_client_loras(k=4, m=40, n=28, seed=3)
+        _, res = fedex_aggregate(loras)
+        dense = np.asarray(res["blk"]["q_proj"])
+        factors = [l["blk"]["q_proj"] for l in loras]
+        L, R = residual_factors(factors)
+        errs = []
+        for rank in (1, 2, 4, 8, 16):
+            u, s, vt = truncated_svd_product(L, R, rank)
+            errs.append(np.linalg.norm(dense - np.asarray(reconstruct(u, s, vt))))
+        assert all(e1 >= e2 - 1e-6 for e1, e2 in zip(errs, errs[1:]))
+        assert errs[-1] < 1e-4  # full rank (k+1)*r=20 > 16 ≥ true rank ≤ 15…
+        # rank (k+1)·r reconstructs exactly
+        u, s, vt = truncated_svd_product(L, R, L.shape[1])
+        assert np.linalg.norm(dense - np.asarray(reconstruct(u, s, vt))) < 1e-4
+
+
+class TestApplyResidual:
+    def test_apply_residual_adds_scaled(self):
+        params = {"blk": {"q_proj": {"kernel": jnp.zeros((24, 16))}}}
+        loras = make_client_loras()
+        _, res = fedex_aggregate(loras)
+        out = apply_residual(params, res, scale=0.5)
+        np.testing.assert_allclose(out["blk"]["q_proj"]["kernel"],
+                                   0.5 * res["blk"]["q_proj"], rtol=1e-6)
+
+    def test_fedex_svd_aggregate_full_rank_is_exact(self):
+        loras = make_client_loras()
+        g, res_t = fedex_svd_aggregate(loras, svd_rank=(len(loras) + 1) * 4)
+        _, res = fedex_aggregate(loras)
+        np.testing.assert_allclose(res_t["blk"]["q_proj"], res["blk"]["q_proj"],
+                                   rtol=1e-4, atol=1e-5)

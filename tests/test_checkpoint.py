@@ -1,0 +1,52 @@
+"""Checkpoint roundtrip tests (flat-path npz, bf16-aware)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.util.tree import tree_allclose
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "layers": {"attn": {"q_proj": {"kernel": jnp.arange(12.0).reshape(3, 4)}}},
+        "scale": jnp.asarray([1.0, 2.0]),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    p = str(tmp_path / "ckpt.npz")
+    save_checkpoint(p, tree, meta={"round": 3, "method": "fedex"})
+    loaded, meta = load_checkpoint(p)
+    assert meta == {"round": 3, "method": "fedex"}
+    assert tree_allclose(tree, loaded)
+    assert loaded["step"].dtype == jnp.int32
+
+
+def test_bf16_preserved(tmp_path):
+    tree = {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16)}
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree)
+    loaded, _ = load_checkpoint(p)
+    assert loaded["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(loaded["w"], np.float32),
+                               np.asarray(tree["w"], np.float32))
+
+
+def test_federated_round_state(tmp_path):
+    """Save/restore of (W0, lora, round meta) — the server's checkpoint."""
+    from repro.configs import LoRAConfig, get_config
+    from repro.core import init_lora
+    from repro.models import build_model
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    lora = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=2))
+    p = str(tmp_path / "server.npz")
+    save_checkpoint(p, {"params": params, "lora": lora},
+                    meta={"round": 5, "method": "fedex"})
+    loaded, meta = load_checkpoint(p)
+    assert meta["round"] == 5
+    assert tree_allclose(params, loaded["params"])
+    assert tree_allclose(lora, loaded["lora"])

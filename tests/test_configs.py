@@ -1,0 +1,80 @@
+"""Config registry + assigned-architecture spec conformance tests."""
+
+import pytest
+
+from repro.configs import ASSIGNED, SHAPES, get_config, get_shape, list_configs
+
+# the assignment table, verbatim
+SPEC = {
+    "whisper-medium": dict(L=24, d=1024, H=16, KV=16, ff=4096, V=51865),
+    "starcoder2-15b": dict(L=40, d=6144, H=48, KV=4, ff=24576, V=49152),
+    "granite-8b": dict(L=36, d=4096, H=32, KV=8, ff=14336, V=49152),
+    "mixtral-8x22b": dict(L=56, d=6144, H=48, KV=8, ff=16384, V=32768, E=8, topk=2),
+    "zamba2-7b": dict(L=81, d=3584, H=32, KV=32, ff=14336, V=32000, ssm=64),
+    "gemma3-12b": dict(L=48, d=3840, H=16, KV=8, ff=15360, V=262144),
+    "internvl2-76b": dict(L=80, d=8192, H=64, KV=8, ff=28672, V=128256),
+    "deepseek-v2-236b": dict(L=60, d=5120, H=128, KV=128, ff=1536, V=102400,
+                             E=160, topk=6, kv_lora=512),
+    "xlstm-1.3b": dict(L=48, d=2048, H=4, KV=4, ff=0, V=50304),
+    "qwen2.5-3b": dict(L=36, d=2048, H=16, KV=2, ff=11008, V=151936),
+}
+
+
+def test_all_assigned_registered():
+    assert set(SPEC) == set(ASSIGNED)
+    for name in SPEC:
+        assert name in list_configs()
+
+
+@pytest.mark.parametrize("name", list(SPEC))
+def test_exact_assignment_values(name):
+    cfg = get_config(name)
+    s = SPEC[name]
+    assert cfg.num_layers == s["L"]
+    assert cfg.d_model == s["d"]
+    assert cfg.num_heads == s["H"]
+    assert cfg.num_kv_heads == s["KV"]
+    assert cfg.d_ff == s["ff"]
+    assert cfg.vocab_size == s["V"]
+    if "E" in s:
+        assert cfg.num_experts == s["E"]
+        assert cfg.num_experts_per_tok == s["topk"]
+    if "ssm" in s:
+        assert cfg.ssm_state == s["ssm"]
+    if "kv_lora" in s:
+        assert cfg.kv_lora_rank == s["kv_lora"]
+    assert cfg.source, "config must cite its source"
+
+
+def test_shapes_match_assignment():
+    assert get_shape("train_4k").seq_len == 4096
+    assert get_shape("train_4k").global_batch == 256
+    assert get_shape("prefill_32k").seq_len == 32768
+    assert get_shape("prefill_32k").global_batch == 32
+    assert get_shape("decode_32k").global_batch == 128
+    assert get_shape("long_500k").seq_len == 524288
+    assert get_shape("long_500k").global_batch == 1
+    assert get_shape("decode_32k").is_decode and get_shape("long_500k").is_decode
+
+
+@pytest.mark.parametrize("name", list(SPEC))
+def test_reduced_variant_bounds(name):
+    r = get_config(name).reduced()
+    assert r.num_layers <= 2 and r.d_model <= 512 and r.num_experts <= 4
+
+
+def test_smoke_suffix_lookup():
+    assert get_config("qwen2.5-3b-smoke").d_model <= 512
+
+
+def test_unknown_raises():
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")
+    with pytest.raises(KeyError):
+        get_shape("nonexistent-shape")
+
+
+def test_long_context_support_flags():
+    """DESIGN §4: who runs long_500k."""
+    runs = {n for n in ASSIGNED if get_config(n).supports_long_context}
+    assert runs == {"mixtral-8x22b", "zamba2-7b", "gemma3-12b", "xlstm-1.3b"}

@@ -1,0 +1,139 @@
+"""Dry-run machinery smoke tests.
+
+The full 512-device production dry-run is exercised by launch/dryrun.py (run
+separately — results in EXPERIMENTS.md). Here we verify the machinery end to
+end in a SUBPROCESS with 8 forced host devices (so the main test process keeps
+its single real CPU device), plus in-process unit checks of the pieces.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config, get_shape
+from repro.launch.dryrun import should_skip
+from repro.launch.hlo_analysis import analyze
+from repro.launch.roofline import active_params, model_flops_per_step
+from repro.launch.steps import input_specs
+
+
+class TestInputSpecs:
+    def test_train_shape(self):
+        cfg = get_config("qwen2.5-3b")
+        b = input_specs(cfg, get_shape("train_4k"))
+        assert b["tokens"].shape == (256, 4096)
+        assert set(b) == {"tokens", "targets", "loss_mask"}
+
+    def test_vlm_budget_includes_vision(self):
+        cfg = get_config("internvl2-76b")
+        b = input_specs(cfg, get_shape("train_4k"))
+        assert b["vision_embeds"].shape == (256, 256, 8192)
+        assert b["tokens"].shape[1] + 256 == 4096
+
+    def test_encdec_frames(self):
+        cfg = get_config("whisper-medium")
+        b = input_specs(cfg, get_shape("prefill_32k"))
+        assert b["frames"].shape == (32, 1500, 1024)
+
+    def test_decode_is_single_token(self):
+        cfg = get_config("granite-8b")
+        b = input_specs(cfg, get_shape("decode_32k"))
+        assert b["tokens"].shape == (128, 1)
+
+
+class TestSkips:
+    def test_full_attention_skips_500k(self):
+        assert should_skip(get_config("granite-8b"), get_shape("long_500k"))
+        assert should_skip(get_config("deepseek-v2-236b"), get_shape("long_500k"))
+
+    def test_subquadratic_runs_500k(self):
+        for n in ("mixtral-8x22b", "zamba2-7b", "gemma3-12b", "xlstm-1.3b"):
+            assert should_skip(get_config(n), get_shape("long_500k")) is None
+
+    def test_nothing_else_skips(self):
+        for name in ASSIGNED:
+            for sh in ("train_4k", "prefill_32k", "decode_32k"):
+                assert should_skip(get_config(name), get_shape(sh)) is None
+
+
+class TestHloAnalysis:
+    def test_loop_aware_flops(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.dot(c, w), None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        compiled = jax.jit(f).lower(s, s).compile()
+        costs = analyze(compiled.as_text())
+        assert costs.flops == pytest.approx(2 * 64**3 * 7, rel=0.01)
+
+    def test_model_flops_sane(self):
+        """6·N·D within 2× of a hand count for a dense config."""
+        cfg = get_config("granite-8b")
+        n = active_params(cfg)
+        assert 7e9 < n < 10e9  # granite-8b ≈ 8B
+        f = model_flops_per_step(cfg, get_shape("train_4k"))
+        assert f == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+
+    def test_moe_active_params(self):
+        """deepseek-v2: 236B total but ~21B active."""
+        cfg = get_config("deepseek-v2-236b")
+        n = active_params(cfg)
+        assert 1.2e10 < n < 3.5e10
+
+
+SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, json
+    from repro.configs import get_config, LoRAConfig, TrainConfig
+    from repro.launch.steps import (abstract_state, input_specs, make_train_step)
+    from repro.models import build_model
+    from repro.sharding import batch_spec, param_spec, tree_shardings, data_axes
+    from repro.optim.adamw import AdamWState
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import dataclasses
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_config("qwen2.5-3b").reduced()
+    cfg = dataclasses.replace(cfg, vocab_size=256)
+    model = build_model(cfg)
+    lcfg = LoRAConfig(rank=4)
+    params, lora, opt = abstract_state(model, cfg, lcfg)
+    import repro.configs.base as base
+    shape = base.ShapeConfig(name="t", seq_len=64, global_batch=8, kind="train")
+    batch = input_specs(cfg, shape)
+
+    p_sh = tree_shardings(params, mesh, param_spec)
+    l_sh = tree_shardings(lora, mesh, param_spec)
+    o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                      mu=tree_shardings(opt.mu, mesh, param_spec),
+                      nu=tree_shardings(opt.nu, mesh, param_spec))
+    b_sh = tree_shardings(batch, mesh, batch_spec, data_axes(mesh))
+    step = make_train_step(model, lcfg, TrainConfig(total_steps=10), 2)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(p_sh, l_sh, o_sh, b_sh,
+                                              NamedSharding(mesh, P()))).lower(
+            params, lora, opt, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    print(json.dumps({"ok": True, "devices": len(jax.devices())}))
+""")
+
+
+def test_sharded_train_step_compiles_subprocess():
+    """End-to-end: 8 host devices, 2D-sharded reduced model, lower+compile."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SUBPROCESS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-2000:]}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["devices"] == 8

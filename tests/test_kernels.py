@@ -1,0 +1,128 @@
+"""Per-kernel allclose sweeps against the ref.py oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fedex_fold, lora_dense, swa_attention
+from repro.kernels import ref
+from repro.kernels.fedex_residual import fedex_residual_apply
+from repro.kernels.flash_swa import flash_swa
+from repro.kernels.lora_matmul import lora_matmul
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+class TestLoraMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                       (128, 256, 512)])
+    @pytest.mark.parametrize("r", [1, 4, 16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, m, k, n, r, dtype):
+        rng = np.random.default_rng(hash((m, k, n, r, str(dtype))) % 2**31)
+        x = _rand(rng, (m, k), dtype)
+        w = _rand(rng, (k, n), dtype)
+        a = _rand(rng, (k, r), dtype)
+        b = _rand(rng, (r, n), dtype)
+        y = lora_matmul(x, w, a, b, scale=0.7, interpret=True)
+        yr = ref.lora_matmul_ref(x, w, a, b, 0.7)
+        tol = 2e-5 if dtype == jnp.float32 else 4e-2
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=tol, atol=tol * np.abs(np.asarray(yr)).max())
+
+    def test_scale_zero_is_base_matmul(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (128, 128), jnp.float32)
+        w = _rand(rng, (128, 128), jnp.float32)
+        a = _rand(rng, (128, 4), jnp.float32)
+        b = _rand(rng, (4, 128), jnp.float32)
+        y = lora_matmul(x, w, a, b, scale=0.0, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_wrapper_handles_leading_dims(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (2, 4, 128), jnp.float32)
+        w = _rand(rng, (128, 256), jnp.float32)
+        a = _rand(rng, (128, 8), jnp.float32)
+        b = _rand(rng, (8, 256), jnp.float32)
+        y = lora_dense(x, w, a, b, 0.5)
+        yr = ref.lora_matmul_ref(x.reshape(-1, 128), w, a, b, 0.5).reshape(2, 4, 256)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-3)
+
+
+class TestFedexResidual:
+    @pytest.mark.parametrize("c", [1, 3, 8])
+    @pytest.mark.parametrize("m,n", [(256, 256), (512, 256), (256, 1024)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, c, m, n, dtype):
+        rng = np.random.default_rng(hash((c, m, n, str(dtype))) % 2**31)
+        r = 4
+        w0 = _rand(rng, (m, n), dtype)
+        a = _rand(rng, (c, m, r), dtype)
+        b = _rand(rng, (c, r, n), dtype)
+        out = fedex_residual_apply(w0, a, b, scale=2.0, interpret=True)
+        outr = ref.fedex_residual_ref(w0, a, b, 2.0)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                                   rtol=tol, atol=tol * max(1.0, np.abs(np.asarray(outr)).max()))
+
+    def test_matches_aggregation_module(self):
+        """Kernel result == core.aggregation residual + fold (the jnp path)."""
+        from repro.core import apply_residual, fedex_aggregate
+        rng = np.random.default_rng(7)
+        m, r, n, c = 256, 4, 256, 3
+        w0 = _rand(rng, (m, n), jnp.float32)
+        loras = [{"w": {"a": _rand(rng, (m, r), jnp.float32),
+                        "b": _rand(rng, (r, n), jnp.float32)}} for _ in range(c)]
+        _, res = fedex_aggregate(loras)
+        host = apply_residual({"w": {"kernel": w0}}, res, 1.5)["w"]["kernel"]
+        a = jnp.stack([l["w"]["a"] for l in loras])
+        b = jnp.stack([l["w"]["b"] for l in loras])
+        kern = fedex_fold(w0, a, b, 1.5)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(host),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFlashSWA:
+    @pytest.mark.parametrize("s", [128, 256, 512])
+    @pytest.mark.parametrize("window", [0, 64, 200])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, s, window, dtype):
+        rng = np.random.default_rng(hash((s, window, str(dtype))) % 2**31)
+        bh, d = 4, 64
+        q = _rand(rng, (bh, s, d), dtype)
+        k = _rand(rng, (bh, s, d), dtype)
+        v = _rand(rng, (bh, s, d), dtype)
+        out = flash_swa(q, k, v, causal=True, window=window, bq=128, bk=128,
+                        interpret=True)
+        outr = ref.flash_swa_ref(q, k, v, causal=True, window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(outr),
+                                   rtol=tol, atol=tol * 2)
+
+    def test_non_causal(self):
+        rng = np.random.default_rng(3)
+        q = _rand(rng, (2, 128, 64), jnp.float32)
+        k = _rand(rng, (2, 128, 64), jnp.float32)
+        v = _rand(rng, (2, 128, 64), jnp.float32)
+        out = flash_swa(q, k, v, causal=False, interpret=True)
+        outr = ref.flash_swa_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gqa_wrapper(self):
+        rng = np.random.default_rng(4)
+        b, s, h, kv, d = 2, 256, 8, 2, 64
+        q = _rand(rng, (b, s, h, d), jnp.float32)
+        k = _rand(rng, (b, s, kv, d), jnp.float32)
+        v = _rand(rng, (b, s, kv, d), jnp.float32)
+        out = swa_attention(q, k, v, causal=True, window=100)
+        from repro.models.attention import blockwise_attention
+        bw = blockwise_attention(q, k, v, causal=True, window=100, block_size=128)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(bw),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,110 @@
+"""LoRA adapter-tree construction, target resolution, merge semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LoRAConfig, get_config
+from repro.core import init_lora, lora_param_count, merge_lora, resolve_targets
+from repro.data import make_batch_for
+from repro.models import build_model
+from repro.util.tree import flatten_with_paths
+
+
+def _f32(name):
+    return dataclasses.replace(get_config(name).reduced(), dtype="float32")
+
+
+class TestInit:
+    def test_structure_mirrors_params(self):
+        cfg = _f32("granite-8b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=4))
+        flat = flatten_with_paths(lora)
+        # every adapter leaf path must exist in params with matching lead dims
+        pflat = flatten_with_paths(params)
+        for path in flat:
+            base = path.rsplit("/", 1)[0]  # strip /a or /b
+            assert base + "/kernel" in pflat, path
+        # stacked layers: factors carry the layer axis
+        a = lora["layers"]["attn"]["q_proj"]["a"]
+        assert a.shape[0] == cfg.num_layers
+        assert a.shape[-1] == 4
+
+    def test_b_initialized_zero(self):
+        cfg = _f32("qwen2.5-3b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=2))
+        for path, leaf in flatten_with_paths(lora).items():
+            if path.endswith("/b"):
+                np.testing.assert_allclose(np.asarray(leaf), 0.0)
+
+    def test_include_mlp_adds_targets(self):
+        cfg = _f32("granite-8b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        small = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=2))
+        big = init_lora(jax.random.key(1), params, cfg,
+                        LoRAConfig(rank=2, include_mlp=True))
+        assert lora_param_count(big) > lora_param_count(small)
+        assert "mlp" in big["layers"]
+
+    @pytest.mark.parametrize("name", ["zamba2-7b", "xlstm-1.3b", "deepseek-v2-236b",
+                                      "whisper-medium", "mixtral-8x22b"])
+    def test_family_targets_nonempty(self, name):
+        cfg = _f32(name)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=2))
+        assert lora_param_count(lora) > 0
+        assert len(resolve_targets(cfg, LoRAConfig())) > 0
+
+    def test_expert_lora_flag(self):
+        cfg = _f32("mixtral-8x22b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg,
+                         LoRAConfig(rank=2, lora_experts=True, include_mlp=True))
+        flat = flatten_with_paths(lora)
+        expert_paths = [p for p in flat if "/experts/" in p]
+        assert expert_paths, "per-expert adapters missing"
+        # per-expert factors carry (L, E, …)
+        a = flat[[p for p in expert_paths if p.endswith("up_proj/a")][0]]
+        assert a.shape[1] == cfg.num_experts
+
+
+class TestMergeAndForwardEquivalence:
+    @pytest.mark.parametrize("name", ["qwen2.5-3b", "granite-8b"])
+    def test_adapter_apply_equals_merged(self, name):
+        """forward(W0, lora) == forward(W0 + scale·ab, no lora)."""
+        cfg = _f32(name)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lcfg = LoRAConfig(rank=4, alpha=8)
+        lora = init_lora(jax.random.key(1), params, cfg, lcfg)
+        # give b nonzero values so the adapter does something
+        lora = jax.tree.map(
+            lambda x: x + 0.02 * jax.random.normal(jax.random.key(7), x.shape), lora)
+        batch = make_batch_for(cfg, 2, 16, seed=0)
+        logits_adapter, _ = model.apply(params, batch, lora=lora,
+                                        lora_scale=lcfg.scale)
+        merged = merge_lora(params, lora, lcfg.scale)
+        logits_merged, _ = model.apply(merged, batch)
+        np.testing.assert_allclose(np.asarray(logits_adapter),
+                                   np.asarray(logits_merged), rtol=2e-3, atol=2e-3)
+
+    def test_zero_b_is_noop(self):
+        cfg = _f32("qwen2.5-3b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg, LoRAConfig(rank=4))
+        batch = make_batch_for(cfg, 2, 16, seed=0)
+        with_lora, _ = model.apply(params, batch, lora=lora, lora_scale=2.0)
+        without, _ = model.apply(params, batch)
+        np.testing.assert_allclose(np.asarray(with_lora), np.asarray(without),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,87 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    fedex_aggregate,
+    fedit_aggregate,
+    ffa_aggregate,
+    product_mean,
+    residual_factors,
+)
+
+_dims = st.integers(min_value=1, max_value=24)
+_rank = st.integers(min_value=1, max_value=6)
+_clients = st.integers(min_value=1, max_value=6)
+_seed = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mk(k, m, r, n, seed, same_a=False):
+    rng = np.random.default_rng(seed)
+    a0 = rng.normal(size=(m, r))
+    out = []
+    for i in range(k):
+        a = a0 if same_a else rng.normal(size=(m, r))
+        out.append({"w": {"a": jnp.asarray(a, jnp.float32),
+                          "b": jnp.asarray(rng.normal(size=(r, n)), jnp.float32)}})
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=_clients, m=_dims, r=_rank, n=_dims, seed=_seed)
+def test_fedex_exact_for_any_shape(k, m, r, n, seed):
+    """Paper Eq. 7–9 holds for EVERY (k, m, r, n)."""
+    loras = _mk(k, m, r, n, seed)
+    g, res = fedex_aggregate(loras)
+    ideal = product_mean(loras)["w"]
+    got = jnp.matmul(g["w"]["a"], g["w"]["b"]) + res["w"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ideal),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=_clients, m=_dims, r=_rank, n=_dims, seed=_seed)
+def test_residual_rank_bound(k, m, r, n, seed):
+    """rank(ΔW_res) ≤ (k+1)·r — the communication-protocol guarantee."""
+    loras = _mk(k, m, r, n, seed)
+    _, res = fedex_aggregate(loras)
+    rank = np.linalg.matrix_rank(np.asarray(res["w"]), tol=1e-4)
+    assert rank <= min((k + 1) * r, m, n)
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(min_value=2, max_value=6), m=_dims, r=_rank, n=_dims, seed=_seed)
+def test_ffa_is_exact_when_a_shared(k, m, r, n, seed):
+    """FFA-LoRA: with identical a, factor averaging IS exact (zero residual)."""
+    loras = _mk(k, m, r, n, seed, same_a=True)
+    g = ffa_aggregate(loras)
+    ideal = product_mean(loras)["w"]
+    got = jnp.matmul(g["w"]["a"], g["w"]["b"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ideal),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=_clients, m=_dims, r=_rank, n=_dims, seed=_seed)
+def test_factored_residual_lossless(k, m, r, n, seed):
+    loras = _mk(k, m, r, n, seed)
+    _, res = fedex_aggregate(loras)
+    L, R = residual_factors([l["w"] for l in loras])
+    np.testing.assert_allclose(np.asarray(L @ R), np.asarray(res["w"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=_dims, r=_rank, n=_dims, seed=_seed, scale=st.floats(0.1, 10.0))
+def test_fedit_scale_invariant_deviation(m, r, n, seed, scale):
+    """Deviation is bilinear: scaling all factors by s scales ΔW_res by s²."""
+    loras = _mk(3, m, r, n, seed)
+    _, res1 = fedex_aggregate(loras)
+    scaled = jax.tree.map(lambda x: x * jnp.sqrt(scale), loras)
+    _, res2 = fedex_aggregate(scaled)
+    np.testing.assert_allclose(np.asarray(res2["w"]),
+                               scale * np.asarray(res1["w"]),
+                               rtol=5e-3, atol=5e-3)
