@@ -16,6 +16,7 @@ from benchmarks import (
     fig3_divergence_rounds,
     kernels_bench,
     roofline_report,
+    scenarios_participation,
     table5_assignment,
     table6_comm,
     table9_rank_sweep,
@@ -31,6 +32,7 @@ SUITES = {
     "fig3": fig3_divergence_rounds,
     "kernels": kernels_bench,
     "roofline": roofline_report,
+    "participation": scenarios_participation,
 }
 
 

@@ -39,4 +39,15 @@ def run(quick: bool = False) -> List[str]:
         ok = (ratios["full_ft"] > 2.0 and ratios["fedit"] < 1.0
               and ratios["ffa"] < ratios["fedit"])
         rows.append(csv_row(f"table6/{cfg.name}/orderings", 0.0, f"holds={ok}"))
+        # beyond-paper: cross-device regime — FedEx traffic vs participation
+        # fraction (k=20 fleet; fedsrv samples ⌈f·k⌉ clients per round).
+        full = comm_table(cfg, lcfg, k=20, rounds=5,
+                          participation_fraction=1.0)["fedex"]["params"]
+        parts = []
+        for frac in (0.1, 0.5, 1.0):
+            t = comm_table(cfg, lcfg, k=20, rounds=5,
+                           participation_fraction=frac)
+            parts.append(f"p{int(frac * 100)}={t['fedex']['params'] / full:.3f}")
+        rows.append(csv_row(f"table6/{cfg.name}/participation", 0.0,
+                            ";".join(parts)))
     return rows

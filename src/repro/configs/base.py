@@ -191,6 +191,19 @@ class FedConfig:
     dp_noise_multiplier: float = 0.0  # Gaussian σ = multiplier · clip
     # heterogeneous client ranks (paper §6 open problem; core/hetero.py):
     client_ranks: Tuple[int, ...] = ()  # non-empty → method "fedex_hetero"
+    # --- fedsrv coordinator (partial participation / stragglers / async) ---
+    participation: float = 1.0  # fraction of clients sampled per round
+    min_quorum: int = 0  # deliveries needed before the deadline cuts (0 → 1)
+    round_deadline: float = 0.0  # sim-seconds; 0 → wait for every non-dropout
+    weighting: str = "uniform"  # uniform | examples (wᵢ = nᵢ/Σnⱼ)
+    mean_latency: float = 1.0  # straggler model: fleet-baseline sim-seconds
+    latency_jitter: float = 0.25  # lognormal σ on client latency
+    dropout_prob: float = 0.0  # P(client accepts round, never reports)
+    straggler_prob: float = 0.0  # P(latency × straggler_factor)
+    straggler_factor: float = 5.0
+    async_buffer: int = 0  # >0 → FedBuff-style commits of this buffer size
+    staleness_alpha: float = 0.5  # async: weight ∝ (1+staleness)^(−α)
+    quantize_uplink: str = "none"  # none | fp16 | int8 adapter uplink codec
 
 
 @dataclass(frozen=True)

@@ -10,6 +10,7 @@ from repro.core.aggregation import (
     fedit_aggregate,
     ffa_aggregate,
     map_factors,
+    normalize_weights,
     per_client_residuals,
     product_mean,
     tree_mean,
@@ -45,6 +46,7 @@ __all__ = [
     "map_factors",
     "mean_deviation",
     "merge_lora",
+    "normalize_weights",
     "per_client_residuals",
     "product_mean",
     "reconstruct",

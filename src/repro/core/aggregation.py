@@ -15,6 +15,12 @@ possibly with leading stacked-layer axes — ``jnp.matmul`` batches over them).
 * assignment strategies (§6, Table 5): ``average`` (FedEx), ``keep_local``,
   ``reinit`` — all exact, different post-aggregation (aᵢ, bᵢ).
 
+Every operator accepts optional per-client ``weights`` (e.g. example counts
+``wᵢ = nᵢ/Σnⱼ`` over the round's *participating subset* — fedsrv/). The
+residual identity ``Σwᵢ aᵢbᵢ = ā b̄ + ΔW_res`` with ``ā = Σwᵢaᵢ`` stays exact
+for any normalized weights: ΔW_res is *defined* as the difference. ``weights
+= None`` (or uniform) takes the historical ``sum/k`` path bit-for-bit.
+
 The mesh-collective twin of ``fedex`` (psum-mean over a client axis inside a
 pjit'd program) lives in launch/train.py; THIS module is the mathematical
 ground truth both paths share.
@@ -22,21 +28,52 @@ ground truth both paths share.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Params = Dict[str, Any]
 
+Weights = Optional[Sequence[float]]
+
+
+def normalize_weights(weights: Weights, k: int) -> Optional[List[float]]:
+    """Validate + normalize client weights to sum 1.
+
+    Returns ``None`` for the uniform case (including ``weights=None`` and any
+    all-equal vector) so callers can take the historical ``sum/k`` path, which
+    keeps uniform aggregation bitwise identical to the unweighted operators.
+    """
+    if weights is None:
+        return None
+    w = [float(x) for x in weights]
+    if len(w) != k:
+        raise ValueError(f"got {len(w)} weights for {k} clients")
+    if any(x < 0 for x in w):
+        raise ValueError(f"negative client weight in {w}")
+    total = sum(w)
+    if total <= 0:
+        raise ValueError(f"client weights sum to {total}; need > 0")
+    w = [x / total for x in w]
+    if all(x == w[0] for x in w):
+        return None  # uniform → legacy path
+    return w
+
 
 # --------------------------------------------------------------------------
 # tree utilities
 # --------------------------------------------------------------------------
 
-def tree_mean(trees: List[Params]) -> Params:
+def tree_mean(trees: List[Params], weights: Weights = None) -> Params:
     k = len(trees)
-    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / k, *trees)
+    w = normalize_weights(weights, k)
+    if w is None:
+        return jax.tree.map(
+            lambda *xs: sum(x.astype(jnp.float32) for x in xs) / k, *trees)
+    return jax.tree.map(
+        lambda *xs: sum(wi * x.astype(jnp.float32) for wi, x in zip(w, xs)),
+        *trees)
 
 
 def _is_factor(node: Any) -> bool:
@@ -60,50 +97,60 @@ def map_factors(fn, *trees: Params) -> Params:
 # aggregation operators
 # --------------------------------------------------------------------------
 
-def fedit_aggregate(client_loras: List[Params]) -> Params:
+def fedit_aggregate(client_loras: List[Params], weights: Weights = None) -> Params:
     """FedAvg of A and B independently (Eq. 3). Inexact (Eq. 4)."""
-    return tree_mean(client_loras)
+    return tree_mean(client_loras, weights)
 
 
-def product_mean(client_loras: List[Params]) -> Params:
-    """Ideal update per factor: mean_i(aᵢ @ bᵢ)  (full-rank tree)."""
+def product_mean(client_loras: List[Params], weights: Weights = None) -> Params:
+    """Ideal update per factor: Σwᵢ aᵢ @ bᵢ (full-rank tree; uniform default)."""
     k = len(client_loras)
+    w = normalize_weights(weights, k)
 
     def fn(*factors):
-        return sum(jnp.matmul(f["a"].astype(jnp.float32), f["b"].astype(jnp.float32))
-                   for f in factors) / k
+        prods = (jnp.matmul(f["a"].astype(jnp.float32), f["b"].astype(jnp.float32))
+                 for f in factors)
+        if w is None:
+            return sum(prods) / k
+        return sum(wi * p for wi, p in zip(w, prods))
 
     return map_factors(fn, *client_loras)
 
 
 def fedex_residual(client_loras: List[Params],
-                   global_lora: Optional[Params] = None) -> Params:
-    """ΔW_res = mean_i(aᵢ bᵢ) − ā b̄ per factor (Eq. 12), f32."""
+                   global_lora: Optional[Params] = None,
+                   weights: Weights = None) -> Params:
+    """ΔW_res = Σwᵢ aᵢbᵢ − ā b̄ per factor (Eq. 12; uniform wᵢ=1/k), f32."""
     if global_lora is None:
-        global_lora = fedit_aggregate(client_loras)
+        global_lora = fedit_aggregate(client_loras, weights)
     k = len(client_loras)
+    w = normalize_weights(weights, k)
 
     def fn(g, *factors):
-        mean_prod = sum(jnp.matmul(f["a"].astype(jnp.float32),
-                                   f["b"].astype(jnp.float32)) for f in factors) / k
+        prods = (jnp.matmul(f["a"].astype(jnp.float32),
+                            f["b"].astype(jnp.float32)) for f in factors)
+        if w is None:
+            mean_prod = sum(prods) / k
+        else:
+            mean_prod = sum(wi * p for wi, p in zip(w, prods))
         prod_mean = jnp.matmul(g["a"].astype(jnp.float32), g["b"].astype(jnp.float32))
         return mean_prod - prod_mean
 
     return map_factors(fn, global_lora, *client_loras)
 
 
-def fedex_aggregate(client_loras: List[Params]
+def fedex_aggregate(client_loras: List[Params], weights: Weights = None
                     ) -> Tuple[Params, Params]:
-    """Returns (global_lora, residual_tree). Eq. 11–12."""
-    global_lora = fedit_aggregate(client_loras)
-    residual = fedex_residual(client_loras, global_lora)
+    """Returns (global_lora, residual_tree). Eq. 11–12, weighted per §fedsrv."""
+    global_lora = fedit_aggregate(client_loras, weights)
+    residual = fedex_residual(client_loras, global_lora, weights)
     return global_lora, residual
 
 
-def fedex_svd_aggregate(client_loras: List[Params], svd_rank: int
-                        ) -> Tuple[Params, Params]:
+def fedex_svd_aggregate(client_loras: List[Params], svd_rank: int,
+                        weights: Weights = None) -> Tuple[Params, Params]:
     """FedEx with rank-r' truncated residual (Eq. 15–16, Eckart–Young optimal)."""
-    global_lora, residual = fedex_aggregate(client_loras)
+    global_lora, residual = fedex_aggregate(client_loras, weights)
 
     def trunc(r):
         if r.ndim == 2:
@@ -116,11 +163,11 @@ def fedex_svd_aggregate(client_loras: List[Params], svd_rank: int
     return global_lora, residual_trunc
 
 
-def ffa_aggregate(client_loras: List[Params]) -> Params:
+def ffa_aggregate(client_loras: List[Params], weights: Weights = None) -> Params:
     """FFA-LoRA: a is frozen (identical across clients) → average b only.
     Averaging a too is a no-op but keeps the code uniform; aggregation is
-    exact because mean(a bᵢ) = a mean(bᵢ)."""
-    return tree_mean(client_loras)
+    exact (for any weights) because Σwᵢ a bᵢ = a Σwᵢbᵢ."""
+    return tree_mean(client_loras, weights)
 
 
 # --------------------------------------------------------------------------
@@ -131,17 +178,18 @@ def assign_after_aggregation(
     strategy: str,
     client_loras: List[Params],
     rng: Optional[jax.Array] = None,
+    weights: Weights = None,
 ) -> Tuple[List[Params], Params]:
     """Returns (per-client new adapters, residual to fold into W0).
 
     Every strategy is EXACT: residual is chosen so that for each client
-    ``W0 + scale·(residual + aᵢ_new bᵢ_new) = W0 + scale·mean(aᵢ bᵢ)``.
+    ``W0 + scale·(residual + aᵢ_new bᵢ_new) = W0 + scale·Σwⱼ aⱼbⱼ``.
     """
     k = len(client_loras)
-    ideal = product_mean(client_loras)
+    ideal = product_mean(client_loras, weights)
 
     if strategy == "average":  # FedEx-LoRA
-        global_lora, residual = fedex_aggregate(client_loras)
+        global_lora, residual = fedex_aggregate(client_loras, weights)
         return [global_lora] * k, residual
 
     if strategy == "keep_local":
@@ -153,15 +201,21 @@ def assign_after_aggregation(
         # residual so the caller can apply per-client offsets where supported.
         # residual returned is for client 0's view; federated.py handles
         # per-client residuals for this strategy.
-        return list(client_loras), per_client_residuals(client_loras)[0]
+        return list(client_loras), per_client_residuals(client_loras, weights)[0]
 
     if strategy == "reinit":
         if rng is None:
             rng = jax.random.key(0)
 
+        # fold-in key = stable per-leaf counter over the (deterministic,
+        # insertion-ordered) factor traversal — NOT hash(str(shape)), which
+        # varies across processes under PYTHONHASHSEED.
+        counter = [0]
+
         def reinit(factor):
+            counter[0] += 1
             a = jax.random.normal(
-                jax.random.fold_in(rng, hash(str(factor["a"].shape)) % (2**31)),
+                jax.random.fold_in(rng, counter[0]),
                 factor["a"].shape, jnp.float32) * 0.02
             return {"a": a, "b": jnp.zeros_like(factor["b"])}
 
@@ -172,9 +226,10 @@ def assign_after_aggregation(
     raise ValueError(f"unknown assignment strategy {strategy!r}")
 
 
-def per_client_residuals(client_loras: List[Params]) -> List[Params]:
-    """keep_local strategy: residual_i = mean(a b) − aᵢ bᵢ for every client."""
-    ideal = product_mean(client_loras)
+def per_client_residuals(client_loras: List[Params],
+                         weights: Weights = None) -> List[Params]:
+    """keep_local strategy: residual_i = Σwⱼaⱼbⱼ − aᵢ bᵢ for every client."""
+    ideal = product_mean(client_loras, weights)
     out = []
     for i in range(len(client_loras)):
         def fn(factor, ideal_leaf):

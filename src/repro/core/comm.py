@@ -14,6 +14,7 @@ methods: k · Σ (m·r + r·n). Downlink differs:
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
@@ -50,43 +51,65 @@ def adapted_matrices(cfg, lora_cfg) -> List[MatrixSpec]:
     return out
 
 
+def participating_clients(k: int, participation_fraction: float,
+                          min_clients: int = 1) -> int:
+    """⌈fraction·k⌉ clamped to [min_clients, k] — matches fedsrv's round
+    sampler (pass min_clients = the coordinator's min_quorum to stay aligned
+    when the quorum floor exceeds the sampled fraction)."""
+    if not 0.0 < participation_fraction <= 1.0:
+        raise ValueError(f"participation_fraction must be in (0, 1], "
+                         f"got {participation_fraction}")
+    return min(k, max(1, min_clients, math.ceil(participation_fraction * k)))
+
+
 def round_comm_params(method: str, mats: List[MatrixSpec], r: int, k: int,
-                      svd_rank: int = 0) -> Dict[str, int]:
-    """Parameters communicated in ONE aggregation round."""
+                      svd_rank: int = 0,
+                      participation_fraction: float = 1.0,
+                      min_clients: int = 1) -> Dict[str, int]:
+    """Parameters communicated in ONE aggregation round.
+
+    With partial participation only the k_p = ⌈fraction·k⌉ sampled clients
+    exchange traffic, and the FedEx factored residual's rank bound tightens
+    to (k_p+1)·r — the analytic twin of fedsrv's measured BytesLedger.
+    """
+    k_p = participating_clients(k, participation_fraction, min_clients)
     adapters = sum(ms.m * r + r * ms.n for ms in mats)
     full = sum(ms.m * ms.n for ms in mats)
 
     if method == "full_ft":
-        up = k * full
-        down = k * full
+        up = k_p * full
+        down = k_p * full
     elif method == "fedit":
-        up = k * adapters
-        down = k * adapters
+        up = k_p * adapters
+        down = k_p * adapters
     elif method == "ffa":
         b_only = sum(r * ms.n for ms in mats)
-        up = k * b_only
-        down = k * b_only
+        up = k_p * b_only
+        down = k_p * b_only
     elif method == "fedex":
-        up = k * adapters
-        residual = sum(factored_residual_params(ms.m, ms.n, r, k) for ms in mats)
-        down = k * (adapters + residual)
+        up = k_p * adapters
+        residual = sum(factored_residual_params(ms.m, ms.n, r, k_p) for ms in mats)
+        down = k_p * (adapters + residual)
     elif method == "fedex_svd":
-        up = k * adapters
+        up = k_p * adapters
         residual = sum(truncated_residual_params(ms.m, ms.n, svd_rank or r)
                        for ms in mats)
-        down = k * (adapters + residual)
+        down = k_p * (adapters + residual)
     else:
         raise ValueError(f"unknown method {method!r}")
     return {"uplink": up, "downlink": down, "total": up + down}
 
 
-def comm_table(cfg, lora_cfg, k: int, rounds: int, svd_rank: int = 0
+def comm_table(cfg, lora_cfg, k: int, rounds: int, svd_rank: int = 0,
+               participation_fraction: float = 1.0
                ) -> Dict[str, Dict[str, float]]:
     """Table-6 style: per-method totals over ``rounds`` + ratio to FedEx."""
     mats = adapted_matrices(cfg, lora_cfg)
     methods = ["full_ft", "fedex", "fedit", "ffa", "fedex_svd"]
-    totals = {m: rounds * round_comm_params(m, mats, lora_cfg.rank, k, svd_rank)["total"]
-              for m in methods}
+    totals = {m: rounds * round_comm_params(
+        m, mats, lora_cfg.rank, k, svd_rank,
+        participation_fraction=participation_fraction)["total"]
+        for m in methods}
     base = totals["fedex"]
     return {m: {"params": totals[m], "ratio_to_fedex": totals[m] / base}
             for m in methods}

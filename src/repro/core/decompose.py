@@ -24,16 +24,27 @@ import jax.numpy as jnp
 Params = Dict[str, Any]
 
 
-def residual_factors(client_factors: List[Params]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def residual_factors(client_factors: List[Params], weights=None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact low-rank factorisation of one matrix's residual.
 
     client_factors: list of {"a": (m, r), "b": (r, n)} (our layout: a=left).
-    Returns (L (m, (k+1)r), R ((k+1)r, n)) with L @ R == ΔW_res.
+    Returns (L (m, (k+1)r), R ((k+1)r, n)) with L @ R == ΔW_res. With
+    non-uniform ``weights`` (fedsrv rounds) the same form stays lossless:
+    ΔW_res = Σwᵢaᵢbᵢ − āb̄ with ā = Σwᵢaᵢ, so L carries wᵢ·aᵢ columns.
     """
+    from repro.core.aggregation import normalize_weights
+
     k = len(client_factors)
-    a_bar = sum(f["a"].astype(jnp.float32) for f in client_factors) / k
-    b_bar = sum(f["b"].astype(jnp.float32) for f in client_factors) / k
-    lefts = [f["a"].astype(jnp.float32) / k for f in client_factors] + [-a_bar]
+    w = normalize_weights(weights, k)
+    if w is None:
+        w = [1.0 / k] * k
+    a_bar = sum(wi * f["a"].astype(jnp.float32)
+                for wi, f in zip(w, client_factors))
+    b_bar = sum(wi * f["b"].astype(jnp.float32)
+                for wi, f in zip(w, client_factors))
+    lefts = [wi * f["a"].astype(jnp.float32)
+             for wi, f in zip(w, client_factors)] + [-a_bar]
     rights = [f["b"].astype(jnp.float32) for f in client_factors] + [b_bar]
     L = jnp.concatenate(lefts, axis=-1)
     R = jnp.concatenate(rights, axis=-2)

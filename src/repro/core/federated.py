@@ -5,6 +5,15 @@ of AdamW on its LoRA adapters per round, followed by server aggregation
 (fedex / fedit / ffa / fedex_svd / centralized) and — for FedEx — the residual
 fold-in ``W0 ← W0 + (α/r)·ΔW_res`` (Eq. 14).
 
+Round *orchestration* is delegated to the fedsrv coordinator (fedsrv/): the
+trainer injects ``train_fn`` (one client's local steps, DP, keep_local base
+selection) and the coordinator decides WHO runs and WHAT arrives — client
+sampling, seeded dropout/stragglers, deadlines, uplink quantization, async
+buffered commits. The seed behavior (all k clients, uniform weights, no
+transport) is exactly the coordinator's trivial policy, bit-for-bit. The
+trainer then dispatches the method-specific CLOSE (aggregation + residual
+fold) over the delivered subset with the round's weights.
+
 This is the *reference orchestration*: one process, clients sequential, every
 client step jit'd. The mesh-parallel launcher (launch/train.py) vmaps clients
 over a mesh axis and replaces the host-side tree arithmetic with collectives —
@@ -99,6 +108,9 @@ class FederatedTrainer:
                                           freeze_a=freeze)
         self.eval_fn = make_eval_fn(self.model, self.scale)
         self.history: List[RoundRecord] = []
+        # fedsrv RoundOutcome per standard round; adapter payloads are kept
+        # only on the LAST entry (older rounds have delivery.lora stripped)
+        self.outcomes: List[Any] = []
         # keep_local assignment needs per-client frozen bases
         self.client_params: Optional[List] = None
         if self.fed_cfg.assignment == "keep_local" and self.method == "fedex":
@@ -115,6 +127,102 @@ class FederatedTrainer:
                           _dc.replace(self.lora_cfg, rank=r))
                 for i, r in enumerate(self.fed_cfg.client_ranks)]
             self.client_params = [self.params] * self.fed_cfg.num_clients
+        self.coordinator = self._build_coordinator()
+
+    def _build_coordinator(self):
+        """fedsrv coordinator from FedConfig; defaults = the trivial policy
+        (all clients, no deadline/dropout, uniform weights, fp32 transport),
+        which reproduces the seed's hard-coded loop bit-for-bit."""
+        from repro.fedsrv import (AdapterCodec, AsyncBufferCoordinator,
+                                  BytesLedger, ClientInfo, ClientRegistry,
+                                  RoundCoordinator, RoundPolicy, StragglerModel)
+
+        fc = self.fed_cfg
+        clients = [
+            ClientInfo(client_id=i, num_examples=len(
+                self.client_loaders[i % len(self.client_loaders)].sequences))
+            for i in range(fc.num_clients)]
+        registry = ClientRegistry(clients, seed=fc.seed)
+        policy = RoundPolicy(participation=fc.participation,
+                             min_quorum=fc.min_quorum,
+                             deadline=fc.round_deadline,
+                             weighting=fc.weighting)
+        stragglers = StragglerModel(
+            mean_latency=fc.mean_latency, jitter=fc.latency_jitter,
+            dropout_prob=fc.dropout_prob, straggler_prob=fc.straggler_prob,
+            straggler_factor=fc.straggler_factor, seed=fc.seed)
+        codec = AdapterCodec(fc.quantize_uplink)
+        self.ledger = BytesLedger()
+        if fc.async_buffer > 0:
+            return AsyncBufferCoordinator(
+                registry, policy, stragglers, codec, self.ledger,
+                buffer_size=fc.async_buffer,
+                staleness_alpha=fc.staleness_alpha)
+        return RoundCoordinator(registry, policy, stragglers, codec, self.ledger)
+
+    # ------------------------------------------------------------------
+    def _close_round(self, rnd: int, outcome, client_loras: List, weights):
+        """Method-specific round close over the delivered subset (weighted)."""
+        k_d = len(client_loras)
+        if self.method == "fedit":
+            self.global_lora = agg.fedit_aggregate(client_loras, weights)
+        elif self.method == "ffa":
+            self.global_lora = agg.ffa_aggregate(client_loras, weights)
+        elif self.method == "fedex_svd":
+            svd_rank = self.fed_cfg.svd_rank or self.lora_cfg.rank * k_d
+            self.global_lora, residual = agg.fedex_svd_aggregate(
+                client_loras, svd_rank, weights)
+            self.params = agg.apply_residual(self.params, residual, self.scale)
+            self._ledger_residual(rnd, residual, k_d, truncated_rank=svd_rank)
+        elif self.method == "fedex":
+            if self.fed_cfg.assignment == "average":
+                self.global_lora, residual = agg.fedex_aggregate(
+                    client_loras, weights)
+                self.params = agg.apply_residual(self.params, residual, self.scale)
+                self._ledger_residual(rnd, residual, k_d)
+            elif self.fed_cfg.assignment == "reinit":
+                new_loras, residual = agg.assign_after_aggregation(
+                    "reinit", client_loras, jax.random.key(self.seed + rnd),
+                    weights)
+                self.global_lora = new_loras[0]
+                self.params = agg.apply_residual(self.params, residual, self.scale)
+                self._ledger_residual(rnd, residual, k_d)
+            elif self.fed_cfg.assignment == "keep_local":
+                residuals = agg.per_client_residuals(client_loras, weights)
+                for cid, lora_i, res_i in zip(outcome.client_ids, client_loras,
+                                              residuals):
+                    self._client_lora[cid] = lora_i
+                    self.client_params[cid] = agg.apply_residual(
+                        self.client_params[cid], res_i, self.scale)
+                self.global_lora = client_loras[0]
+            else:
+                raise ValueError(self.fed_cfg.assignment)
+        else:
+            raise ValueError(f"unknown method {self.method!r}")
+
+    def _ledger_residual(self, rnd: int, residual, k_delivered: int,
+                         truncated_rank: int = 0) -> None:
+        """Account the server→client residual broadcast in the bytes ledger
+        (factored form of core/decompose.py, never the dense m×n matrix)."""
+        import numpy as np
+
+        from repro.core.decompose import (factored_residual_params,
+                                          truncated_residual_params)
+
+        per_client = 0
+        for leaf in jax.tree.leaves(residual):
+            if leaf.ndim < 2:
+                continue
+            copies = int(np.prod(leaf.shape[:-2])) if leaf.ndim > 2 else 1
+            m, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+            if truncated_rank:
+                per_client += copies * truncated_residual_params(
+                    m, n, truncated_rank)
+            else:
+                per_client += copies * factored_residual_params(
+                    m, n, self.lora_cfg.rank, k_delivered)
+        self.ledger.record_analytic(rnd, "downlink", per_client * k_delivered,
+                                    note="factored-residual broadcast")
 
     # ------------------------------------------------------------------
     def _client_round(self, client: int, params, lora):
@@ -187,53 +295,42 @@ class FederatedTrainer:
                               and self.method == "fedex")
                 if keep_local and not hasattr(self, "_client_lora"):
                     self._client_lora = [self.global_lora] * k
-                client_loras = []
-                client_losses = []
-                for c in range(k):
-                    base = (self.client_params[c] if self.client_params is not None
-                            else self.params)
-                    start_lora = self._client_lora[c] if keep_local else self.global_lora
-                    lora_c, losses = self._client_round(c, base, start_lora)
+                round_losses: Dict[int, float] = {}
+
+                def train_fn(client, start_lora, round_id, _losses=round_losses):
+                    c = client.client_id
+                    base = (self.client_params[c]
+                            if self.client_params is not None else self.params)
+                    start = self._client_lora[c] if keep_local else start_lora
+                    lora_c, losses = self._client_round(c, base, start)
                     if self.fed_cfg.dp_clip > 0:
                         from repro.core.privacy import privatize_upload
                         lora_c = privatize_upload(
-                            jax.random.key(hash((self.seed, rnd, c)) % 2**31),
-                            lora_c, start_lora, clip=self.fed_cfg.dp_clip,
+                            jax.random.key(hash((self.seed, round_id, c)) % 2**31),
+                            lora_c, start, clip=self.fed_cfg.dp_clip,
                             noise_multiplier=self.fed_cfg.dp_noise_multiplier)
-                    client_loras.append(lora_c)
-                    client_losses.append(losses[-1])
+                    _losses[c] = losses[-1]
+                    return lora_c
 
-                div = mean_deviation(client_loras)
+                outcome = self.coordinator.run_round(rnd, train_fn,
+                                                     self.global_lora)
+                self.outcomes.append(outcome)
+                # keep adapter payloads only for the latest round — otherwise
+                # history retains O(rounds · k · adapter_size) of fp32 trees
+                if len(self.outcomes) > 1:
+                    for d in self.outcomes[-2].delivered:
+                        d.lora = None
+                client_loras = [d.lora for d in outcome.delivered]
+                client_losses = [round_losses[c] for c in outcome.client_ids]
+                weights = outcome.weights
 
-                if self.method == "fedit":
-                    self.global_lora = agg.fedit_aggregate(client_loras)
-                elif self.method == "ffa":
-                    self.global_lora = agg.ffa_aggregate(client_loras)
-                elif self.method == "fedex_svd":
-                    self.global_lora, residual = agg.fedex_svd_aggregate(
-                        client_loras, self.fed_cfg.svd_rank or
-                        self.lora_cfg.rank * k)
-                    self.params = agg.apply_residual(self.params, residual, self.scale)
-                elif self.method == "fedex":
-                    if self.fed_cfg.assignment == "average":
-                        self.global_lora, residual = agg.fedex_aggregate(client_loras)
-                        self.params = agg.apply_residual(self.params, residual, self.scale)
-                    elif self.fed_cfg.assignment == "reinit":
-                        new_loras, residual = agg.assign_after_aggregation(
-                            "reinit", client_loras, jax.random.key(self.seed + rnd))
-                        self.global_lora = new_loras[0]
-                        self.params = agg.apply_residual(self.params, residual, self.scale)
-                    elif self.fed_cfg.assignment == "keep_local":
-                        residuals = agg.per_client_residuals(client_loras)
-                        self._client_lora = client_loras
-                        self.client_params = [
-                            agg.apply_residual(p, r, self.scale)
-                            for p, r in zip(self.client_params, residuals)]
-                        self.global_lora = client_loras[0]
-                    else:
-                        raise ValueError(self.fed_cfg.assignment)
+                if not client_loras:  # every sampled client dropped out
+                    logger.warning("round=%d: no deliveries; global kept", rnd)
+                    div = 0.0
+                    client_losses = [float("nan")]
                 else:
-                    raise ValueError(f"unknown method {self.method!r}")
+                    div = mean_deviation(client_loras)
+                    self._close_round(rnd, outcome, client_loras, weights)
 
             self._global_step += self.fed_cfg.local_steps
             eval_params = (self.client_params[0] if self.client_params is not None

@@ -1,0 +1,80 @@
+"""fedsrv — event-driven federation coordinator for FedEx-LoRA rounds.
+
+The seed trainer (core/federated.py) hard-codes the easiest regime: one
+process, all k clients every round, uniform weights, no transport. This
+subsystem is the orchestration layer for everything else — partial
+participation, per-client example counts, dropouts, stragglers, deadlines,
+uplink quantization, and FedBuff-style buffered commits — while keeping the
+paper's exactness guarantee (Eq. 11–14) over whichever *subset* of clients a
+round actually delivers, with non-uniform weights wᵢ = nᵢ/Σnⱼ.
+
+Architecture (mirrors federated.py's header conventions)::
+
+    ClientRegistry ──sample_round(fraction, quorum)──┐
+      ClientInfo(id, n_examples, speed)              │
+    StragglerModel (seeded latency/dropout)          ▼
+    SimClock (deterministic sim-seconds)      RoundCoordinator ──────────┐
+                                              │  open round              │
+        train_fn(client, lora, rnd)  ◄────────┤  schedule arrivals       │
+        (injected by FederatedTrainer)        │  collect until deadline  │
+                                              │    ∧ quorum              │
+    AdapterCodec (none|fp16|int8) ◄──────────►│  close: weighted exact   │
+      every payload crosses the codec         │    aggregation           │
+    BytesLedger (measured params/bytes,       │                          │
+      reconciled vs core/comm.py analytic)    └── RoundOutcome ──────────┘
+                                                   delivered, weights,
+    AsyncBufferCoordinator (FedBuff): commits      drops, comm totals
+      buffer_size earliest arrivals; staleness
+      discounts the weights; residual fold stays
+      exact at every commit.
+
+Exactness contract: ``weighted_close(outcome)`` returns (ā,b̄ averages,
+ΔW_res) with Σwᵢ aᵢbᵢ = ā b̄ + ΔW_res *by construction* for any normalized
+weights — folding scale·ΔW_res into W0 reproduces the weighted ideal update
+over the delivered subset bit-for-bit in fp32 (tests/test_fedsrv.py).
+
+Determinism contract: all randomness flows through
+``np.random.default_rng([seed, round, client])`` and the simulated clock —
+a scenario replays identically across processes (no PYTHONHASHSEED, no wall
+clock).
+"""
+
+from repro.fedsrv.coordinator import (
+    AsyncBufferCoordinator,
+    Delivery,
+    RoundCoordinator,
+    RoundOutcome,
+    RoundPolicy,
+    weighted_close,
+)
+from repro.fedsrv.registry import (
+    ClientInfo,
+    ClientRegistry,
+    SimClock,
+    StragglerModel,
+)
+from repro.fedsrv.transport import (
+    AdapterCodec,
+    BytesLedger,
+    EncodedTensor,
+    LedgerEntry,
+    Payload,
+)
+
+__all__ = [
+    "AdapterCodec",
+    "AsyncBufferCoordinator",
+    "BytesLedger",
+    "ClientInfo",
+    "ClientRegistry",
+    "Delivery",
+    "EncodedTensor",
+    "LedgerEntry",
+    "Payload",
+    "RoundCoordinator",
+    "RoundOutcome",
+    "RoundPolicy",
+    "SimClock",
+    "StragglerModel",
+    "weighted_close",
+]

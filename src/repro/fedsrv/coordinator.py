@@ -1,0 +1,320 @@
+"""Event-driven round coordinator: open → collect → close (weighted, exact).
+
+Synchronous mode (``RoundCoordinator``): a round opens, sampled participants
+are scheduled as (arrival_time, client) events from the straggler model, and
+the round collects deliveries until the deadline passes WITH the min-quorum
+met (deadline=0 → wait for everyone who didn't drop out). Close performs
+*weighted* exact aggregation over the delivered subset: wᵢ = nᵢ/Σnⱼ (or
+uniform), with the residual identity Σwᵢaᵢbᵢ = āb̄ + ΔW_res preserved exactly
+— see core/aggregation.py.
+
+Asynchronous mode (``AsyncBufferCoordinator``): FedBuff-style. Clients launch
+against the *current* global adapter version and arrive after their simulated
+latency; the server commits whenever ``buffer_size`` deliveries are buffered.
+Stale deliveries (trained from an older version v) are discounted by
+``(1 + staleness)^(−staleness_alpha)`` on top of their example weight, the
+weights renormalized, and an exact residual for the committed subset is folded
+at every commit — staleness changes the *weights*, never the exactness of the
+weighted identity.
+
+The coordinator is model-agnostic: training is injected as
+``train_fn(client: ClientInfo, start_lora, round_id) → lora`` and every
+adapter crosses the transport codec (so uplink quantization is part of what
+gets aggregated). A BytesLedger entry is recorded per payload.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import aggregation as agg
+from repro.fedsrv.registry import (ClientInfo, ClientRegistry, SimClock,
+                                   StragglerModel)
+from repro.fedsrv.transport import AdapterCodec, BytesLedger
+from repro.util.logging import get_logger
+from repro.util.tree import count_params
+
+logger = get_logger("fedsrv")
+
+TrainFn = Callable[[ClientInfo, Any, int], Any]
+
+
+@dataclass(frozen=True)
+class RoundPolicy:
+    """Knobs for one round's collection behavior.
+
+    participation — fraction of registered clients sampled per round.
+    min_quorum   — deliveries required before the deadline may cut late
+                   arrivals (0 → any single delivery suffices).
+    deadline     — sim-seconds after round open at which late arrivals are
+                   dropped, provided quorum is met (0 → no deadline).
+    weighting    — "uniform" (legacy wᵢ=1/k path, bitwise-identical to the
+                   seed trainer) or "examples" (wᵢ = nᵢ/Σnⱼ).
+    """
+
+    participation: float = 1.0
+    min_quorum: int = 0
+    deadline: float = 0.0
+    weighting: str = "uniform"  # uniform | examples
+
+
+@dataclass
+class Delivery:
+    client: ClientInfo
+    lora: Any
+    launched_at: float
+    arrived_at: float
+    staleness: int = 0  # async mode: commits elapsed since launch version
+
+
+@dataclass
+class RoundOutcome:
+    round_id: int
+    sampled: List[int]
+    delivered: List[Delivery]
+    dropped_out: List[int]          # never reported back
+    dropped_deadline: List[int]     # arrived after deadline with quorum met
+    weights: Optional[List[float]]  # None → uniform
+    opened_at: float
+    closed_at: float
+    comm: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def client_ids(self) -> List[int]:
+        return [d.client.client_id for d in self.delivered]
+
+
+def weighted_close(outcome: RoundOutcome, method: str = "fedex",
+                   svd_rank: int = 0) -> Tuple[Any, Optional[Any]]:
+    """Close a round: (new global adapter, residual-or-None) over the
+    delivered subset with the outcome's weights. Exact for fedex/fedex_svd
+    (modulo truncation for svd), inexact-by-design for fedit, exact by
+    construction for ffa."""
+    loras = [d.lora for d in outcome.delivered]
+    if not loras:
+        raise ValueError(f"round {outcome.round_id} closed with no deliveries")
+    w = outcome.weights
+    if method == "fedex":
+        return agg.fedex_aggregate(loras, w)
+    if method == "fedex_svd":
+        return agg.fedex_svd_aggregate(loras, svd_rank, w)
+    if method == "fedit":
+        return agg.fedit_aggregate(loras, w), None
+    if method == "ffa":
+        return agg.ffa_aggregate(loras, w), None
+    raise ValueError(f"unknown method {method!r}")
+
+
+class RoundCoordinator:
+    """Synchronous (per-round) coordinator with sampling/deadline/quorum.
+
+    With the default policy (participation=1, no deadline, no dropout,
+    uniform weighting, codec "none") this degenerates to the seed trainer's
+    hard-coded loop: every client, client_id order, uniform mean.
+    """
+
+    def __init__(self, registry: ClientRegistry,
+                 policy: Optional[RoundPolicy] = None,
+                 stragglers: Optional[StragglerModel] = None,
+                 codec: Optional[AdapterCodec] = None,
+                 ledger: Optional[BytesLedger] = None,
+                 clock: Optional[SimClock] = None):
+        self.registry = registry
+        self.policy = policy or RoundPolicy()
+        self.stragglers = stragglers or StragglerModel()
+        self.codec = codec or AdapterCodec("none")
+        self.ledger = ledger or BytesLedger()
+        self.clock = clock or SimClock()
+        self._downlink_params: Optional[int] = None  # adapter tree is static
+
+    # ------------------------------------------------------------------
+    def _uplink(self, lora: Any, round_id: int, client_id: int) -> Any:
+        """Client → server through the codec; the server aggregates what was
+        actually transmitted (quantization included)."""
+        payload = self.codec.encode(lora, round_id=round_id,
+                                    client_id=client_id, direction="uplink")
+        self.ledger.record(payload)
+        return self.codec.decode(payload)
+
+    def _record_downlink(self, lora: Any, round_id: int, client_id: int) -> None:
+        """Downlink is always fp32 and the client trains on the original tree,
+        so the ledger entry is recorded analytically (no serialize round-trip)."""
+        if self._downlink_params is None:
+            self._downlink_params = count_params(lora)
+        self.ledger.record_analytic(round_id, "downlink",
+                                    self._downlink_params,
+                                    client_id=client_id, note="global adapters")
+
+    # ------------------------------------------------------------------
+    def run_round(self, round_id: int, train_fn: TrainFn, global_lora: Any
+                  ) -> RoundOutcome:
+        pol = self.policy
+        participants = self.registry.sample_round(round_id, pol.participation,
+                                                  max(1, pol.min_quorum))
+        opened = self.clock.now()
+
+        # schedule the event queue: dropout draws + arrival times
+        dropped_out: List[int] = []
+        arrivals: List[Tuple[float, ClientInfo]] = []
+        for c in participants:
+            if self.stragglers.dropped(round_id, c):
+                dropped_out.append(c.client_id)
+                continue
+            arrivals.append((opened + self.stragglers.latency(round_id, c), c))
+        arrivals.sort(key=lambda tc: (tc[0], tc[1].client_id))
+
+        # quorum: deliveries required before the deadline may cut stragglers.
+        # min_quorum=0 → any delivery suffices (a positive deadline must be
+        # able to drop; a round still can't close empty), but without a
+        # deadline the round simply waits for every non-dropout.
+        quorum = max(1, pol.min_quorum)
+        quorum = min(quorum, len(arrivals)) if arrivals else 0
+
+        delivered: List[Delivery] = []
+        dropped_deadline: List[int] = []
+        for t, c in arrivals:
+            late = pol.deadline > 0 and t > opened + pol.deadline
+            if late and len(delivered) >= quorum:
+                dropped_deadline.append(c.client_id)
+                continue
+            # downlink current global, train, uplink the result (through codec)
+            self._record_downlink(global_lora, round_id, c.client_id)
+            lora_c = train_fn(c, global_lora, round_id)
+            lora_c = self._uplink(lora_c, round_id, c.client_id)
+            delivered.append(Delivery(client=c, lora=lora_c,
+                                      launched_at=opened, arrived_at=t))
+            self.clock.advance_to(t)
+
+        closed = self.clock.now()  # arrival of the last delivery this round
+        # stable order: aggregation sums in client_id order (bitwise parity
+        # with the seed loop under the trivial policy)
+        delivered.sort(key=lambda d: d.client.client_id)
+
+        weights = None
+        if pol.weighting == "examples" and delivered:
+            weights = self.registry.weights_for(
+                [d.client.client_id for d in delivered])
+        elif pol.weighting not in ("uniform", "examples"):
+            raise ValueError(f"unknown weighting {pol.weighting!r}")
+
+        outcome = RoundOutcome(
+            round_id=round_id, sampled=[c.client_id for c in participants],
+            delivered=delivered, dropped_out=dropped_out,
+            dropped_deadline=dropped_deadline, weights=weights,
+            opened_at=opened, closed_at=closed,
+            comm=self.ledger.round_totals(round_id))
+        logger.info(
+            "round=%d sampled=%d delivered=%d dropout=%d deadline_drop=%d "
+            "open=%.2fs close=%.2fs", round_id, len(participants),
+            len(delivered), len(dropped_out), len(dropped_deadline),
+            opened, closed)
+        return outcome
+
+
+class AsyncBufferCoordinator(RoundCoordinator):
+    """FedBuff-style buffered commits with staleness-discounted exact folds.
+
+    Each ``run_round`` call is ONE server commit: newly sampled clients are
+    launched against the current global version, then the ``buffer_size``
+    earliest arrivals (possibly launched several versions ago) are trained
+    from their launch-time global snapshot and committed together.
+    """
+
+    def __init__(self, registry: ClientRegistry,
+                 policy: Optional[RoundPolicy] = None,
+                 stragglers: Optional[StragglerModel] = None,
+                 codec: Optional[AdapterCodec] = None,
+                 ledger: Optional[BytesLedger] = None,
+                 clock: Optional[SimClock] = None,
+                 buffer_size: int = 2,
+                 staleness_alpha: float = 0.5):
+        super().__init__(registry, policy, stragglers, codec, ledger, clock)
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be ≥ 1")
+        self.buffer_size = buffer_size
+        self.staleness_alpha = staleness_alpha
+        self._version = 0
+        self._snapshots: Dict[int, Any] = {}  # version → global lora
+        # in-flight: (arrival_time, client, launch_version)
+        self._inflight: List[Tuple[float, ClientInfo, int]] = []
+
+    def run_round(self, round_id: int, train_fn: TrainFn, global_lora: Any
+                  ) -> RoundOutcome:
+        pol = self.policy
+        opened = self.clock.now()
+        self._snapshots[self._version] = global_lora
+
+        # launch newly sampled clients at the current version
+        participants = self.registry.sample_round(round_id, pol.participation,
+                                                  max(1, pol.min_quorum))
+        dropped_out: List[int] = []
+        busy = {c.client_id for _, c, _ in self._inflight}
+        launched: List[int] = []
+        for c in participants:
+            if c.client_id in busy:
+                continue  # still running an older version's assignment
+            if self.stragglers.dropped(round_id, c):
+                dropped_out.append(c.client_id)
+                continue
+            t = opened + self.stragglers.latency(round_id, c)
+            self._inflight.append((t, c, self._version))
+            launched.append(c.client_id)
+        self._inflight.sort(key=lambda e: (e[0], e[1].client_id))
+
+        # commit the earliest buffer_size arrivals
+        take = min(self.buffer_size, len(self._inflight))
+        if take == 0:
+            # every sampled client dropped out and nothing is in flight:
+            # empty commit — keep the version, let the trainer keep its global
+            # (mirrors the sync coordinator's zero-delivery round).
+            logger.warning("commit=%d: no clients in flight; empty commit",
+                           round_id)
+            return RoundOutcome(
+                round_id=round_id,
+                sampled=[c.client_id for c in participants],
+                delivered=[], dropped_out=dropped_out, dropped_deadline=[],
+                weights=None, opened_at=opened, closed_at=self.clock.now(),
+                comm=self.ledger.round_totals(round_id))
+        batch, self._inflight = self._inflight[:take], self._inflight[take:]
+
+        delivered: List[Delivery] = []
+        for t, c, v in batch:
+            start = self._snapshots[v]
+            self._record_downlink(start, round_id, c.client_id)
+            lora_c = train_fn(c, start, round_id)
+            lora_c = self._uplink(lora_c, round_id, c.client_id)
+            delivered.append(Delivery(client=c, lora=lora_c, launched_at=t,
+                                      arrived_at=t,
+                                      staleness=self._version - v))
+            self.clock.advance_to(t)
+        delivered.sort(key=lambda d: d.client.client_id)
+
+        # weights: example count × staleness discount, renormalized — the
+        # weighted residual identity stays exact for ANY normalized weights.
+        raw = []
+        for d in delivered:
+            n = (d.client.num_examples if pol.weighting == "examples" else 1.0)
+            raw.append(n * (1.0 + d.staleness) ** (-self.staleness_alpha))
+        total = sum(raw)
+        weights: Optional[List[float]] = [x / total for x in raw]
+
+        self._version += 1
+        # snapshots older than every in-flight launch can be freed
+        live = {v for _, _, v in self._inflight} | {self._version}
+        for v in list(self._snapshots):
+            if v not in live and v != self._version - 1:
+                del self._snapshots[v]
+
+        outcome = RoundOutcome(
+            round_id=round_id, sampled=[c.client_id for c in participants],
+            delivered=delivered, dropped_out=dropped_out,
+            dropped_deadline=[], weights=weights, opened_at=opened,
+            closed_at=self.clock.now(),
+            comm=self.ledger.round_totals(round_id))
+        logger.info(
+            "commit=%d version=%d launched=%d committed=%d inflight=%d "
+            "max_staleness=%d", round_id, self._version, len(launched),
+            len(delivered), len(self._inflight),
+            max((d.staleness for d in delivered), default=0))
+        return outcome

@@ -1,0 +1,184 @@
+"""Adapter transport: payload serialization, uplink quantization, bytes ledger.
+
+The coordinator never hands raw trees between "client" and "server": every
+adapter crosses through :class:`AdapterCodec`, so uplink quantization (fp16 /
+int8) actually changes the numbers the server aggregates — exactness claims
+are then made about what was *transmitted*, as in a real deployment.
+
+The :class:`BytesLedger` records every payload (params + bytes, per round and
+direction) and can be reconciled against the analytic per-round parameter
+counts of ``core/comm.py::round_comm_params`` — the ledger is the measured
+twin of that closed-form accounting.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+CODECS = ("none", "fp16", "int8")
+
+
+@dataclass(frozen=True)
+class EncodedTensor:
+    data: np.ndarray            # fp32 / fp16 / int8 storage
+    scale: Optional[float]      # int8 dequant scale (absmax/127), else None
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.nbytes) + (4 if self.scale is not None else 0)
+
+    @property
+    def num_params(self) -> int:
+        return int(self.data.size)
+
+
+@dataclass(frozen=True)
+class Payload:
+    """One serialized adapter tree in flight (uplink delta or downlink global)."""
+
+    round_id: int
+    client_id: int
+    direction: str              # "uplink" | "downlink"
+    codec: str
+    tensors: Dict[str, EncodedTensor]
+
+    @property
+    def num_params(self) -> int:
+        return sum(t.num_params for t in self.tensors.values())
+
+    @property
+    def nbytes(self) -> int:
+        return sum(t.nbytes for t in self.tensors.values())
+
+
+class AdapterCodec:
+    """Encode/decode adapter trees with optional uplink factor quantization.
+
+    * ``none`` — fp32 passthrough (4 B/param).
+    * ``fp16`` — half-precision factors (2 B/param), decode upcasts to fp32.
+    * ``int8`` — per-tensor symmetric absmax quantization (1 B/param + one
+      fp32 scale per tensor).
+    """
+
+    def __init__(self, quantize: str = "none"):
+        if quantize not in CODECS:
+            raise ValueError(f"quantize must be one of {CODECS}, got {quantize!r}")
+        self.quantize = quantize
+
+    def _encode_leaf(self, x, codec: str) -> EncodedTensor:
+        arr = np.asarray(x, dtype=np.float32)
+        if codec == "none":
+            return EncodedTensor(arr, None)
+        if codec == "fp16":
+            return EncodedTensor(arr.astype(np.float16), None)
+        absmax = float(np.max(np.abs(arr))) if arr.size else 0.0
+        scale = absmax / 127.0 if absmax > 0 else 1.0
+        q = np.clip(np.rint(arr / scale), -127, 127).astype(np.int8)
+        return EncodedTensor(q, scale)
+
+    def encode(self, tree: Any, *, round_id: int, client_id: int,
+               direction: str = "uplink") -> Payload:
+        codec = self.quantize if direction == "uplink" else "none"
+        tensors = {path: self._encode_leaf(leaf, codec)
+                   for path, leaf in flatten_with_paths(tree).items()}
+        return Payload(round_id=round_id, client_id=client_id,
+                       direction=direction, codec=codec, tensors=tensors)
+
+    def decode(self, payload: Payload) -> Any:
+        flat = {}
+        for path, enc in payload.tensors.items():
+            if enc.scale is not None:
+                flat[path] = enc.data.astype(np.float32) * enc.scale
+            else:
+                flat[path] = enc.data.astype(np.float32)
+        return unflatten_from_paths(flat)
+
+
+@dataclass
+class LedgerEntry:
+    round_id: int
+    direction: str
+    client_id: int
+    params: int
+    nbytes: int
+    codec: str
+    note: str = ""
+
+
+class BytesLedger:
+    """Per-round communication ledger (measured params + bytes)."""
+
+    def __init__(self):
+        self.entries: List[LedgerEntry] = []
+
+    def record(self, payload: Payload, note: str = "") -> None:
+        self.entries.append(LedgerEntry(
+            round_id=payload.round_id, direction=payload.direction,
+            client_id=payload.client_id, params=payload.num_params,
+            nbytes=payload.nbytes, codec=payload.codec, note=note))
+
+    def record_analytic(self, round_id: int, direction: str, params: int,
+                        bytes_per_param: int = 4, client_id: int = -1,
+                        note: str = "") -> None:
+        """Account a payload we model analytically (e.g. the factored residual
+        broadcast, whose params come from decompose.factored_residual_params)."""
+        self.entries.append(LedgerEntry(
+            round_id=round_id, direction=direction, client_id=client_id,
+            params=int(params), nbytes=int(params) * bytes_per_param,
+            codec="none", note=note))
+
+    # -- views -------------------------------------------------------------
+    def round_totals(self, round_id: int) -> Dict[str, int]:
+        tot = {"uplink_params": 0, "uplink_bytes": 0,
+               "downlink_params": 0, "downlink_bytes": 0}
+        for e in self.entries:
+            if e.round_id != round_id:
+                continue
+            tot[f"{e.direction}_params"] += e.params
+            tot[f"{e.direction}_bytes"] += e.nbytes
+        return tot
+
+    def totals(self) -> Dict[str, int]:
+        rounds = {e.round_id for e in self.entries}
+        out = {"uplink_params": 0, "uplink_bytes": 0,
+               "downlink_params": 0, "downlink_bytes": 0}
+        for r in rounds:
+            for key, v in self.round_totals(r).items():
+                out[key] += v
+        return out
+
+    def reconcile(self, round_id: int, analytic: Dict[str, int]
+                  ) -> Dict[str, Any]:
+        """Compare measured param counts against core/comm.py's closed form.
+
+        analytic: the dict returned by ``round_comm_params`` (uplink/downlink
+        PARAM counts for the round). Bytes are codec-dependent so only params
+        are reconciled. Returns per-direction measured/analytic/match.
+        """
+        got = self.round_totals(round_id)
+        out: Dict[str, Any] = {}
+        for direction in ("uplink", "downlink"):
+            measured = got[f"{direction}_params"]
+            expected = int(analytic.get(direction, 0))
+            out[direction] = {"measured": measured, "analytic": expected,
+                              "match": measured == expected}
+        out["ok"] = all(out[d]["match"] for d in ("uplink", "downlink"))
+        return out
+
+    def summary_lines(self) -> List[str]:
+        rounds = sorted({e.round_id for e in self.entries})
+        lines = [f"{'round':>5} {'up_params':>10} {'up_bytes':>10} "
+                 f"{'down_params':>11} {'down_bytes':>10}"]
+        for r in rounds:
+            t = self.round_totals(r)
+            lines.append(f"{r:>5} {t['uplink_params']:>10} {t['uplink_bytes']:>10} "
+                         f"{t['downlink_params']:>11} {t['downlink_bytes']:>10}")
+        t = self.totals()
+        lines.append(f"{'all':>5} {t['uplink_params']:>10} {t['uplink_bytes']:>10} "
+                     f"{t['downlink_params']:>11} {t['downlink_bytes']:>10}")
+        return lines

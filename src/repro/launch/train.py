@@ -82,6 +82,26 @@ def main() -> None:
                     help="Gaussian noise multiplier (σ = mult · clip)")
     ap.add_argument("--client-ranks", default="",
                     help="comma-separated per-client ranks (hetero-rank mode)")
+    # fedsrv coordinator (partial participation / stragglers / async buffer):
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round (fedsrv)")
+    ap.add_argument("--min-quorum", type=int, default=0,
+                    help="deliveries needed to close at the deadline (0 = all)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="round deadline in sim-seconds (0 = wait for all)")
+    ap.add_argument("--weighting", default="uniform",
+                    choices=("uniform", "examples"),
+                    help="client weights: uniform or example counts n_i/Σn_j")
+    ap.add_argument("--stragglers", type=float, default=0.0,
+                    help="straggler probability per (round, client); latency "
+                         "is inflated ×5 for stragglers")
+    ap.add_argument("--dropout-prob", type=float, default=0.0,
+                    help="P(client accepts the round but never reports back)")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help=">0 → FedBuff-style buffered commits of this size")
+    ap.add_argument("--quantize-uplink", default="none",
+                    choices=("none", "fp16", "int8"),
+                    help="uplink adapter codec (fedsrv transport)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
@@ -109,7 +129,15 @@ def main() -> None:
                           dp_noise_multiplier=args.dp_noise,
                           client_ranks=tuple(
                               int(r) for r in args.client_ranks.split(",")
-                              if r.strip())),
+                              if r.strip()),
+                          participation=args.participation,
+                          min_quorum=args.min_quorum,
+                          round_deadline=args.deadline,
+                          weighting=args.weighting,
+                          straggler_prob=args.stragglers,
+                          dropout_prob=args.dropout_prob,
+                          async_buffer=args.async_buffer,
+                          quantize_uplink=args.quantize_uplink),
         train_cfg=TrainConfig(learning_rate=args.lr, schedule="constant",
                               total_steps=args.rounds * args.local_steps),
         client_loaders=loaders,
@@ -120,6 +148,10 @@ def main() -> None:
     final = history[-1]
     print(f"\nfinal: method={args.method} eval_loss={final.eval_loss:.4f} "
           f"eval_acc={final.eval_acc:.4f} divergence={final.divergence_scaled:.3e}")
+    if trainer.ledger.entries:
+        print("comm ledger (measured, fedsrv transport):")
+        for line in trainer.ledger.summary_lines():
+            print("  " + line)
     if args.out:
         with open(args.out, "w") as f:
             json.dump([r.__dict__ for r in history], f, indent=2)

@@ -4,6 +4,9 @@ materialised oracle over random shapes / windows / GQA factors."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref

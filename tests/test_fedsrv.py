@@ -1,0 +1,417 @@
+"""fedsrv coordinator subsystem: sampling determinism, transport codec,
+ledger-vs-analytic reconciliation, deadline/quorum semantics, async buffer,
+and end-to-end weighted exactness under partial participation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import (FederatedTrainer, apply_residual, init_lora,
+                        merge_lora, product_mean)
+from repro.core.comm import adapted_matrices, round_comm_params
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.fedsrv import (AdapterCodec, AsyncBufferCoordinator, ClientInfo,
+                          ClientRegistry, RoundCoordinator, RoundPolicy,
+                          SimClock, StragglerModel, weighted_close)
+from repro.models import build_model
+from repro.util.tree import flatten_with_paths
+
+
+def make_registry(k=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return ClientRegistry(
+        [ClientInfo(i, num_examples=int(rng.integers(50, 500)))
+         for i in range(k)], seed=seed)
+
+
+def make_loras(k, m=16, r=2, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return {i: {"q_proj": {
+        "a": jnp.asarray(rng.normal(size=(m, r)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(r, n)), jnp.float32)}}
+        for i in range(k)}
+
+
+class TestRegistry:
+    def test_sampler_deterministic_across_instances(self):
+        r1, r2 = make_registry(seed=7), make_registry(seed=7)
+        for rnd in range(5):
+            ids1 = [c.client_id for c in r1.sample_round(rnd, 0.5)]
+            ids2 = [c.client_id for c in r2.sample_round(rnd, 0.5)]
+            assert ids1 == ids2
+
+    def test_sampler_fraction_counts(self):
+        reg = make_registry(k=10)
+        assert len(reg.sample_round(0, 1.0)) == 10
+        assert len(reg.sample_round(0, 0.5)) == 5
+        assert len(reg.sample_round(0, 0.01, min_clients=2)) == 2
+
+    def test_full_participation_is_id_ordered(self):
+        reg = make_registry(k=5)
+        assert [c.client_id for c in reg.sample_round(3, 1.0)] == [0, 1, 2, 3, 4]
+
+    def test_sampling_varies_by_round(self):
+        reg = make_registry(k=12, seed=1)
+        picks = {tuple(c.client_id for c in reg.sample_round(r, 0.25))
+                 for r in range(8)}
+        assert len(picks) > 1
+
+    def test_weights_sum_to_one(self):
+        reg = make_registry()
+        w = reg.weights_for([0, 2, 4])
+        assert abs(sum(w) - 1.0) < 1e-12
+        assert all(x > 0 for x in w)
+
+    def test_duplicate_ids_rejected(self):
+        with pytest.raises(ValueError):
+            ClientRegistry([ClientInfo(0, 10), ClientInfo(0, 20)])
+
+
+class TestStragglerModel:
+    def test_latency_deterministic(self):
+        m1 = StragglerModel(jitter=0.5, straggler_prob=0.3, seed=9)
+        m2 = StragglerModel(jitter=0.5, straggler_prob=0.3, seed=9)
+        c = ClientInfo(4, 100)
+        assert m1.latency(2, c) == m2.latency(2, c)
+        assert m1.dropped(2, c) == m2.dropped(2, c)
+
+    def test_compute_speed_scales_latency(self):
+        m = StragglerModel(jitter=0.0)
+        slow = m.latency(0, ClientInfo(1, 10, compute_speed=0.5))
+        fast = m.latency(0, ClientInfo(1, 10, compute_speed=2.0))
+        assert slow == pytest.approx(4 * fast)
+
+    def test_dropout_rate(self):
+        m = StragglerModel(dropout_prob=0.5, seed=0)
+        drops = sum(m.dropped(r, ClientInfo(c, 10))
+                    for r in range(20) for c in range(20))
+        assert 100 < drops < 300  # ~200 expected
+
+
+class TestTransportCodec:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"l": {"q_proj": {
+            "a": jnp.asarray(rng.normal(size=(16, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(4, 12)), jnp.float32)}}}
+
+    def test_none_roundtrip_bitwise(self):
+        tree = self._tree()
+        codec = AdapterCodec("none")
+        p = codec.encode(tree, round_id=0, client_id=1)
+        out = codec.decode(p)
+        for k, v in flatten_with_paths(tree).items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          flatten_with_paths(out)[k])
+        assert p.num_params == 16 * 4 + 4 * 12
+        assert p.nbytes == 4 * p.num_params
+
+    def test_fp16_roundtrip(self):
+        tree = self._tree()
+        codec = AdapterCodec("fp16")
+        p = codec.encode(tree, round_id=0, client_id=1)
+        assert p.nbytes == 2 * p.num_params
+        out = codec.decode(p)
+        for k, v in flatten_with_paths(tree).items():
+            np.testing.assert_allclose(np.asarray(v),
+                                       flatten_with_paths(out)[k],
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_int8_roundtrip_bounded_error(self):
+        tree = self._tree()
+        codec = AdapterCodec("int8")
+        p = codec.encode(tree, round_id=0, client_id=1)
+        assert p.nbytes == p.num_params + 4 * len(p.tensors)
+        out = codec.decode(p)
+        for k, v in flatten_with_paths(tree).items():
+            arr = np.asarray(v)
+            scale = np.abs(arr).max() / 127.0
+            np.testing.assert_allclose(arr, flatten_with_paths(out)[k],
+                                       atol=scale / 2 + 1e-7)
+
+    def test_downlink_never_quantized(self):
+        codec = AdapterCodec("int8")
+        p = codec.encode(self._tree(), round_id=0, client_id=-1,
+                         direction="downlink")
+        assert p.codec == "none"
+
+
+class TestLedgerReconciliation:
+    """Satellite: measured transport ledger == analytic core/comm.py counts
+    at partial participation, on the REAL tiny model's adapter tree."""
+
+    @pytest.mark.parametrize("fraction", [0.5, 1.0])
+    def test_uplink_matches_round_comm_params(self, fraction):
+        cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                                  vocab_size=64)
+        model = build_model(cfg)
+        lcfg = LoRAConfig(rank=4)
+        params = model.init(jax.random.key(0))
+        lora = init_lora(jax.random.key(1), params, cfg, lcfg)
+
+        k = 4
+        reg = ClientRegistry([ClientInfo(i, 100 + i) for i in range(k)])
+        coord = RoundCoordinator(reg, RoundPolicy(participation=fraction))
+        coord.run_round(0, lambda c, g, r: g, global_lora=lora)
+
+        mats = adapted_matrices(cfg, lcfg)
+        analytic = round_comm_params("fedex", mats, lcfg.rank, k,
+                                     participation_fraction=fraction)
+        rec = coord.ledger.reconcile(0, analytic)
+        assert rec["uplink"]["match"], rec
+
+    def test_min_clients_floor_matches_sampler(self):
+        """When the quorum floor exceeds ⌈f·k⌉ the analytic count follows the
+        sampler (which samples max(min_quorum, ⌈f·k⌉) clients)."""
+        from repro.core.comm import participating_clients
+        assert participating_clients(20, 0.1) == 2
+        assert participating_clients(20, 0.1, min_clients=5) == 5
+        assert participating_clients(20, 1.0, min_clients=5) == 20
+
+    def test_participation_reduces_comm(self):
+        cfg = get_config("paper-tiny")
+        mats = adapted_matrices(cfg, LoRAConfig(rank=4))
+        full = round_comm_params("fedex", mats, 4, 20)
+        tenth = round_comm_params("fedex", mats, 4, 20,
+                                  participation_fraction=0.1)
+        assert tenth["uplink"] == full["uplink"] // 10
+        assert tenth["total"] < full["total"]
+        # default fraction reproduces the historical numbers
+        assert round_comm_params("fedex", mats, 4, 3) == round_comm_params(
+            "fedex", mats, 4, 3, participation_fraction=1.0)
+
+
+class TestRoundCoordinator:
+    def test_trivial_policy_delivers_all_in_order(self):
+        k = 5
+        reg = make_registry(k=k)
+        coord = RoundCoordinator(reg)
+        loras = make_loras(k)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert out.client_ids == list(range(k))
+        assert out.weights is None  # uniform → legacy bitwise path
+        assert out.dropped_out == [] and out.dropped_deadline == []
+
+    def test_deadline_drops_stragglers_after_quorum(self):
+        k = 4
+        reg = ClientRegistry([ClientInfo(i, 100) for i in range(k)])
+        # deterministic latencies 1.0 (jitter=0, no stragglers): set a
+        # deadline below 1.0 with quorum 2 → first two arrivals are accepted
+        # (quorum must be met even past the deadline), the rest are dropped.
+        coord = RoundCoordinator(
+            reg, RoundPolicy(deadline=0.5, min_quorum=2),
+            StragglerModel(jitter=0.0))
+        loras = make_loras(k)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert len(out.delivered) == 2
+        assert len(out.dropped_deadline) == 2
+
+    def test_deadline_alone_drops_without_explicit_quorum(self):
+        """min_quorum=0 must not neuter the deadline: any single delivery
+        lets late arrivals be cut."""
+        k = 3
+        reg = ClientRegistry([ClientInfo(i, 100) for i in range(k)])
+        coord = RoundCoordinator(
+            reg, RoundPolicy(deadline=0.5), StragglerModel(jitter=0.0))
+        loras = make_loras(k)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert len(out.delivered) == 1
+        assert len(out.dropped_deadline) == 2
+
+    def test_deadline_keeps_all_on_time_arrivals(self):
+        k = 4
+        reg = ClientRegistry([ClientInfo(i, 100) for i in range(k)])
+        coord = RoundCoordinator(
+            reg, RoundPolicy(deadline=10.0, min_quorum=2),
+            StragglerModel(jitter=0.0))
+        loras = make_loras(k)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert len(out.delivered) == k
+
+    def test_dropout_excluded(self):
+        k = 6
+        reg = ClientRegistry([ClientInfo(i, 100) for i in range(k)], seed=0)
+        coord = RoundCoordinator(
+            reg, RoundPolicy(), StragglerModel(dropout_prob=0.5, seed=5))
+        loras = make_loras(k)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert set(out.client_ids) | set(out.dropped_out) == set(range(k))
+        assert 0 < len(out.dropped_out) < k
+
+    def test_clock_advances_monotonically(self):
+        reg = make_registry(k=3)
+        clock = SimClock()
+        coord = RoundCoordinator(reg, clock=clock)
+        loras = make_loras(3)
+        t_seen = []
+        for rnd in range(3):
+            out = coord.run_round(rnd, lambda c, g, r: loras[c.client_id],
+                                  global_lora=loras[0])
+            t_seen.append(out.closed_at)
+        assert t_seen == sorted(t_seen)
+        assert t_seen[0] > 0
+
+    def test_weighted_close_exact_on_delivered_subset(self):
+        k = 8
+        reg = make_registry(k=k, seed=3)
+        coord = RoundCoordinator(
+            reg, RoundPolicy(participation=0.5, weighting="examples"),
+            StragglerModel(straggler_prob=0.25, seed=4))
+        loras = make_loras(k, seed=5)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        g, res = weighted_close(out, "fedex")
+        ideal = product_mean([d.lora for d in out.delivered], out.weights)
+        got = jnp.matmul(g["q_proj"]["a"], g["q_proj"]["b"]) + res["q_proj"]
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ideal["q_proj"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestAsyncBuffer:
+    def test_staleness_appears_and_commit_is_exact(self):
+        k = 3
+        reg = ClientRegistry([ClientInfo(i, 100 * (i + 1)) for i in range(k)],
+                             seed=0)
+        coord = AsyncBufferCoordinator(
+            reg, RoundPolicy(weighting="examples"),
+            StragglerModel(jitter=0.6, seed=1), buffer_size=1)
+        loras = make_loras(k, seed=2)
+        stalenesses = []
+        for rnd in range(4):
+            out = coord.run_round(rnd, lambda c, g, r: loras[c.client_id],
+                                  global_lora=loras[0])
+            stalenesses += [d.staleness for d in out.delivered]
+            # weights always normalized, commit identity exact
+            assert abs(sum(out.weights) - 1.0) < 1e-12
+            g, res = weighted_close(out, "fedex")
+            ideal = product_mean([d.lora for d in out.delivered], out.weights)
+            got = (jnp.matmul(g["q_proj"]["a"], g["q_proj"]["b"])
+                   + res["q_proj"])
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(ideal["q_proj"]),
+                                       rtol=1e-5, atol=1e-6)
+        # buffer_size=1 with 3 clients in flight → later commits pop launches
+        # from older versions
+        assert max(stalenesses) > 0
+
+    def test_empty_commit_is_graceful(self):
+        """All sampled clients dropping out must yield an empty commit, not
+        a crash (mirrors the sync coordinator's zero-delivery round)."""
+        reg = ClientRegistry([ClientInfo(0, 100), ClientInfo(1, 100)])
+        coord = AsyncBufferCoordinator(
+            reg, RoundPolicy(), StragglerModel(dropout_prob=1.0),
+            buffer_size=2)
+        loras = make_loras(2)
+        out = coord.run_round(0, lambda c, g, r: loras[c.client_id],
+                              global_lora=loras[0])
+        assert out.delivered == [] and out.weights is None
+        assert sorted(out.dropped_out) == [0, 1]
+
+    def test_staleness_discounts_weight(self):
+        # two clients, equal examples: the stale one must weigh less
+        reg = ClientRegistry([ClientInfo(0, 100), ClientInfo(1, 100)], seed=0)
+        coord = AsyncBufferCoordinator(
+            reg, RoundPolicy(weighting="examples"),
+            StragglerModel(jitter=0.8, seed=3), buffer_size=1,
+            staleness_alpha=1.0)
+        loras = make_loras(2)
+        for rnd in range(3):
+            out = coord.run_round(rnd, lambda c, g, r: loras[c.client_id],
+                                  global_lora=loras[0])
+            d = out.delivered[0]
+            expected = 1.0  # single-delivery commit renormalizes to 1
+            assert out.weights[0] == pytest.approx(expected)
+            assert d.staleness >= 0
+
+
+class TestTrainerIntegration:
+    """End-to-end acceptance: a real fedsrv round with sampled clients and
+    non-uniform example counts is exact after residual fold-in."""
+
+    def _setup(self, fed_cfg, vocab=16, clients=4, seed=0):
+        cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                                  vocab_size=vocab)
+        model = build_model(cfg)
+        ds = SyntheticLM(vocab=vocab, num_tasks=clients, seed=seed)
+        seqs, labels = [], []
+        for t in range(clients):
+            n = 30 + 20 * t  # unequal shards → non-uniform example weights
+            seqs.append(ds.sample(task=t, num_sequences=n, seq_len=32,
+                                  seed=seed + t))
+            labels += [t] * n
+        seqs = np.concatenate(seqs)
+        parts = dirichlet_partition(np.array(labels), clients, alpha=0.5,
+                                    seed=seed)
+        loaders = [ClientLoader(seqs[p], batch_size=8, seed=seed + i)
+                   for i, p in enumerate(parts)]
+        trainer = FederatedTrainer(
+            model=model, lora_cfg=LoRAConfig(rank=4, alpha=8),
+            fed_cfg=fed_cfg,
+            train_cfg=TrainConfig(learning_rate=1e-2, schedule="constant"),
+            client_loaders=loaders, eval_batches=[], seed=seed)
+        return trainer
+
+    def _assert_round_exact(self, trainer):
+        params0 = trainer.params
+        trainer.run()
+        out = trainer.outcomes[0]
+        assert out.delivered, "round delivered nothing"
+        scale = trainer.scale
+        w_fedex = merge_lora(trainer.params, trainer.global_lora, scale)
+        ideal = product_mean([d.lora for d in out.delivered], out.weights)
+        w_ideal = apply_residual(params0, ideal, scale)
+        fa, fb = flatten_with_paths(w_fedex), flatten_with_paths(w_ideal)
+        assert set(fa) == set(fb)
+        for k in fa:
+            np.testing.assert_allclose(np.asarray(fa[k]), np.asarray(fb[k]),
+                                       rtol=1e-5, atol=1e-6, err_msg=k)
+
+    def test_partial_participation_round_exact(self):
+        trainer = self._setup(FedConfig(
+            num_clients=4, rounds=1, local_steps=3, method="fedex",
+            participation=0.5, weighting="examples"))
+        self._assert_round_exact(trainer)
+        out = trainer.outcomes[0]
+        assert len(out.delivered) == 2  # ⌈0.5·4⌉ sampled, none dropped
+        assert out.weights is not None and len(set(out.weights)) > 1
+
+    def test_straggler_deadline_round_exact(self):
+        trainer = self._setup(FedConfig(
+            num_clients=4, rounds=1, local_steps=3, method="fedex",
+            weighting="examples", straggler_prob=0.5, straggler_factor=10.0,
+            round_deadline=2.0, min_quorum=2))
+        self._assert_round_exact(trainer)
+
+    def test_async_buffer_commit_exact(self):
+        trainer = self._setup(FedConfig(
+            num_clients=4, rounds=1, local_steps=3, method="fedex",
+            weighting="examples", async_buffer=2, latency_jitter=0.5))
+        self._assert_round_exact(trainer)
+        assert len(trainer.outcomes[0].delivered) == 2  # buffer size
+
+    def test_quantized_uplink_aggregates_transmitted_values(self):
+        """With int8 uplink the server aggregates the DEQUANTIZED adapters —
+        exactness holds wrt what was transmitted (outcome.delivered)."""
+        trainer = self._setup(FedConfig(
+            num_clients=3, rounds=1, local_steps=2, method="fedex",
+            weighting="examples", quantize_uplink="int8"))
+        self._assert_round_exact(trainer)
+
+    def test_trainer_ledger_populated(self):
+        trainer = self._setup(FedConfig(
+            num_clients=3, rounds=2, local_steps=2, method="fedex",
+            participation=1.0))
+        trainer.run()
+        totals = trainer.ledger.totals()
+        assert totals["uplink_params"] > 0
+        assert totals["downlink_params"] > totals["uplink_params"]  # +residual

@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -85,3 +88,19 @@ def test_fedit_scale_invariant_deviation(m, r, n, seed, scale):
     np.testing.assert_allclose(np.asarray(res2["w"]),
                                scale * np.asarray(res1["w"]),
                                rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(min_value=2, max_value=6), m=_dims, r=_rank, n=_dims,
+       seed=_seed)
+def test_weighted_fedex_exact_for_any_weights(k, m, r, n, seed):
+    """fedsrv regime: Σwᵢaᵢbᵢ = āb̄ + ΔW_res for ANY example-count weights."""
+    loras = _mk(k, m, r, n, seed)
+    counts = np.random.default_rng(seed + 1).integers(1, 1000, size=k).tolist()
+    w = [c / sum(counts) for c in counts]
+    g, res = fedex_aggregate(loras, counts)  # raw counts: normalized inside
+    ideal = sum(wi * jnp.matmul(l["w"]["a"], l["w"]["b"])
+                for wi, l in zip(w, loras))
+    got = jnp.matmul(g["w"]["a"], g["w"]["b"]) + res["w"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ideal),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,191 @@
+"""Weighted exact aggregation (fedsrv regime): the residual identity
+Σwᵢ aᵢbᵢ = ā b̄ + ΔW_res must hold exactly for non-uniform weights, subset
+participation, and stacked-layer leaves — and uniform weights must reproduce
+the unweighted operators bit-for-bit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    apply_residual,
+    assign_after_aggregation,
+    fedex_aggregate,
+    fedex_residual,
+    fedit_aggregate,
+    normalize_weights,
+    per_client_residuals,
+    product_mean,
+    residual_factors,
+    tree_mean,
+)
+
+
+def make_client_loras(k=4, m=24, r=4, n=16, seed=0, layers=None):
+    rng = np.random.default_rng(seed)
+    lead = () if layers is None else (layers,)
+    return [{
+        "blk": {
+            "q_proj": {
+                "a": jnp.asarray(rng.normal(size=lead + (m, r)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=lead + (r, n)), jnp.float32),
+            },
+        }
+    } for _ in range(k)]
+
+
+def dense_update(lora):
+    return jnp.matmul(lora["blk"]["q_proj"]["a"], lora["blk"]["q_proj"]["b"])
+
+
+def random_weights(k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 10.0, size=k)
+    return (w / w.sum()).tolist()
+
+
+class TestNormalizeWeights:
+    def test_none_and_uniform_fold_to_none(self):
+        assert normalize_weights(None, 3) is None
+        assert normalize_weights([1, 1, 1], 3) is None
+        assert normalize_weights([5.0, 5.0], 2) is None
+
+    def test_normalizes_to_unit_sum(self):
+        w = normalize_weights([1, 3], 2)
+        assert w == [0.25, 0.75]
+
+    def test_rejects_bad_weights(self):
+        with pytest.raises(ValueError):
+            normalize_weights([1, 2], 3)
+        with pytest.raises(ValueError):
+            normalize_weights([-1, 2], 2)
+        with pytest.raises(ValueError):
+            normalize_weights([0.0, 0.0], 2)
+
+
+class TestUniformRegression:
+    """Uniform weights must reproduce the unweighted operators EXACTLY
+    (same sum/k code path, bitwise)."""
+
+    def test_fedex_aggregate_bitwise(self):
+        loras = make_client_loras()
+        k = len(loras)
+        g0, res0 = fedex_aggregate(loras)
+        g1, res1 = fedex_aggregate(loras, [1.0 / k] * k)
+        for x, y in zip(jax.tree.leaves((g0, res0)), jax.tree.leaves((g1, res1))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_tree_mean_and_product_mean_bitwise(self):
+        loras = make_client_loras(k=3)
+        for op in (tree_mean, product_mean, fedit_aggregate):
+            u = op(loras)
+            w = op(loras, [2.0, 2.0, 2.0])  # equal but non-unit → still uniform
+            for x, y in zip(jax.tree.leaves(u), jax.tree.leaves(w)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestWeightedExactness:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_weighted_identity(self, seed):
+        """apply_residual(W0, weighted_fedex) == W0 + scale·Σwᵢaᵢbᵢ."""
+        loras = make_client_loras(seed=seed)
+        w = random_weights(len(loras), seed + 10)
+        g, res = fedex_aggregate(loras, w)
+        ideal = sum(wi * dense_update(l) for wi, l in zip(w, loras))
+
+        scale = 1.7
+        params = {"blk": {"q_proj": {"kernel": jnp.asarray(
+            np.random.default_rng(seed).normal(size=(24, 16)), jnp.float32)}}}
+        w_fedex = (apply_residual(params, res, scale)["blk"]["q_proj"]["kernel"]
+                   + scale * dense_update(g))
+        w_ideal = params["blk"]["q_proj"]["kernel"] + scale * ideal
+        np.testing.assert_allclose(w_fedex, w_ideal, rtol=1e-5, atol=1e-5)
+
+    def test_subset_participation(self):
+        """Weights over a sampled subset: identity holds on the subset."""
+        loras = make_client_loras(k=6, seed=3)
+        subset = [loras[i] for i in (0, 2, 5)]
+        n = [120, 40, 440]  # example counts → w = n/Σn
+        w = [x / sum(n) for x in n]
+        g, res = fedex_aggregate(subset, n)  # unnormalized counts accepted
+        ideal = sum(wi * dense_update(l) for wi, l in zip(w, subset))
+        got = dense_update(g) + res["blk"]["q_proj"]
+        np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-6)
+
+    def test_stacked_layer_layout(self):
+        loras = make_client_loras(k=3, layers=5, seed=4)
+        w = random_weights(3, 7)
+        g, res = fedex_aggregate(loras, w)
+        ideal = sum(wi * dense_update(l) for wi, l in zip(w, loras))
+        got = dense_update(g) + res["blk"]["q_proj"]
+        assert got.shape == (5, 24, 16)
+        np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-6)
+
+    def test_weighted_residual_nonzero_vs_uniform(self):
+        loras = make_client_loras(seed=5)
+        _, res_u = fedex_aggregate(loras)
+        _, res_w = fedex_aggregate(loras, [0.7, 0.1, 0.1, 0.1])
+        assert float(jnp.abs(res_u["blk"]["q_proj"]
+                             - res_w["blk"]["q_proj"]).max()) > 1e-4
+
+    def test_per_client_residuals_weighted(self):
+        loras = make_client_loras(k=3, seed=6)
+        w = random_weights(3, 8)
+        residuals = per_client_residuals(loras, w)
+        ideal = sum(wi * dense_update(l) for wi, l in zip(w, loras))
+        for lora_i, res_i in zip(loras, residuals):
+            got = dense_update(lora_i) + res_i["blk"]["q_proj"]
+            np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-5)
+
+    def test_weighted_factored_form_lossless(self):
+        """decompose.residual_factors stays exact under non-uniform weights."""
+        loras = make_client_loras(k=4, m=32, n=20, seed=7)
+        w = random_weights(4, 9)
+        _, res = fedex_aggregate(loras, w)
+        factors = [l["blk"]["q_proj"] for l in loras]
+        L, R = residual_factors(factors, w)
+        assert L.shape[1] == (len(loras) + 1) * 4
+        np.testing.assert_allclose(np.asarray(L @ R),
+                                   np.asarray(res["blk"]["q_proj"]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_fedex_residual_explicit_global(self):
+        loras = make_client_loras(seed=8)
+        w = random_weights(len(loras), 11)
+        g = fedit_aggregate(loras, w)
+        res = fedex_residual(loras, g, w)
+        _, res2 = fedex_aggregate(loras, w)
+        np.testing.assert_allclose(np.asarray(res["blk"]["q_proj"]),
+                                   np.asarray(res2["blk"]["q_proj"]),
+                                   rtol=1e-6)
+
+
+class TestReinitSeeding:
+    def test_reinit_deterministic_and_shape_independent(self):
+        """The fold-in key is a stable per-leaf counter — identical across
+        calls (and processes; no PYTHONHASHSEED dependence), and two leaves
+        with the SAME shape get DIFFERENT draws."""
+        loras = [{
+            "blk": {
+                "q_proj": {"a": jnp.ones((8, 2)), "b": jnp.zeros((2, 8))},
+                "k_proj": {"a": jnp.ones((8, 2)), "b": jnp.zeros((2, 8))},
+            }
+        } for _ in range(2)]
+        new1, _ = assign_after_aggregation("reinit", loras, jax.random.key(3))
+        new2, _ = assign_after_aggregation("reinit", loras, jax.random.key(3))
+        a1q = np.asarray(new1[0]["blk"]["q_proj"]["a"])
+        a2q = np.asarray(new2[0]["blk"]["q_proj"]["a"])
+        np.testing.assert_array_equal(a1q, a2q)
+        # same-shape leaves must not share an init (old hash(str(shape)) bug)
+        a1k = np.asarray(new1[0]["blk"]["k_proj"]["a"])
+        assert np.abs(a1q - a1k).max() > 0
+
+    def test_reinit_weighted_exactness(self):
+        loras = make_client_loras(seed=9)
+        w = random_weights(len(loras), 12)
+        new_loras, residual = assign_after_aggregation(
+            "reinit", loras, jax.random.key(0), w)
+        ideal = sum(wi * dense_update(l) for wi, l in zip(w, loras))
+        got = dense_update(new_loras[0]) + residual["blk"]["q_proj"]
+        np.testing.assert_allclose(got, ideal, rtol=1e-5, atol=1e-5)
