@@ -1,0 +1,192 @@
+"""Round-close benchmark: eager list-of-trees vs the fused close engine.
+
+Times the system's single hottest operation — the FedEx round close
+(global factor means + exact residual fold) — both ways:
+
+* **old**: the seed's eager tree-walk over a list of client adapter trees —
+  what the trainer ran per round: ``mean_deviation`` (the §6 metric) +
+  ``fedex_aggregate`` + ``apply_residual``, one dispatch per eager op, dense
+  ΔW_res materialised host-side, and
+* **new**: ``core/engine.py``'s ``close_round_jit`` program over
+  ``(C_max, …)``-stacked client buffers (one dispatch, divergence metric
+  computed inside via factored Grams, W0/stacks donated on accelerators).
+
+``speedup`` compares equal work (both sides produce new W0 + global factors
++ divergence); ``speedup_vs_close_only`` excludes the divergence from the old
+path for the narrower aggregate+fold comparison.
+
+Scenarios: uniform full participation, example-weighted, and 50 % partial
+participation (masked lanes). The uniform scenario also records whether the
+engine output is bitwise identical to the *jitted* composition of
+``fedex_aggregate + apply_residual`` (it must be — same op sequence), plus
+the max |Δ| against the eager path (≤ a few ulp of FMA contraction).
+
+Emits ``BENCH_aggregation.json`` so the perf trajectory is recorded:
+
+  PYTHONPATH=src python -m benchmarks.aggregation_bench [--quick] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import aggregation as agg
+from repro.core.divergence import mean_deviation
+from repro.core.engine import RoundCloseEngine
+from repro.util.tree import flatten_with_paths
+
+DEFAULT_OUT = "BENCH_aggregation.json"
+
+
+def _make_setting(quick: bool):
+    """C clients, L stacked layers, 4 adapted projections per layer stack."""
+    c, layers, m, n, r = (4, 4, 128, 128, 8) if quick else (8, 12, 256, 256, 8)
+    rng = np.random.default_rng(0)
+    mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    names = ("q_proj", "k_proj", "v_proj", "o_proj")
+    params = {"blocks": {p: {"kernel": mk((layers, m, n))} for p in names}}
+    lora_t = {"blocks": {p: {"a": mk((layers, m, r)), "b": mk((layers, r, n))}
+                         for p in names}}
+    loras = [{"blocks": {p: {"a": mk((layers, m, r)), "b": mk((layers, r, n))}
+                         for p in names}} for _ in range(c)]
+    meta = {"clients": c, "layers": layers, "m": m, "n": n, "rank": r,
+            "projections": len(names)}
+    return params, lora_t, loras, meta
+
+
+def _time(fn, *, reps: int) -> float:
+    jax.block_until_ready(fn())  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def _max_diff(tree_a, tree_b) -> float:
+    fa, fb = flatten_with_paths(tree_a), flatten_with_paths(tree_b)
+    return max(float(jnp.abs(jnp.asarray(fa[k], jnp.float32)
+                             - jnp.asarray(fb[k], jnp.float32)).max())
+               for k in fa)
+
+
+def _bitwise(tree_a, tree_b) -> bool:
+    fa, fb = flatten_with_paths(tree_a), flatten_with_paths(tree_b)
+    return all(bool((np.asarray(fa[k]) == np.asarray(fb[k])).all()) for k in fa)
+
+
+def run_bench(quick: bool = False) -> Dict:
+    params, lora_t, loras, meta = _make_setting(quick)
+    c = meta["clients"]
+    scale = 2.0
+    reps = 3 if quick else 10
+    rng = np.random.default_rng(1)
+    raw_w = rng.uniform(0.5, 4.0, size=c)
+    weighted = (raw_w / raw_w.sum()).tolist()
+    part_ids = list(range(0, c, 2))  # 50 % participation
+
+    scenarios = {
+        "uniform": (list(range(c)), None),
+        "weighted": (list(range(c)), weighted),
+        "participation_50pct": (part_ids, None),
+    }
+
+    result = {"config": dict(meta, scale=scale, reps=reps,
+                             backend=jax.default_backend()),
+              "scenarios": {}}
+    for name, (ids, weights) in scenarios.items():
+        subset = [loras[i] for i in ids]
+        sub_w = None if weights is None else [weights[i] for i in ids]
+
+        def old_close():
+            g, res = agg.fedex_aggregate(subset, sub_w)
+            return agg.apply_residual(params, res, scale)
+
+        def old_round():  # the trainer's full per-round host work
+            div = mean_deviation(subset)
+            return old_close(), div
+
+        old_close_us = _time(old_close, reps=reps)
+        old_us = _time(old_round, reps=reps)
+        old_params = old_close()
+
+        # donate=False: timing replays the close program on the same stacks,
+        # which donated buffers would forbid on accelerators; the streamed
+        # writes happen per arrival and are not part of the deadline-critical
+        # close being measured.
+        engine = RoundCloseEngine(params, lora_t, c_max=c, scale=scale,
+                                  backend="jnp" if jax.default_backend() == "cpu"
+                                  else "auto", donate=False)
+        engine.buffers.begin_round({i: i for i in range(c)})
+        for i in ids:
+            engine.buffers.write(i, loras[i])
+        stacks = engine.buffers.take()
+        w, mask, uniform = engine.weight_vector(ids, sub_w)
+        w0_leaves = {s.key: params["blocks"][s.key.split("/")[-1]]["kernel"]
+                     for s in engine.specs}
+
+        def new_close():
+            return engine._close(w0_leaves, stacks, jnp.asarray(w),
+                                 jnp.asarray(mask), uniform=uniform)
+
+        new_us = _time(new_close, reps=reps)
+        new_w0, glob, div = new_close()
+
+        new_params = {"blocks": {k.split("/")[-1]: {"kernel": v}
+                                 for k, v in new_w0.items()}}
+        row = {
+            "old_us": round(old_us, 1),
+            "old_close_only_us": round(old_close_us, 1),
+            "new_us": round(new_us, 1),
+            "speedup": round(old_us / new_us, 2),
+            "speedup_vs_close_only": round(old_close_us / new_us, 2),
+            "delivered": len(ids),
+            "weights": "examples" if weights else "uniform",
+            "max_abs_diff_vs_eager": _max_diff(new_params, old_params),
+        }
+        if uniform:
+            jit_close = jax.jit(
+                lambda p, ls: agg.apply_residual(
+                    p, agg.fedex_aggregate(ls)[1], scale))
+            row["uniform_bitwise_vs_jit"] = _bitwise(
+                new_params, jit_close(params, subset))
+        result["scenarios"][name] = row
+    return result
+
+
+def run(quick: bool = False) -> List[str]:
+    """Harness entry point (benchmarks/run.py): emit CSV rows + the json."""
+    result = run_bench(quick)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    rows = []
+    for name, s in result["scenarios"].items():
+        derived = (f"speedup={s['speedup']};old_us={s['old_us']};"
+                   f"delivered={s['delivered']}")
+        if "uniform_bitwise_vs_jit" in s:
+            derived += f";bitwise_vs_jit={s['uniform_bitwise_vs_jit']}"
+        rows.append(csv_row(f"aggregation/{name}", s["new_us"], derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    result = run_bench(args.quick)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+
+
+if __name__ == "__main__":
+    main()

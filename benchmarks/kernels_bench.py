@@ -21,7 +21,9 @@ from repro.kernels.flash_swa import flash_swa
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)  # compile
+    # block on the compile call too — otherwise async dispatch lets the first
+    # timed iteration absorb compilation and skews small-rep measurements
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(reps):
         out = fn(*args)
@@ -57,6 +59,18 @@ def run(quick: bool = False) -> List[str]:
     fused_hbm = 2 * m2 * n2 * 4 + (c + 1) * (m2 + n2) * r2 * 4
     rows.append(csv_row(
         "kernels/fedex_residual", us,
+        f"hbm_traffic_vs_naive={fused_hbm/naive_hbm:.3f};"
+        f"interpret_allclose_err={err:.2e}"))
+
+    # -- fedex_residual, weighted/masked (fedsrv ragged rounds) --------------
+    wv = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)
+    us = _time(jax.jit(lambda *t: ref.fedex_residual_ref(*t, 1.0, weights=wv)),
+               w0, a_s, b_s)
+    kern = fedex_residual_apply(w0, a_s, b_s, wv, scale=1.0, interpret=True)
+    err = float(jnp.abs(kern - ref.fedex_residual_ref(w0, a_s, b_s, 1.0,
+                                                      weights=wv)).max())
+    rows.append(csv_row(
+        "kernels/fedex_residual_weighted", us,
         f"hbm_traffic_vs_naive={fused_hbm/naive_hbm:.3f};"
         f"interpret_allclose_err={err:.2e}"))
 

@@ -12,6 +12,7 @@ import sys
 import time
 
 from benchmarks import (
+    aggregation_bench,
     fig2_divergence_layers,
     fig3_divergence_rounds,
     kernels_bench,
@@ -31,6 +32,7 @@ SUITES = {
     "fig2": fig2_divergence_layers,
     "fig3": fig3_divergence_rounds,
     "kernels": kernels_bench,
+    "aggregation": aggregation_bench,
     "roofline": roofline_report,
     "participation": scenarios_participation,
 }

@@ -204,6 +204,11 @@ class FedConfig:
     async_buffer: int = 0  # >0 → FedBuff-style commits of this buffer size
     staleness_alpha: float = 0.5  # async: weight ∝ (1+staleness)^(−α)
     quantize_uplink: str = "none"  # none | fp16 | int8 adapter uplink codec
+    # --- fused round-close engine (core/engine.py) ---
+    # "auto" → single-dispatch stacked-client close for fedex/average rounds
+    # (Pallas kernels on TPU, jitted jnp twin elsewhere); "jnp"/"pallas" force
+    # a backend; "off" → the legacy eager list-of-trees close.
+    engine: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -23,11 +23,14 @@ from repro.core.decompose import (
     truncated_svd_product,
 )
 from repro.core.divergence import deviation_tree, flatten_deviations, mean_deviation
+from repro.core.engine import RoundBuffers, RoundCloseEngine, make_close_fn
 from repro.core.federated import FederatedTrainer, make_eval_fn, make_local_step
 from repro.core.lora import init_lora, lora_param_count, merge_lora, resolve_targets
 
 __all__ = [
     "FederatedTrainer",
+    "RoundBuffers",
+    "RoundCloseEngine",
     "apply_residual",
     "apply_residual_fused",
     "assign_after_aggregation",
@@ -41,6 +44,7 @@ __all__ = [
     "flatten_deviations",
     "init_lora",
     "lora_param_count",
+    "make_close_fn",
     "make_eval_fn",
     "make_local_step",
     "map_factors",

@@ -21,9 +21,26 @@ residual identity ``Σwᵢ aᵢbᵢ = ā b̄ + ΔW_res`` with ``ā = Σwᵢaᵢ`
 for any normalized weights: ΔW_res is *defined* as the difference. ``weights
 = None`` (or uniform) takes the historical ``sum/k`` path bit-for-bit.
 
-The mesh-collective twin of ``fedex`` (psum-mean over a client axis inside a
-pjit'd program) lives in launch/train.py; THIS module is the mathematical
-ground truth both paths share.
+Which path runs where
+---------------------
+THIS module is the eager, op-by-op **ground truth** — lists of client trees,
+one jnp op per step, trivially auditable against the paper's equations. The
+production round close for fedex/average runs through ``core/engine.py``'s
+``close_round_jit``: ONE jitted program over ``(C_max, …)``-stacked client
+buffers (streamed in by fedsrv/transport as deliveries arrive) that computes
+the weighted factor means, the exact residual fold and the §6 divergence in
+a single dispatch — via these same operators (jnp backend) or the
+kernels/fedex_residual + kernels/factor_mean Pallas kernels (TPU backend,
+no dense m×n residual in HBM). The mesh-collective twin of ``fedex``
+(psum-mean over a client axis inside a pjit'd program) lives in
+launch/train.py.
+
+The C_max padding contract: engine stacks are always ``(C_max, …)``; a
+round's candidates get lanes in client-id order and non-delivered lanes keep
+weight 0 (the participation mask), so ragged quorums / weighted rounds reuse
+one compiled program. The engine's uniform full-participation close is
+bitwise identical to the *jitted* composition of these operators; the eager
+path here differs from any fused program by ≤2 ulp (XLA FMA contraction).
 """
 
 from __future__ import annotations
@@ -247,15 +264,22 @@ def per_client_residuals(client_loras: List[Params],
 # --------------------------------------------------------------------------
 
 def apply_residual_fused(params: Params, client_loras: List[Params],
-                         scale: float, *, interpret: Optional[bool] = None
-                         ) -> Params:
+                         scale: float, *, weights: Weights = None,
+                         interpret: Optional[bool] = None) -> Params:
     """W0 ← W0 + scale·ΔW_res via the Pallas fedex_residual kernel.
 
     The TPU path of Eq. 12+14: client factors stream through VMEM and the
     dense m×n residual is never materialised in HBM (kernels/fedex_residual).
     Semantically identical to ``apply_residual(params, fedex_residual(...))``
-    — asserted by tests/test_kernels.py and test_federated.py.
+    — asserted by tests/test_kernels.py and test_federated.py. Accepts the
+    same optional per-client ``weights`` as the jnp operators (the kernel's
+    scalar-prefetch weighted path). NOTE: the round-close hot path no longer
+    stacks lists here — core/engine.py streams deliveries into preallocated
+    stacks and closes in one jitted program; this helper remains for one-shot
+    folds over materialised client lists (examples, hetero adapters).
     """
+    w = normalize_weights(weights, len(client_loras))
+    wvec = None if w is None else jnp.asarray(w, jnp.float32)
     from repro.kernels import fedex_fold
 
     def walk(p: Any, nodes: List[Any]) -> Any:
@@ -269,9 +293,9 @@ def apply_residual_fused(params: Params, client_loras: List[Params],
                 b_stack = b_stack.transpose(perm)
             if isinstance(p, dict) and "kernel" in p:
                 new_k = fedex_fold(p["kernel"], a_stack, b_stack, scale,
-                                   interpret=interpret)
+                                   weights=wvec, interpret=interpret)
                 return dict(p, kernel=new_k.astype(p["kernel"].dtype))
-            return (fedex_fold(p, a_stack, b_stack, scale,
+            return (fedex_fold(p, a_stack, b_stack, scale, weights=wvec,
                                interpret=interpret)).astype(p.dtype)
         if isinstance(nodes[0], dict):
             out = dict(p) if isinstance(p, dict) else p

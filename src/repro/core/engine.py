@@ -1,0 +1,445 @@
+"""Fused weighted round-close: the single-dispatch stacked-client engine.
+
+The seed trainer closed a FedEx round with a Python tree-walk over *lists* of
+client adapter trees: per-leaf ``jnp.stack`` at deadline, an eager op per
+factor for the mean, an eager dense ΔW_res materialisation, an eager add into
+W0 — dozens of dispatches per round, each a host↔device round trip. This
+module replaces that with ONE jitted program over pre-stacked client buffers:
+
+* :class:`RoundBuffers` — preallocated ``(C_max, …)`` device stacks per
+  adapter leaf. The fedsrv transport decodes uplink payloads *into* a slot as
+  each delivery arrives (streaming accumulation), so round close starts with
+  the stack already resident — no burst of host→device copies at deadline.
+  Slots are assigned in client-id order over the round's candidate set;
+  non-delivered lanes simply keep zero weight (the participation mask).
+* :func:`make_close_fn` / :class:`RoundCloseEngine` — the fused close: global
+  factor means, the exact residual fold into W0, and the round's divergence
+  metric, all inside one ``jax.jit`` with the W0 leaves and client stacks
+  donated (``donate_argnums``) so XLA updates them in place. Stacked-layer
+  leaves and MoE raw-tensor targets batch through the same program; the
+  ``C_max`` padding means every round — any quorum, any weighting — reuses
+  one compiled executable per (uniform?, shapes) signature.
+
+Backends: ``jnp`` composes the operators of core/aggregation.py inside the
+jit (the mathematical ground truth — on CPU XLA fuses the residual+fold so
+nothing extra hits memory); ``pallas`` routes the fold through the
+kernels/fedex_residual + kernels/factor_mean tiled kernels, which never
+materialise the dense m×n residual in HBM (the TPU hot path). ``auto`` picks
+pallas on TPU, jnp elsewhere.
+
+Numerics contract: the uniform full-participation close is **bitwise
+identical to the jitted composition** of ``fedex_aggregate`` +
+``apply_residual`` (same op sequence, same XLA program). The historical
+*eager* list path differs from any fused program by ≤2 ulp where XLA
+contracts mul+add into FMA — asserted in tests/test_engine.py. Weighted and
+ragged rounds hold the exact residual identity to tight float32 tolerance.
+
+The divergence metric (paper §6) is computed WITHOUT materialising the dense
+deviation: dev = Σu_c·a_c b_c − ā b̄ factors as L@R with L=[a_0…a_{C-1}, ā]
+and R=[u_0 b_0; …; −b̄], and ‖L@R‖²_F = Σ_{ij} (LᵀL)_{ij}·(R Rᵀ)_{ij} — two
+(C+1)r × (C+1)r Grams instead of an m×n deviation matrix. Cancellation in the
+Gram sum gives this an absolute noise floor around 1e-6 when clients have
+barely diverged (it is exact at any magnitude the §6 analysis cares about).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+Params = Dict[str, Any]
+
+_CPU = jax.default_backend() == "cpu"
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        on_tpu = any(d.platform == "tpu" for d in jax.devices())
+        return "pallas" if on_tpu else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown engine backend {backend!r}")
+    return backend
+
+
+# --------------------------------------------------------------------------
+# factor specs: pair every lora {a, b} node with its W0 leaf in params
+# --------------------------------------------------------------------------
+
+class FactorSpec:
+    """One adapted matrix: lora factor paths + the W0 leaf they update.
+
+    ``key`` is the '/'-joined lora-tree path of the factor node; the W0 leaf
+    lives at the same path in params, either as ``{key}/kernel`` (projection
+    modules) or as a raw tensor (MoE expert stacks). Leading axes before the
+    trailing (m, n) are scan-stacked layers / experts and batch through the
+    engine unchanged.
+    """
+
+    def __init__(self, key: str, has_kernel: bool, w0_shape: Tuple[int, ...],
+                 w0_dtype, a_shape: Tuple[int, ...], b_shape: Tuple[int, ...]):
+        self.key = key
+        self.has_kernel = has_kernel
+        self.w0_shape = w0_shape
+        self.w0_dtype = w0_dtype
+        self.a_shape = a_shape
+        self.b_shape = b_shape
+
+
+def build_factor_specs(params: Params, lora: Params) -> List[FactorSpec]:
+    """Walk the adapter tree against params, one spec per {a, b} node."""
+    specs: List[FactorSpec] = []
+
+    def walk(prefix: List[str], p: Any, l: Any) -> None:
+        if isinstance(l, dict) and set(l.keys()) >= {"a", "b"}:
+            key = "/".join(prefix)
+            if isinstance(p, dict) and "kernel" in p:
+                w0 = p["kernel"]
+                has_kernel = True
+            else:
+                w0 = p  # raw tensor target (MoE experts)
+                has_kernel = False
+            specs.append(FactorSpec(key, has_kernel, tuple(w0.shape), w0.dtype,
+                                    tuple(l["a"].shape), tuple(l["b"].shape)))
+            return
+        if isinstance(l, dict):
+            for k in l:
+                if isinstance(p, dict) and k in p:
+                    walk(prefix + [k], p[k], l[k])
+
+    walk([], params, lora)
+    if not specs:
+        raise ValueError("no adapter factors found — empty lora tree?")
+    return specs
+
+
+def _get_path(tree: Any, path: str) -> Any:
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _set_path(tree: Params, path: str, value: Any) -> Params:
+    """Functional nested-dict update (copies only the spine)."""
+    parts = path.split("/")
+    out = dict(tree)
+    node = out
+    for p in parts[:-1]:
+        node[p] = dict(node[p])
+        node = node[p]
+    node[parts[-1]] = value
+    return out
+
+
+# --------------------------------------------------------------------------
+# streaming round buffers
+# --------------------------------------------------------------------------
+
+class RoundBuffers:
+    """Preallocated ``(C_max, …)`` device stacks, written slot-by-slot.
+
+    The coordinator assigns each round's candidate clients to slots (client-id
+    order). On accelerators :meth:`write_flat` scatters one decoded payload
+    into its lane via a single jitted ``dynamic_update_index_in_dim`` program
+    with the stack buffers donated, so the update is in place — no copy of
+    the full stack per arrival. On CPU XLA has no donation (the scatter would
+    copy every stack per arrival), so arrivals stage into preallocated host
+    numpy buffers — one O(leaf) slice-assign each — and ``take()`` pays a
+    single host→device conversion per round, exactly the cost of the old
+    per-leaf ``jnp.stack``. ``take()`` hands the stacks to the close program
+    (which donates them as scratch); the next ``begin_round`` re-materialises
+    zeros.
+    """
+
+    def __init__(self, lora_template: Params, c_max: int):
+        if c_max < 1:
+            raise ValueError("c_max must be ≥ 1")
+        self.c_max = c_max
+        flat = flatten_with_paths(lora_template)
+        self._shapes = {p: tuple(x.shape) for p, x in flat.items()}
+        self._host = _CPU
+        self._stacks = None  # Dict[str, jnp.ndarray | np.ndarray]
+        self._slots: Dict[int, int] = {}
+        self._written: Dict[int, int] = {}
+        if not self._host:
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def _scatter(stacks, slot, leaves):
+                return {
+                    p: jax.lax.dynamic_update_index_in_dim(
+                        stacks[p], jnp.asarray(leaves[p], jnp.float32),
+                        slot, 0)
+                    for p in stacks
+                }
+
+            self._scatter = _scatter
+
+    def _alloc(self):
+        if self._host:
+            return {p: np.zeros((self.c_max,) + s, np.float32)
+                    for p, s in self._shapes.items()}
+        return {p: jnp.zeros((self.c_max,) + s, jnp.float32)
+                for p, s in self._shapes.items()}
+
+    # -- round lifecycle ----------------------------------------------------
+    def begin_round(self, slots: Dict[int, int]) -> None:
+        """slots: client_id → lane, assigned over the round's candidate set."""
+        if len(slots) > self.c_max:
+            raise ValueError(f"{len(slots)} candidates > C_max={self.c_max}")
+        if any(not 0 <= s < self.c_max for s in slots.values()):
+            raise ValueError(f"slot out of range in {slots}")
+        self._slots = dict(slots)
+        self._written = {}
+        if self._stacks is None:
+            self._stacks = self._alloc()
+
+    def write_flat(self, client_id: int, flat: Dict[str, Any]) -> None:
+        """Scatter one client's decoded adapter leaves into its lane."""
+        slot = self._slots[client_id]
+        if self._host:
+            for p in self._shapes:
+                self._stacks[p][slot] = np.asarray(flat[p], np.float32)
+        else:
+            leaves = {p: flat[p] for p in self._shapes}
+            self._stacks = self._scatter(self._stacks, jnp.int32(slot), leaves)
+        self._written[client_id] = slot
+
+    def write(self, client_id: int, lora_tree: Params) -> None:
+        self.write_flat(client_id, flatten_with_paths(lora_tree))
+
+    # -- views --------------------------------------------------------------
+    @property
+    def delivered(self) -> Dict[int, int]:
+        """client_id → slot for every payload written this round."""
+        return dict(self._written)
+
+    def slot_of(self, client_id: int) -> int:
+        return self._slots[client_id]
+
+    def take(self) -> Dict[str, jnp.ndarray]:
+        """Hand the stacks to the close program (donated there); reset."""
+        stacks, self._stacks = self._stacks, None
+        if stacks is None:
+            raise RuntimeError("take() before begin_round/any writes")
+        if self._host:  # one host→device conversion per round
+            stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
+        return stacks
+
+
+# --------------------------------------------------------------------------
+# the fused close program
+# --------------------------------------------------------------------------
+
+def _dev_fro_scaled(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
+                    u: jnp.ndarray) -> jnp.ndarray:
+    """Scaled Frobenius norm of Σu_c·a_c b_c − ā b̄ via the factored Grams —
+    never materialises the (…, m, n) deviation. Returns (…,) per leading axes."""
+    a = a_stack.astype(jnp.float32)  # (C, ..., m, r)
+    b = b_stack.astype(jnp.float32)  # (C, ..., r, n)
+    c = a.shape[0]
+    abar = jnp.einsum("c,c...mr->...mr", u, a)
+    bbar = jnp.einsum("c,c...rn->...rn", u, b)
+    L = jnp.concatenate([a[i] for i in range(c)] + [abar], axis=-1)
+    R = jnp.concatenate([u[i] * b[i] for i in range(c)] + [-bbar], axis=-2)
+    gl = jnp.einsum("...mi,...mj->...ij", L, L)
+    gr = jnp.einsum("...in,...jn->...ij", R, R)
+    fro_sq = jnp.maximum(jnp.einsum("...ij,...ij->...", gl, gr), 0.0)
+    m, n = a.shape[-2], b.shape[-1]
+    return jnp.sqrt(fro_sq) / np.sqrt(m * n)
+
+
+def _uniform_close(specs: Sequence[FactorSpec], scale: float,
+                   w0_leaves: Dict[str, jnp.ndarray],
+                   stacks: Dict[str, jnp.ndarray], c_max: int):
+    """Full-participation uniform close — literally the aggregation operators
+    over stack slices, so the jitted program is the jnp ground truth."""
+    client_trees = [
+        {s.key: {"a": stacks[s.key + "/a"][c], "b": stacks[s.key + "/b"][c]}
+         for s in specs}
+        for c in range(c_max)
+    ]
+    g = agg.fedit_aggregate(client_trees)
+    res = agg.fedex_residual(client_trees, g)
+    new_w0 = {
+        s.key: (w0_leaves[s.key].astype(jnp.float32)
+                + scale * res[s.key]).astype(s.w0_dtype)
+        for s in specs
+    }
+    glob = {s.key: g[s.key] for s in specs}
+    return new_w0, glob
+
+
+def _weighted_close_jnp(specs: Sequence[FactorSpec], scale: float,
+                        w0_leaves: Dict[str, jnp.ndarray],
+                        stacks: Dict[str, jnp.ndarray],
+                        w: jnp.ndarray, c_max: int):
+    """Weighted/masked close, jnp twin: Σw_c a_c b_c − ā b̄ folded into W0.
+    Zero-weight lanes vanish from every sum — the participation mask."""
+    new_w0, glob = {}, {}
+    for s in specs:
+        a = stacks[s.key + "/a"]  # (C, ..., m, r) f32
+        b = stacks[s.key + "/b"]
+        ga = jnp.einsum("c,c...mr->...mr", w, a)
+        gb = jnp.einsum("c,c...rn->...rn", w, b)
+        mean_prod = jnp.einsum("c,c...mr,c...rn->...mn", w, a, b)
+        res = mean_prod - jnp.matmul(ga, gb)
+        new_w0[s.key] = (w0_leaves[s.key].astype(jnp.float32)
+                         + scale * res).astype(s.w0_dtype)
+        glob[s.key] = {"a": ga, "b": gb}
+    return new_w0, glob
+
+
+def _weighted_close_pallas(specs: Sequence[FactorSpec], scale: float,
+                           w0_leaves: Dict[str, jnp.ndarray],
+                           stacks: Dict[str, jnp.ndarray],
+                           w: Optional[jnp.ndarray], interpret: Optional[bool]):
+    """Fused-kernel close: factor means + residual fold through the tiled
+    Pallas kernels — the dense m×n residual never exists in HBM."""
+    from repro.kernels import factor_mean, fedex_fold
+
+    new_w0, glob = {}, {}
+    for s in specs:
+        a = stacks[s.key + "/a"]  # (C, ..., m, r)
+        b = stacks[s.key + "/b"]
+        ga = factor_mean(a, w, interpret=interpret)
+        gb = factor_mean(b, w, interpret=interpret)
+        # kernel layout: leading layer axes first, client axis innermost
+        am = jnp.moveaxis(a, 0, -3)
+        bm = jnp.moveaxis(b, 0, -3)
+        new_w0[s.key] = fedex_fold(
+            w0_leaves[s.key], am, bm, scale, weights=w,
+            interpret=interpret).astype(s.w0_dtype)
+        glob[s.key] = {"a": ga, "b": gb}
+    return new_w0, glob
+
+
+def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
+                  backend: str = "auto", interpret: Optional[bool] = None,
+                  donate: bool = True):
+    """Build the jitted close program.
+
+    Signature: ``close(w0_leaves, stacks, weights, mask, uniform=...)`` →
+    ``(new_w0_leaves, global_factors, divergence)`` with ``w0_leaves`` and
+    ``stacks`` donated (in-place update; skipped on CPU where XLA has no
+    donation support, or with ``donate=False`` for callers that replay the
+    program on the same buffers, e.g. benchmarks). ``uniform=True`` is the
+    static full-participation branch — bitwise twin of the jitted list path;
+    otherwise ``weights`` is the (C_max,) vector with zeros masking
+    non-delivered lanes and ``mask`` its 0/1 indicator (used for the
+    uniform-over-delivered divergence).
+    """
+    backend = _resolve_backend(backend)
+    specs = list(specs)
+
+    def _close(w0_leaves, stacks, weights, mask, *, uniform: bool):
+        if uniform:
+            new_w0, glob = _uniform_close(specs, scale, w0_leaves, stacks,
+                                          c_max)
+            u = jnp.full((c_max,), 1.0 / c_max, jnp.float32)
+        else:
+            if backend == "pallas":
+                new_w0, glob = _weighted_close_pallas(
+                    specs, scale, w0_leaves, stacks, weights, interpret)
+            else:
+                new_w0, glob = _weighted_close_jnp(
+                    specs, scale, w0_leaves, stacks, weights, c_max)
+            u = mask / jnp.maximum(mask.sum(), 1.0)
+        parts = [
+            _dev_fro_scaled(stacks[s.key + "/a"], stacks[s.key + "/b"],
+                            u).ravel()
+            for s in specs
+        ]
+        div = jnp.concatenate(parts).mean() if parts else jnp.float32(0)
+        return new_w0, glob, div
+
+    donate_argnums = (0, 1) if donate and not _CPU else ()
+    return jax.jit(_close, static_argnames=("uniform",),
+                   donate_argnums=donate_argnums)
+
+
+class RoundCloseEngine:
+    """Owns the streaming buffers + the compiled close program for a trainer.
+
+    One engine per (params structure, adapter structure, C_max, scale):
+    ``buffers`` is handed to the fedsrv coordinator as the delivery sink, and
+    :meth:`close` runs the single-dispatch fused close over whatever subset
+    actually arrived, with any weighting. The C_max padding contract: stacks
+    are always ``(C_max, …)``; a round's candidates get lanes in client-id
+    order; weights (zeros on non-delivered lanes) mask the rest — so ragged
+    quorums and weighted rounds reuse ONE compiled program, and the uniform
+    full-participation round keeps its own bitwise-stable branch.
+    """
+
+    def __init__(self, params: Params, lora_template: Params, *,
+                 c_max: int, scale: float, backend: str = "auto",
+                 interpret: Optional[bool] = None, donate: bool = True):
+        self.specs = build_factor_specs(params, lora_template)
+        self.c_max = c_max
+        self.scale = scale
+        self.backend = _resolve_backend(backend)
+        self.buffers = RoundBuffers(lora_template, c_max)
+        self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
+                                    backend=self.backend, interpret=interpret,
+                                    donate=donate)
+
+    # ------------------------------------------------------------------
+    def weight_vector(self, client_ids: Sequence[int],
+                      weights: Optional[Sequence[float]]
+                      ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """(C_max,) weights + mask from the delivered ids; uniform? flag."""
+        slots = [self.buffers.slot_of(cid) for cid in client_ids]
+        mask = np.zeros(self.c_max, np.float32)
+        mask[slots] = 1.0
+        norm = agg.normalize_weights(weights, len(client_ids))
+        uniform = norm is None and len(client_ids) == self.c_max
+        w = np.zeros(self.c_max, np.float32)
+        if norm is None:
+            w[slots] = 1.0 / len(client_ids)
+        else:
+            for s, wi in zip(slots, norm):
+                w[s] = wi
+        return w, mask, uniform
+
+    def close(self, params: Params, client_ids: Sequence[int],
+              weights: Optional[Sequence[float]] = None
+              ) -> Tuple[Params, Params, float]:
+        """Close the round over the delivered subset.
+
+        Returns ``(global_lora, new_params, divergence)``. ``params`` W0
+        leaves and the streamed stacks are donated to the close program.
+        """
+        if not client_ids:
+            raise ValueError("cannot close a round with no deliveries")
+        missing = [c for c in client_ids if c not in self.buffers.delivered]
+        if missing:
+            raise ValueError(f"clients {missing} were never written to the "
+                             "round buffers")
+        w, mask, uniform = self.weight_vector(client_ids, weights)
+        w0_leaves = {
+            s.key: (_get_path(params, s.key)["kernel"] if s.has_kernel
+                    else _get_path(params, s.key))
+            for s in self.specs
+        }
+        stacks = self.buffers.take()
+        new_w0, glob, div = self._close(w0_leaves, stacks,
+                                        jnp.asarray(w), jnp.asarray(mask),
+                                        uniform=uniform)
+        new_params = params
+        for s in self.specs:
+            if s.has_kernel:
+                node = dict(_get_path(params, s.key), kernel=new_w0[s.key])
+                new_params = _set_path(new_params, s.key, node)
+            else:
+                new_params = _set_path(new_params, s.key, new_w0[s.key])
+        flat = {}
+        for s in self.specs:
+            flat[s.key + "/a"] = glob[s.key]["a"]
+            flat[s.key + "/b"] = glob[s.key]["b"]
+        global_lora = unflatten_from_paths(flat)
+        return global_lora, new_params, float(div)

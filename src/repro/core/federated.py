@@ -117,6 +117,7 @@ class FederatedTrainer:
             self.client_params = [self.params for _ in range(self.fed_cfg.num_clients)]
         self._global_step = 0
         self._total_steps = self.fed_cfg.rounds * self.fed_cfg.local_steps
+        self._last_div = 0.0
         # heterogeneous ranks (beyond-paper; core/hetero.py): per-client
         # adapters of rank rᵢ + per-client frozen bases for the residual fold.
         self.hetero = bool(self.fed_cfg.client_ranks)
@@ -128,6 +129,19 @@ class FederatedTrainer:
                 for i, r in enumerate(self.fed_cfg.client_ranks)]
             self.client_params = [self.params] * self.fed_cfg.num_clients
         self.coordinator = self._build_coordinator()
+        # fused round-close engine (core/engine.py): the fedex/average hot
+        # path closes in ONE jitted program over streamed (C_max, …) stacks.
+        # Everything else (other methods, assignments, hetero ranks) keeps
+        # the eager list-of-trees ground truth.
+        self.engine = None
+        if (self.fed_cfg.engine != "off" and self.method == "fedex"
+                and self.fed_cfg.assignment == "average" and not self.hetero):
+            from repro.core.engine import RoundCloseEngine
+            self.engine = RoundCloseEngine(
+                self.params, self.global_lora,
+                c_max=self.fed_cfg.num_clients, scale=self.scale,
+                backend=self.fed_cfg.engine)
+            self.coordinator.sink = self.engine.buffers
 
     def _build_coordinator(self):
         """fedsrv coordinator from FedConfig; defaults = the trivial policy
@@ -163,6 +177,17 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     def _close_round(self, rnd: int, outcome, client_loras: List, weights):
         """Method-specific round close over the delivered subset (weighted)."""
+        if self.engine is not None:
+            # fused single-dispatch close: weighted factor means + exact
+            # residual fold + divergence in one jitted program over the
+            # streamed stacks (W0 leaves and stacks donated). No dense m×n
+            # residual tree ever exists host-side.
+            self.global_lora, self.params, self._last_div = self.engine.close(
+                self.params, outcome.client_ids, weights)
+            self._ledger_residual(
+                rnd, None, len(outcome.client_ids),
+                leaf_shapes=[s.w0_shape for s in self.engine.specs])
+            return
         k_d = len(client_loras)
         if self.method == "fedit":
             self.global_lora = agg.fedit_aggregate(client_loras, weights)
@@ -201,20 +226,25 @@ class FederatedTrainer:
             raise ValueError(f"unknown method {self.method!r}")
 
     def _ledger_residual(self, rnd: int, residual, k_delivered: int,
-                         truncated_rank: int = 0) -> None:
+                         truncated_rank: int = 0,
+                         leaf_shapes: Optional[List[tuple]] = None) -> None:
         """Account the server→client residual broadcast in the bytes ledger
-        (factored form of core/decompose.py, never the dense m×n matrix)."""
+        (factored form of core/decompose.py, never the dense m×n matrix).
+        ``leaf_shapes`` replaces ``residual`` on the engine path, where no
+        dense residual tree exists — only the adapted W0 leaf shapes."""
         import numpy as np
 
         from repro.core.decompose import (factored_residual_params,
                                           truncated_residual_params)
 
+        if leaf_shapes is None:
+            leaf_shapes = [leaf.shape for leaf in jax.tree.leaves(residual)]
         per_client = 0
-        for leaf in jax.tree.leaves(residual):
-            if leaf.ndim < 2:
+        for shape in leaf_shapes:
+            if len(shape) < 2:
                 continue
-            copies = int(np.prod(leaf.shape[:-2])) if leaf.ndim > 2 else 1
-            m, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+            copies = int(np.prod(shape[:-2])) if len(shape) > 2 else 1
+            m, n = int(shape[-2]), int(shape[-1])
             if truncated_rank:
                 per_client += copies * truncated_residual_params(
                     m, n, truncated_rank)
@@ -324,10 +354,17 @@ class FederatedTrainer:
                 client_losses = [round_losses[c] for c in outcome.client_ids]
                 weights = outcome.weights
 
-                if not client_loras:  # every sampled client dropped out
+                if not outcome.delivered:  # every sampled client dropped out
                     logger.warning("round=%d: no deliveries; global kept", rnd)
                     div = 0.0
                     client_losses = [float("nan")]
+                elif self.engine is not None:
+                    # fused close over the streamed stacks; it also computes
+                    # the divergence metric inside the same jitted program
+                    # (factored Grams — no dense deviation matrix, and no
+                    # eager mean_deviation tree-walk per round)
+                    self._close_round(rnd, outcome, client_loras, weights)
+                    div = self._last_div
                 else:
                     div = mean_deviation(client_loras)
                     self._close_round(rnd, outcome, client_loras, weights)

@@ -119,22 +119,40 @@ class RoundCoordinator:
                  stragglers: Optional[StragglerModel] = None,
                  codec: Optional[AdapterCodec] = None,
                  ledger: Optional[BytesLedger] = None,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 sink: Optional[Any] = None):
         self.registry = registry
         self.policy = policy or RoundPolicy()
         self.stragglers = stragglers or StragglerModel()
         self.codec = codec or AdapterCodec("none")
         self.ledger = ledger or BytesLedger()
         self.clock = clock or SimClock()
+        # optional streaming sink (core/engine.RoundBuffers): uplink payloads
+        # are decoded INTO preallocated (C_max, …) device stacks as they
+        # arrive — the fused round-close engine reads the stacks instead of
+        # re-stacking a list of host trees at the deadline.
+        self.sink = sink
         self._downlink_params: Optional[int] = None  # adapter tree is static
 
     # ------------------------------------------------------------------
+    def _open_sink(self, candidates: List[int]) -> None:
+        """Assign this round's candidate clients to stack lanes in client-id
+        order (stable: the uniform full-participation sum visits lanes in the
+        same order the legacy list path visited clients)."""
+        if self.sink is not None:
+            self.sink.begin_round({cid: i
+                                   for i, cid in enumerate(sorted(candidates))})
+
     def _uplink(self, lora: Any, round_id: int, client_id: int) -> Any:
         """Client → server through the codec; the server aggregates what was
-        actually transmitted (quantization included)."""
+        actually transmitted (quantization included). With a streaming sink
+        the decoded leaves additionally go straight into the client's stack
+        lane (one decode, shared with the returned host tree)."""
         payload = self.codec.encode(lora, round_id=round_id,
                                     client_id=client_id, direction="uplink")
         self.ledger.record(payload)
+        if self.sink is not None:
+            return self.codec.decode_into(payload, self.sink)
         return self.codec.decode(payload)
 
     def _record_downlink(self, lora: Any, round_id: int, client_id: int) -> None:
@@ -170,6 +188,10 @@ class RoundCoordinator:
         # deadline the round simply waits for every non-dropout.
         quorum = max(1, pol.min_quorum)
         quorum = min(quorum, len(arrivals)) if arrivals else 0
+
+        # streaming close: every non-dropout candidate gets a stack lane up
+        # front; late/dropped lanes simply stay masked (weight 0) at close
+        self._open_sink([c.client_id for _, c in arrivals])
 
         delivered: List[Delivery] = []
         dropped_deadline: List[int] = []
@@ -277,6 +299,7 @@ class AsyncBufferCoordinator(RoundCoordinator):
                 weights=None, opened_at=opened, closed_at=self.clock.now(),
                 comm=self.ledger.round_totals(round_id))
         batch, self._inflight = self._inflight[:take], self._inflight[take:]
+        self._open_sink([c.client_id for _, c, _ in batch])
 
         delivered: List[Delivery] = []
         for t, c, v in batch:

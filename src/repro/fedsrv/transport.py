@@ -89,13 +89,31 @@ class AdapterCodec:
         return Payload(round_id=round_id, client_id=client_id,
                        direction=direction, codec=codec, tensors=tensors)
 
-    def decode(self, payload: Payload) -> Any:
+    def _decode_flat(self, payload: Payload) -> Dict[str, np.ndarray]:
         flat = {}
         for path, enc in payload.tensors.items():
             if enc.scale is not None:
                 flat[path] = enc.data.astype(np.float32) * enc.scale
             else:
                 flat[path] = enc.data.astype(np.float32)
+        return flat
+
+    def decode(self, payload: Payload) -> Any:
+        return unflatten_from_paths(self._decode_flat(payload))
+
+    def decode_into(self, payload: Payload, buffers: Any) -> Any:
+        """Decode straight into a streaming sink (core/engine.RoundBuffers).
+
+        The dequantized leaves are scattered into the sink's preallocated
+        ``(C_max, …)`` device stacks at the payload's client lane as the
+        delivery arrives — the round close reads the stacks, so there is no
+        burst of stacking work at the deadline. The sink aggregates exactly
+        what was transmitted (quantization included), like :meth:`decode`.
+        Also returns the host tree (one decode, shared) so the coordinator's
+        ``Delivery.lora`` stays inspectable by diagnostics and tests.
+        """
+        flat = self._decode_flat(payload)
+        buffers.write_flat(payload.client_id, flat)
         return unflatten_from_paths(flat)
 
 

@@ -2,13 +2,23 @@
 
 * lora_matmul     — fused base+adapter projection (every LoRA'd matmul)
 * fedex_residual  — the paper's aggregation residual, fused into the W0 update
+                    (uniform OR weighted/masked via a scalar-prefetch vector)
+* factor_mean     — weighted client-mean of stacked adapter factors (ā, b̄)
 * flash_swa       — sliding-window flash attention (mixtral/gemma3 long ctx)
 
 Each ships a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
 Validated with interpret=True on CPU; the BlockSpec tiling targets TPU v5e
-VMEM/MXU geometry (128-aligned tiles).
+VMEM/MXU geometry (128-aligned tiles). Tile-indivisible shapes are zero-padded
+inside the kernels and sliced back (exact for every product involved).
+
+Which path runs where: ``core/aggregation.py`` is the eager jnp ground truth;
+``core/engine.py`` composes fedex_residual + factor_mean into the single
+jitted round-close program (jnp twin on CPU, Pallas on TPU). The uniform path
+of each kernel mirrors the aggregation operators op-for-op, so it is bitwise
+identical to the *jitted* ground truth (the eager path differs by ≤2 ulp
+where XLA contracts mul+add to FMA inside fused programs).
 """
 
-from repro.kernels.ops import fedex_fold, lora_dense, swa_attention
+from repro.kernels.ops import factor_mean, fedex_fold, lora_dense, swa_attention
 
-__all__ = ["fedex_fold", "lora_dense", "swa_attention"]
+__all__ = ["factor_mean", "fedex_fold", "lora_dense", "swa_attention"]

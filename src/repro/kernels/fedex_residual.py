@@ -1,14 +1,31 @@
 """FedEx-LoRA residual fold-in Pallas kernel (the paper's Eq. 12+14, fused).
 
-Computes  W0 + scale·( mean_c(a_c @ b_c) − ā @ b̄ )  tile-by-tile: for each
-MXU-aligned (bm, bn) output tile, the stacked client factors stream through
-VMEM once and the dense m×n residual is NEVER materialised in HBM (the naive
-host path builds the full ΔW_res then adds — an extra 2·m·n f32 HBM round
-trip per adapted matrix per round; at deepseek-v2 scale that is ~5 GB of
-avoidable traffic per aggregation).
+Computes  W0 + scale·( Σ_c w_c·(a_c @ b_c) − ā @ b̄ )  tile-by-tile, where
+ā = Σ_c w_c·a_c (and likewise b̄): for each MXU-aligned (bm, bn) output tile,
+the stacked client factors stream through VMEM once and the dense m×n residual
+is NEVER materialised in HBM (the naive host path builds the full ΔW_res then
+adds — an extra 2·m·n f32 HBM round trip per adapted matrix per round; at
+deepseek-v2 scale that is ~5 GB of avoidable traffic per aggregation).
 
-The client mean over C is unrolled inside the kernel (C = cross-silo client
-count, 3–16 — small); ā/b̄ tiles are recomputed per tile from the same VMEM
+Two weighting modes:
+
+* ``weights=None`` — the historical uniform mean. The kernel unrolls the
+  client sum in slot order and divides by C at the end, mirroring
+  ``core/aggregation.py``'s ``sum(...)/k`` op-for-op so the uniform path stays
+  bitwise identical to the jnp ground truth.
+* ``weights=(C,) f32`` — per-client weight vector delivered through scalar
+  prefetch (SMEM, available before the tile loop starts). Zero-weight lanes
+  act as a **participation mask**: stacks padded to a fixed ``C_max`` compile
+  ONCE and serve every round — ragged quorums, partial participation and
+  example-count weighting all reuse the same program, they only change the
+  vector.
+
+Tile-indivisible shapes (whisper/qwen head dims, odd vocab slices) are padded
+to the next (bm, bn) multiple with zeros and sliced back — zero rows/columns
+of a/b contribute nothing to any product, so padding is exact.
+
+The client sum over C is unrolled inside the kernel (C = cross-silo client
+count, 3–32 — small); ā/b̄ tiles are recomputed per tile from the same VMEM
 slabs, trading negligible FLOPs for zero extra memory traffic.
 """
 
@@ -19,43 +36,100 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.padding import pad_axis as _pad_axis
 
 
 def _kernel(w0_ref, a_ref, b_ref, o_ref, *, scale: float, num_clients: int):
+    """Uniform path: mean in slot order then /C (bitwise twin of sum(...)/k)."""
     a = a_ref[...].astype(jnp.float32)  # (C, bm, r)
     b = b_ref[...].astype(jnp.float32)  # (C, r, bn)
-    inv_c = 1.0 / num_clients
-    mean_prod = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
-    for c in range(num_clients):  # static unroll: C is small (cross-silo)
+    mean_prod = jnp.dot(a[0], b[0], preferred_element_type=jnp.float32)
+    abar, bbar = a[0], b[0]
+    for c in range(1, num_clients):  # static unroll: C is small (cross-silo)
         mean_prod += jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
-    mean_prod *= inv_c
-    abar = a.sum(0) * inv_c
-    bbar = b.sum(0) * inv_c
+        abar = abar + a[c]
+        bbar = bbar + b[c]
+    mean_prod = mean_prod / num_clients
+    abar = abar / num_clients
+    bbar = bbar / num_clients
+    residual = mean_prod - jnp.dot(abar, bbar, preferred_element_type=jnp.float32)
+    o_ref[...] = w0_ref[...].astype(jnp.float32) + scale * residual
+
+
+def _kernel_weighted(w_ref, w0_ref, a_ref, b_ref, o_ref, *, scale: float,
+                     num_clients: int):
+    """Weighted/masked path: w_ref is the (C,) scalar-prefetch weight vector.
+
+    Zero-weight lanes (masked / non-delivered slots) contribute exactly 0 to
+    every sum, so a C_max-padded stack closes any ragged round.
+    """
+    a = a_ref[...].astype(jnp.float32)  # (C, bm, r)
+    b = b_ref[...].astype(jnp.float32)  # (C, r, bn)
+    mean_prod = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    abar = jnp.zeros_like(a[0])
+    bbar = jnp.zeros_like(b[0])
+    for c in range(num_clients):  # static unroll: C is small
+        wc = w_ref[c]
+        mean_prod += wc * jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
+        abar += wc * a[c]
+        bbar += wc * b[c]
     residual = mean_prod - jnp.dot(abar, bbar, preferred_element_type=jnp.float32)
     o_ref[...] = w0_ref[...].astype(jnp.float32) + scale * residual
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
 def fedex_residual_apply(w0: jnp.ndarray, a_stack: jnp.ndarray,
-                         b_stack: jnp.ndarray, *, scale: float = 1.0,
+                         b_stack: jnp.ndarray,
+                         weights: jnp.ndarray | None = None, *,
+                         scale: float = 1.0,
                          bm: int = 256, bn: int = 256,
                          interpret: bool = False) -> jnp.ndarray:
-    """w0: (m, n), a_stack: (C, m, r), b_stack: (C, r, n) → (m, n) f32."""
+    """w0: (m, n), a_stack: (C, m, r), b_stack: (C, r, n) → (m, n) f32.
+
+    ``weights`` — optional (C,) f32 normalized weight vector (zeros mask
+    non-delivered lanes). ``None`` → uniform 1/C mean, bitwise identical to
+    the unweighted jnp operators.
+    """
     m, n = w0.shape
     c, _, r = a_stack.shape
     bm, bn = min(bm, m), min(bn, n)
-    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not divisible by ({bm},{bn})"
+    # pad to the next (bm, bn) multiple — zero rows/cols are exact no-ops for
+    # every product in the residual; slice the tile-aligned result back.
+    w0p = _pad_axis(_pad_axis(w0, bm, 0), bn, 1)
+    ap = _pad_axis(a_stack, bm, 1)
+    bp = _pad_axis(b_stack, bn, 2)
+    mp, np_ = w0p.shape
 
-    grid = (m // bm, n // bn)
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=scale, num_clients=c),
+    grid = (mp // bm, np_ // bn)
+    if weights is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, scale=scale, num_clients=c),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                pl.BlockSpec((c, bm, r), lambda i, j: (0, i, 0)),
+                pl.BlockSpec((c, r, bn), lambda i, j: (0, 0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(w0p, ap, bp)[:m, :n]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((c, bm, r), lambda i, j: (0, i, 0)),
-            pl.BlockSpec((c, r, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j, *_: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j, *_: (0, 0, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_weighted, scale=scale, num_clients=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(w0, a_stack, b_stack)
+    )(weights.astype(jnp.float32), w0p, ap, bp)[:m, :n]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.padding import pad_axis as _pad_axis
+
 
 def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, xa_ref, *, scale: float, nk: int):
     k = pl.program_id(2)
@@ -44,16 +46,26 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, xa_ref, *, scale: float, nk: int)
 def lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
                 *, scale: float = 1.0, bm: int = 128, bn: int = 128,
                 bk: int = 128, interpret: bool = False) -> jnp.ndarray:
-    """x: (M, K), w: (K, N), a: (K, r), b: (r, N) → (M, N) f32."""
+    """x: (M, K), w: (K, N), a: (K, r), b: (r, N) → (M, N) f32.
+
+    Tile-indivisible (M, N, K) are zero-padded to the next (bm, bn, bk)
+    multiple and the result sliced back — zero K-rows/columns add nothing to
+    either the base or the adapter product, so odd model dims (whisper/qwen
+    head dims) run the fused path instead of crashing.
+    """
     m, kdim = x.shape
     _, n = w.shape
     r = a.shape[1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
-        f"shapes ({m},{kdim})x({kdim},{n}) not divisible by tile ({bm},{bn},{bk})")
-    nk = kdim // bk
+    x = _pad_axis(_pad_axis(x, bm, 0), bk, 1)
+    w = _pad_axis(_pad_axis(w, bk, 0), bn, 1)
+    a = _pad_axis(a, bk, 0)
+    b = _pad_axis(b, bn, 1)
+    mp, kp = x.shape
+    np_ = w.shape[1]
+    nk = kp // bk
 
-    grid = (m // bm, n // bn, nk)
+    grid = (mp // bm, np_ // bn, nk)
     return pl.pallas_call(
         functools.partial(_kernel, scale=scale, nk=nk),
         grid=grid,
@@ -64,7 +76,7 @@ def lora_matmul(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
             pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
         interpret=interpret,
-    )(x, w, a, b)
+    )(x, w, a, b)[:m, :n]

@@ -2,8 +2,11 @@
 
 On this CPU container, kernels execute with ``interpret=True`` (Pallas
 reference interpreter); on TPU the same calls compile to Mosaic. The wrappers
-pad to tile multiples, handle batching/GQA reshapes, and fall back to the
-ref.py oracles when a shape can't be tiled sensibly.
+pick tile sizes and handle batching/GQA reshapes; the kernels themselves
+zero-pad tile-indivisible shapes and slice back (kernels/padding.py), so
+every shape takes the fused path — ref.py remains the allclose oracle for
+tests, with flash_swa's wrapper the one remaining ref fallback (window
+geometry, not tiling).
 """
 
 from __future__ import annotations
@@ -15,21 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.factor_mean import lora_factor_mean
 from repro.kernels.fedex_residual import fedex_residual_apply
 from repro.kernels.flash_swa import flash_swa
 from repro.kernels.lora_matmul import lora_matmul
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 DEFAULT_INTERPRET = not _ON_TPU
-
-
-def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def lora_dense(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
@@ -41,33 +36,54 @@ def lora_dense(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
     n = w.shape[-1]
     x2 = x.reshape(-1, kdim)
     m = x2.shape[0]
-    bm = 128 if m % 128 == 0 else (m if m <= 512 else 0)
-    bn = 128 if n % 128 == 0 else (n if n <= 512 else 0)
-    bk = 128 if kdim % 128 == 0 else (kdim if kdim <= 512 else 0)
-    if 0 in (bm, bn, bk):
-        y = ref.lora_matmul_ref(x2, w, a, b, scale)
-    else:
-        y = lora_matmul(x2, w, a, b, scale=scale, bm=bm, bn=bn, bk=bk,
-                        interpret=interpret)
+    # the kernel zero-pads tile-indivisible dims internally; keep whole-array
+    # blocks for small odd shapes to avoid pointless padding work
+    bm = 128 if m % 128 == 0 else (m if m <= 512 else 128)
+    bn = 128 if n % 128 == 0 else (n if n <= 512 else 128)
+    bk = 128 if kdim % 128 == 0 else (kdim if kdim <= 512 else 128)
+    y = lora_matmul(x2, w, a, b, scale=scale, bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
     return y.reshape(*lead, n).astype(x.dtype)
 
 
 def fedex_fold(w0: jnp.ndarray, a_stack: jnp.ndarray, b_stack: jnp.ndarray,
-               scale: float, *, interpret: Optional[bool] = None) -> jnp.ndarray:
-    """W0 + scale·ΔW_res, fused & tiled. Handles stacked-layer leading axes."""
+               scale: float, *, weights: Optional[jnp.ndarray] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """W0 + scale·ΔW_res, fused & tiled. Handles stacked-layer leading axes.
+
+    ``weights`` — optional (C,) normalized client weights; zeros mask
+    non-delivered lanes of a C_max-padded stack (fedsrv ragged rounds).
+    The kernel zero-pads tile-indivisible (m, n) internally, so odd model
+    dims (whisper/qwen head dims) take the fused path instead of falling
+    back to the dense jnp oracle.
+    """
     interpret = DEFAULT_INTERPRET if interpret is None else interpret
     if w0.ndim > 2:  # stacked layers: vmap over the leading axes
         return jax.vmap(lambda w, a, b: fedex_fold(w, a, b, scale,
+                                                   weights=weights,
                                                    interpret=interpret)
                         )(w0, a_stack, b_stack)
     m, n = w0.shape
-    bm = 256 if m % 256 == 0 else (128 if m % 128 == 0 else (m if m <= 1024 else 0))
-    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else (n if n <= 1024 else 0))
-    if 0 in (bm, bn):
-        return ref.fedex_residual_ref(w0, a_stack, b_stack, scale).astype(w0.dtype)
-    out = fedex_residual_apply(w0, a_stack, b_stack, scale=scale, bm=bm, bn=bn,
-                               interpret=interpret)
+    bm = 256 if m % 256 == 0 else (128 if m % 128 == 0 else min(m, 512))
+    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else min(n, 512))
+    out = fedex_residual_apply(w0, a_stack, b_stack, weights, scale=scale,
+                               bm=bm, bn=bn, interpret=interpret)
     return out.astype(w0.dtype)
+
+
+def factor_mean(stack: jnp.ndarray, weights: Optional[jnp.ndarray] = None, *,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Σ_c w_c·x_c over the leading client axis of a stacked factor, tiled.
+
+    Handles stacked-layer leading axes between the client axis and the final
+    (m, n) factor dims by vmapping the 3-D kernel. Uniform (``weights=None``)
+    sums in slot order then divides — the tree_mean twin.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if stack.ndim > 3:  # (C, L, ..., m, n): move layer axes out, vmap
+        return jax.vmap(lambda s: factor_mean(s, weights, interpret=interpret),
+                        in_axes=1)(stack)
+    return lora_factor_mean(stack, weights, interpret=interpret)
 
 
 def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -1,0 +1,20 @@
+"""Shared zero-padding helper for the tiled kernels.
+
+Zero rows/columns are exact no-ops for every product these kernels compute
+(base GEMM, adapter products, residual terms, factor means), so padding to
+the next tile multiple and slicing back changes nothing numerically.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_axis(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``mult``."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -16,17 +16,35 @@ def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
 
 
 def fedex_residual_ref(w0: jnp.ndarray, a_stack: jnp.ndarray,
-                       b_stack: jnp.ndarray, scale: float) -> jnp.ndarray:
-    """W0 + scale·(mean_c(a_c @ b_c) − ā @ b̄).
+                       b_stack: jnp.ndarray, scale: float,
+                       weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """W0 + scale·(Σ_c w_c·(a_c @ b_c) − ā @ b̄)  with  ā = Σ_c w_c·a_c.
 
-    a_stack: (C, m, r), b_stack: (C, r, n), w0: (m, n).
+    a_stack: (C, m, r), b_stack: (C, r, n), w0: (m, n); ``weights=None`` →
+    uniform w_c = 1/C. Zero weights mask non-delivered lanes of a padded stack.
     """
     af = a_stack.astype(jnp.float32)
     bf = b_stack.astype(jnp.float32)
-    mean_prod = jnp.einsum("cmr,crn->mn", af, bf) / af.shape[0]
-    abar = af.mean(0)
-    bbar = bf.mean(0)
+    if weights is None:
+        mean_prod = jnp.einsum("cmr,crn->mn", af, bf) / af.shape[0]
+        abar = af.mean(0)
+        bbar = bf.mean(0)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        mean_prod = jnp.einsum("c,cmr,crn->mn", w, af, bf)
+        abar = jnp.einsum("c,cmr->mr", w, af)
+        bbar = jnp.einsum("c,crn->rn", w, bf)
     return w0.astype(jnp.float32) + scale * (mean_prod - abar @ bbar)
+
+
+def factor_mean_ref(stack: jnp.ndarray,
+                    weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Σ_c w_c · x_c over the leading client axis (uniform 1/C when None)."""
+    xf = stack.astype(jnp.float32)
+    if weights is None:
+        return xf.mean(0)
+    w = jnp.asarray(weights, jnp.float32)
+    return jnp.tensordot(w, xf, axes=(0, 0))
 
 
 def flash_swa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

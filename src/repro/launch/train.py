@@ -102,6 +102,11 @@ def main() -> None:
     ap.add_argument("--quantize-uplink", default="none",
                     choices=("none", "fp16", "int8"),
                     help="uplink adapter codec (fedsrv transport)")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "jnp", "pallas", "off"),
+                    help="fused round-close engine (core/engine.py): auto "
+                         "picks Pallas kernels on TPU / jitted jnp twin on "
+                         "CPU; off = legacy eager list-of-trees close")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
@@ -137,7 +142,8 @@ def main() -> None:
                           straggler_prob=args.stragglers,
                           dropout_prob=args.dropout_prob,
                           async_buffer=args.async_buffer,
-                          quantize_uplink=args.quantize_uplink),
+                          quantize_uplink=args.quantize_uplink,
+                          engine=args.engine),
         train_cfg=TrainConfig(learning_rate=args.lr, schedule="constant",
                               total_steps=args.rounds * args.local_steps),
         client_loaders=loaders,
