@@ -1,25 +1,36 @@
 """Round-close benchmark: eager list-of-trees vs the fused close engine.
 
-Times the system's single hottest operation — the FedEx round close
-(global factor means + exact residual fold) — both ways:
+Times the system's single hottest operation — the round close — both ways,
+for EVERY engine-covered method:
 
 * **old**: the seed's eager tree-walk over a list of client adapter trees —
-  what the trainer ran per round: ``mean_deviation`` (the §6 metric) +
-  ``fedex_aggregate`` + ``apply_residual``, one dispatch per eager op, dense
-  ΔW_res materialised host-side, and
-* **new**: ``core/engine.py``'s ``close_round_jit`` program over
-  ``(C_max, …)``-stacked client buffers (one dispatch, divergence metric
-  computed inside via factored Grams, W0/stacks donated on accelerators).
+  what the trainer ran per round: ``mean_deviation`` (the §6 metric) + the
+  method's eager close (``fedex_aggregate`` + ``apply_residual``; the dense
+  ``jnp.linalg.svd`` truncation for fedex_svd; ``per_client_residuals`` /
+  ``assign_after_aggregation`` for the Table-5 assignment strategies), one
+  dispatch per eager op, dense ΔW_res materialised host-side, and
+* **new**: ``core/engine.py``'s close program over ``(C_max, …)``-stacked
+  client buffers (one dispatch, divergence metric computed inside via
+  factored Grams, W0/stacks donated on accelerators; the svd close truncates
+  on the (C·r)² Grams — no dense residual, no dense SVD).
 
 ``speedup`` compares equal work (both sides produce new W0 + global factors
 + divergence); ``speedup_vs_close_only`` excludes the divergence from the old
-path for the narrower aggregate+fold comparison.
+path for the narrower close-only comparison — for ``fedex_svd`` that is the
+headline engine-vs-eager-dense-SVD ratio (acceptance: ≥2× at C=8/12-layer).
 
-Scenarios: uniform full participation, example-weighted, and 50 % partial
-participation (masked lanes). The uniform scenario also records whether the
-engine output is bitwise identical to the *jitted* composition of
-``fedex_aggregate + apply_residual`` (it must be — same op sequence), plus
-the max |Δ| against the eager path (≤ a few ulp of FMA contraction).
+Scenarios: uniform full participation, example-weighted, 50 % partial
+participation (masked lanes), the rank-r' truncated ``fedex_svd`` close, and
+the ``keep_local`` / ``reinit`` assignment closes. Note the uniform
+``keep_local`` row measures the engine's BITWISE branch (eager operators
+composed lane-by-lane inside the jit — unbatchable per-client matmul
+chains), so its close-only ratio hovers near 1×; the win there is the fused
+divergence + single dispatch (the ``speedup`` column) and the batched
+weighted branch. The uniform fedex scenario
+also records whether the engine output is bitwise identical to the *jitted*
+composition of ``fedex_aggregate + apply_residual`` (it must be — same op
+sequence), plus the max |Δ| against the eager path (≤ a few ulp of FMA
+contraction; ~1e-5 relative for the svd close — Gram squaring).
 
 Emits ``BENCH_aggregation.json`` so the perf trajectory is recorded:
 
@@ -83,10 +94,31 @@ def _bitwise(tree_a, tree_b) -> bool:
     return all(bool((np.asarray(fa[k]) == np.asarray(fb[k])).all()) for k in fa)
 
 
+def _eager_close(method: str, params, subset, sub_w, scale: float,
+                 svd_rank: int, client_params=None):
+    """The trainer's pre-engine eager close for one method (ex-divergence)."""
+    if method == "fedex":
+        g, res = agg.fedex_aggregate(subset, sub_w)
+        return agg.apply_residual(params, res, scale)
+    if method == "fedex_svd":
+        g, res = agg.fedex_svd_aggregate(subset, svd_rank, sub_w)
+        return agg.apply_residual(params, res, scale)
+    if method == "reinit":
+        new_loras, residual = agg.assign_after_aggregation(
+            "reinit", subset, jax.random.key(0), sub_w)
+        return agg.apply_residual(params, residual, scale)
+    if method == "keep_local":
+        residuals = agg.per_client_residuals(subset, sub_w)
+        return [agg.apply_residual(p, r_i, scale)
+                for p, r_i in zip(client_params, residuals)]
+    raise ValueError(method)
+
+
 def run_bench(quick: bool = False) -> Dict:
     params, lora_t, loras, meta = _make_setting(quick)
     c = meta["clients"]
     scale = 2.0
+    svd_rank = meta["rank"]  # r' = r: the paper's server-truncation regime
     reps = 3 if quick else 10
     rng = np.random.default_rng(1)
     raw_w = rng.uniform(0.5, 4.0, size=c)
@@ -94,21 +126,27 @@ def run_bench(quick: bool = False) -> Dict:
     part_ids = list(range(0, c, 2))  # 50 % participation
 
     scenarios = {
-        "uniform": (list(range(c)), None),
-        "weighted": (list(range(c)), weighted),
-        "participation_50pct": (part_ids, None),
+        "uniform": ("fedex", list(range(c)), None),
+        "weighted": ("fedex", list(range(c)), weighted),
+        "participation_50pct": ("fedex", part_ids, None),
+        "fedex_svd": ("fedex_svd", list(range(c)), None),
+        "keep_local": ("keep_local", list(range(c)), None),
+        "reinit": ("reinit", list(range(c)), None),
     }
 
-    result = {"config": dict(meta, scale=scale, reps=reps,
+    backend = "jnp" if jax.default_backend() == "cpu" else "auto"
+    result = {"config": dict(meta, scale=scale, reps=reps, svd_rank=svd_rank,
                              backend=jax.default_backend()),
               "scenarios": {}}
-    for name, (ids, weights) in scenarios.items():
+    for name, (method, ids, weights) in scenarios.items():
         subset = [loras[i] for i in ids]
         sub_w = None if weights is None else [weights[i] for i in ids]
+        # keep_local folds every delivered client's OWN base
+        client_params = [params for _ in ids] if method == "keep_local" else None
 
         def old_close():
-            g, res = agg.fedex_aggregate(subset, sub_w)
-            return agg.apply_residual(params, res, scale)
+            return _eager_close(method, params, subset, sub_w, scale,
+                                svd_rank, client_params)
 
         def old_round():  # the trainer's full per-round host work
             div = mean_deviation(subset)
@@ -123,15 +161,22 @@ def run_bench(quick: bool = False) -> Dict:
         # writes happen per arrival and are not part of the deadline-critical
         # close being measured.
         engine = RoundCloseEngine(params, lora_t, c_max=c, scale=scale,
-                                  backend="jnp" if jax.default_backend() == "cpu"
-                                  else "auto", donate=False)
+                                  method=method, svd_rank=svd_rank,
+                                  backend=backend, donate=False)
         engine.buffers.begin_round({i: i for i in range(c)})
         for i in ids:
             engine.buffers.write(i, loras[i])
-        stacks = engine.buffers.take()
         w, mask, uniform = engine.weight_vector(ids, sub_w)
-        w0_leaves = {s.key: params["blocks"][s.key.split("/")[-1]]["kernel"]
-                     for s in engine.specs}
+        stacks = engine.buffers.take()
+        if method == "keep_local":
+            w0_leaves = {
+                s.key: jnp.stack([params["blocks"][s.key.split("/")[-1]]
+                                  ["kernel"]] * c)
+                for s in engine.specs
+            }
+        else:
+            w0_leaves = {s.key: params["blocks"][s.key.split("/")[-1]]["kernel"]
+                         for s in engine.specs}
 
         def new_close():
             return engine._close(w0_leaves, stacks, jnp.asarray(w),
@@ -140,9 +185,8 @@ def run_bench(quick: bool = False) -> Dict:
         new_us = _time(new_close, reps=reps)
         new_w0, glob, div = new_close()
 
-        new_params = {"blocks": {k.split("/")[-1]: {"kernel": v}
-                                 for k, v in new_w0.items()}}
         row = {
+            "method": method,
             "old_us": round(old_us, 1),
             "old_close_only_us": round(old_close_us, 1),
             "new_us": round(new_us, 1),
@@ -150,14 +194,25 @@ def run_bench(quick: bool = False) -> Dict:
             "speedup_vs_close_only": round(old_close_us / new_us, 2),
             "delivered": len(ids),
             "weights": "examples" if weights else "uniform",
-            "max_abs_diff_vs_eager": _max_diff(new_params, old_params),
         }
-        if uniform:
-            jit_close = jax.jit(
-                lambda p, ls: agg.apply_residual(
-                    p, agg.fedex_aggregate(ls)[1], scale))
-            row["uniform_bitwise_vs_jit"] = _bitwise(
-                new_params, jit_close(params, subset))
+        if method == "keep_local":
+            # lane i of the engine's stacked output vs client i's eager fold
+            row["max_abs_diff_vs_eager"] = max(
+                _max_diff(
+                    {k: v[i] for k, v in new_w0.items()},
+                    {s.key: old_params[i]["blocks"][s.key.split("/")[-1]]
+                     ["kernel"] for s in engine.specs})
+                for i in range(len(ids)))
+        else:
+            new_params = {"blocks": {k.split("/")[-1]: {"kernel": v}
+                                     for k, v in new_w0.items()}}
+            row["max_abs_diff_vs_eager"] = _max_diff(new_params, old_params)
+            if method == "fedex" and uniform:
+                jit_close = jax.jit(
+                    lambda p, ls: agg.apply_residual(
+                        p, agg.fedex_aggregate(ls)[1], scale))
+                row["uniform_bitwise_vs_jit"] = _bitwise(
+                    new_params, jit_close(params, subset))
         result["scenarios"][name] = row
     return result
 

@@ -1,11 +1,14 @@
-"""fedsrv coordinator scenario demo — sync, deadline-drop, async-buffer.
+"""fedsrv coordinator scenario demo — sync, deadline-drop, async-buffer,
+truncated-svd and assignment-strategy closes through the fused engine.
 
-Three federated runs of the tiny paper model under the event-driven
-coordinator (src/repro/fedsrv/), each printing the per-round outcome
-(sampled/delivered/dropped clients, weights) and the measured comm ledger,
-plus a direct weighted-exactness check on synthetic adapters.
+Federated runs of the tiny paper model under the event-driven coordinator
+(src/repro/fedsrv/), each printing the per-round outcome (sampled/delivered/
+dropped clients, weights), WHICH close path ran (the core/engine.py fused
+engine vs the eager list path — every scenario here exercises the engine via
+``FedConfig.engine``), and the measured comm ledger, plus a direct
+weighted-exactness check on synthetic adapters.
 
-  PYTHONPATH=src python examples/coordinator_sim.py        # ~1 min CPU
+  PYTHONPATH=src python examples/coordinator_sim.py        # ~1–2 min CPU
 """
 
 from __future__ import annotations
@@ -55,6 +58,12 @@ def run_scenario(title: str, fed_cfg: FedConfig, loaders, evals, model):
         train_cfg=TrainConfig(learning_rate=5e-3, schedule="constant",
                               total_steps=fed_cfg.rounds * fed_cfg.local_steps),
         client_loaders=loaders, eval_batches=evals, seed=0)
+    if trainer.engine is not None:
+        print(f"  close path: fused engine (method={trainer.engine.method} "
+              f"backend={trainer.engine.backend} "
+              f"ring depth={trainer.engine.buffers.depth})")
+    else:
+        print("  close path: eager list-of-trees")
     history = trainer.run()
     for rec, out in zip(history, trainer.outcomes):
         w = ("uniform" if out.weights is None
@@ -111,8 +120,10 @@ def main():
     model = build_model(cfg)
     loaders, evals = build_data()
 
+    # engine="auto" on every scenario: all closes run through the fused
+    # single-dispatch engine (core/engine.py), not the eager list path
     base = dict(num_clients=CLIENTS, rounds=3, local_steps=3, method="fedex",
-                weighting="examples")
+                weighting="examples", engine="auto")
     run_scenario("scenario 1: sync, 60% participation, example weights",
                  FedConfig(**base, participation=0.6), loaders, evals, model)
     run_scenario("scenario 2: deadline drops stragglers (quorum 2)",
@@ -124,6 +135,14 @@ def main():
                            straggler_prob=0.3, straggler_factor=6.0,
                            quantize_uplink="int8"),
                  loaders, evals, model)
+    run_scenario("scenario 4: fedex_svd rank-4 truncated close (factored "
+                 "Gram SVD in the engine — no dense residual)",
+                 FedConfig(**{**base, "method": "fedex_svd"}, svd_rank=4,
+                           participation=0.8), loaders, evals, model)
+    run_scenario("scenario 5: keep_local assignment (per-client bases, "
+                 "engine per-lane folds)",
+                 FedConfig(**{**base, "weighting": "uniform"},
+                           assignment="keep_local"), loaders, evals, model)
     exactness_check()
     print(f"\ntotal wall time: {time.time() - t_start:.1f}s")
 

@@ -33,9 +33,15 @@ loaders = [ClientLoader(seqs[p], batch_size=16, seed=i) for i, p in enumerate(pa
 
 trainer = FederatedTrainer(
     model=model, lora_cfg=LoRAConfig(rank=8, alpha=16, include_mlp=True),
-    fed_cfg=FedConfig(num_clients=3, rounds=2, local_steps=15, method="fedex"),
+    # engine="auto": rounds close through the fused single-dispatch engine
+    # (core/engine.py) — streamed (C_max, …) stacks, no eager list path
+    fed_cfg=FedConfig(num_clients=3, rounds=2, local_steps=15, method="fedex",
+                      engine="auto"),
     train_cfg=TrainConfig(learning_rate=3e-2, schedule="constant"),
     client_loaders=loaders, seed=0)
+assert trainer.engine is not None, "fedex/average must take the fused path"
+print(f"close path: fused engine (method={trainer.engine.method} "
+      f"backend={trainer.engine.backend})")
 trainer.run()
 
 # ---- merge + serve -----------------------------------------------------------

@@ -7,6 +7,7 @@ from repro.configs.base import (
     ShapeConfig,
     TrainConfig,
     config_dict,
+    validate_fed_lora,
 )
 from repro.configs.shapes import SHAPES, get_shape
 from repro.util.registry import Registry

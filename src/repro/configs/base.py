@@ -205,10 +205,44 @@ class FedConfig:
     staleness_alpha: float = 0.5  # async: weight ∝ (1+staleness)^(−α)
     quantize_uplink: str = "none"  # none | fp16 | int8 adapter uplink codec
     # --- fused round-close engine (core/engine.py) ---
-    # "auto" → single-dispatch stacked-client close for fedex/average rounds
-    # (Pallas kernels on TPU, jitted jnp twin elsewhere); "jnp"/"pallas" force
-    # a backend; "off" → the legacy eager list-of-trees close.
+    # "auto" → single-dispatch stacked-client close for every engine-covered
+    # method (fedex/average, fedex_svd, keep_local, reinit): Pallas kernels
+    # on TPU, jitted jnp twin elsewhere; "jnp"/"pallas" force a backend;
+    # "off" → the legacy eager list-of-trees close.
     engine: str = "auto"
+
+    def __post_init__(self):
+        if self.method not in ("fedex", "fedit", "ffa", "fedex_svd",
+                               "centralized"):
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.assignment not in ("average", "keep_local", "reinit"):
+            raise ValueError(f"unknown assignment {self.assignment!r}")
+        if self.engine not in ("auto", "jnp", "pallas", "off"):
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             "(auto | jnp | pallas | off)")
+        if self.svd_rank < 0:
+            raise ValueError(
+                f"svd_rank must be ≥ 0, got {self.svd_rank} "
+                "(0 → exact aggregation, r' ≥ 1 → rank-r' truncation)")
+        if self.weighting not in ("uniform", "examples"):
+            raise ValueError(f"unknown weighting {self.weighting!r}")
+
+
+def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:
+    """Cross-config validation needing both dataclasses (call at launch).
+
+    The fedex_svd truncation rank r' is bounded by the residual's rank:
+    ΔW_res = Σwᵢaᵢ(bᵢ − b̄) has at most k·r nonzero singular values, so any
+    r' > k·r transmits pure padding — reject it up front instead of letting
+    ``fedex_svd_aggregate`` fall through to a silently-degenerate dense SVD.
+    ``svd_rank = 0`` keeps the documented "exact" meaning (the plain fedex
+    close; nothing is truncated).
+    """
+    if fed.method == "fedex_svd" and fed.svd_rank > fed.num_clients * lora.rank:
+        raise ValueError(
+            f"svd_rank={fed.svd_rank} exceeds the residual rank bound "
+            f"k·r = {fed.num_clients}·{lora.rank} = "
+            f"{fed.num_clients * lora.rank}; use 0 for the exact close")
 
 
 @dataclass(frozen=True)

@@ -25,22 +25,48 @@ Which path runs where
 ---------------------
 THIS module is the eager, op-by-op **ground truth** — lists of client trees,
 one jnp op per step, trivially auditable against the paper's equations. The
-production round close for fedex/average runs through ``core/engine.py``'s
-``close_round_jit``: ONE jitted program over ``(C_max, …)``-stacked client
-buffers (streamed in by fedsrv/transport as deliveries arrive) that computes
-the weighted factor means, the exact residual fold and the §6 divergence in
-a single dispatch — via these same operators (jnp backend) or the
-kernels/fedex_residual + kernels/factor_mean Pallas kernels (TPU backend,
-no dense m×n residual in HBM). The mesh-collective twin of ``fedex``
-(psum-mean over a client axis inside a pjit'd program) lives in
-launch/train.py.
+production round close for EVERY engine-covered method — ``fedex``/average,
+``fedex_svd``, and the §6 assignment strategies ``reinit`` and
+``keep_local`` — runs through ``core/engine.py``: ONE jitted program over
+``(C_max, …)``-stacked client buffers (streamed in by fedsrv/transport as
+deliveries arrive) that computes the weighted factor means, the
+method-specific residual fold and the §6 divergence in a single dispatch —
+via these same operators (jnp backend) or the kernels/fedex_residual family
+(weighted residual + signed product_fold + perclient_fold) and
+kernels/factor_mean Pallas kernels (TPU backend, no dense m×n residual in
+HBM). Method-by-method:
+
+* ``fedex`` — engine hot path; ``fedit``/``ffa`` remain eager (a plain
+  factor mean, nothing to fuse).
+* ``fedex_svd`` — the engine computes the Eckart–Young rank-r' residual on
+  the FACTORED form (``engine.factored_truncated_residual``: two (C·r)² Gram
+  eigendecompositions + a small SVD — the dense m×n residual that
+  ``fedex_svd_aggregate`` hands to ``jnp.linalg.svd`` here is never formed)
+  and folds A'@B' in the same dispatch. ``fedex_svd_aggregate`` stays the
+  dense eager oracle; engine matches it to ~1e-5 relative (Gram squaring).
+* ``reinit`` — the engine folds the full ideal update Σwᵢaᵢbᵢ (the signed
+  product kernel) and redraws adapters via :func:`reinit_adapters` — the
+  SAME deterministic fold-in this module's eager path uses, so both paths
+  produce bitwise-identical adapters.
+* ``keep_local`` — the engine folds every delivered client's residual
+  Σwⱼaⱼbⱼ − aᵢbᵢ into that client's OWN base in one pass over
+  (C_max, …)-stacked per-lane W0 buffers; :func:`per_client_residuals` here
+  is the eager oracle only.
+
+The mesh-collective twin of ``fedex`` (psum-mean over a client axis inside a
+pjit'd program) lives in launch/train.py.
 
 The C_max padding contract: engine stacks are always ``(C_max, …)``; a
 round's candidates get lanes in client-id order and non-delivered lanes keep
 weight 0 (the participation mask), so ragged quorums / weighted rounds reuse
-one compiled program. The engine's uniform full-participation close is
-bitwise identical to the *jitted* composition of these operators; the eager
-path here differs from any fused program by ≤2 ulp (XLA FMA contraction).
+one compiled program. The engine's uniform full-participation
+fedex/reinit/keep_local closes are bitwise identical to the *jitted*
+composition of these operators; the eager path here differs from any fused
+program by ≤2 ulp (XLA FMA contraction). Double-buffer rotation rules
+(engine.RoundBuffers): each round's stacks are freshly allocated because the
+close program CONSUMES (donates) its round's set; at most ``depth`` rounds
+may be open at once — round N+1's uplinks stream into a new set while round
+N's close is in flight, and ``take()`` pops rounds strictly FIFO.
 """
 
 from __future__ import annotations
@@ -164,9 +190,44 @@ def fedex_aggregate(client_loras: List[Params], weights: Weights = None
     return global_lora, residual
 
 
+def _factor_rank(tree: Params) -> int:
+    """Rank r of the first {a, b} factor node found in an adapter tree."""
+    found: List[int] = []
+
+    def fn(factor):
+        if not found:
+            found.append(int(factor["a"].shape[-1]))
+        return None
+
+    map_factors(fn, tree)
+    if not found:
+        raise ValueError("no adapter factors found — empty lora tree?")
+    return found[0]
+
+
 def fedex_svd_aggregate(client_loras: List[Params], svd_rank: int,
                         weights: Weights = None) -> Tuple[Params, Params]:
-    """FedEx with rank-r' truncated residual (Eq. 15–16, Eckart–Young optimal)."""
+    """FedEx with rank-r' truncated residual (Eq. 15–16, Eckart–Young optimal).
+
+    ``svd_rank`` must satisfy 1 ≤ r' ≤ k·r (the residual's rank bound —
+    ΔW_res = Σwᵢaᵢ(bᵢ − b̄) has at most k·r nonzero singular values).
+    Anything outside raises: r' ≤ 0 used to silently truncate the residual
+    to rank 0 (``u[:, :0]`` → an all-zero "residual" — an inexact close
+    masquerading as FedEx), and r' > k·r silently transmitted pure padding.
+    The config-level meaning of ``FedConfig.svd_rank = 0`` ("exact") is
+    resolved by the CALLER to the plain fedex close, never down here.
+    """
+    k = len(client_loras)
+    r = _factor_rank(client_loras[0])
+    if svd_rank < 1:
+        raise ValueError(
+            f"fedex_svd_aggregate needs svd_rank ≥ 1, got {svd_rank} "
+            "(svd_rank=0 means 'exact' at the config level — callers "
+            "resolve that to fedex_aggregate, which never truncates)")
+    if svd_rank > k * r:
+        raise ValueError(
+            f"svd_rank={svd_rank} exceeds the residual rank bound "
+            f"k·r = {k}·{r} = {k * r}; ranks past it only pad the transmit")
     global_lora, residual = fedex_aggregate(client_loras, weights)
 
     def trunc(r):
@@ -223,24 +284,32 @@ def assign_after_aggregation(
     if strategy == "reinit":
         if rng is None:
             rng = jax.random.key(0)
-
-        # fold-in key = stable per-leaf counter over the (deterministic,
-        # insertion-ordered) factor traversal — NOT hash(str(shape)), which
-        # varies across processes under PYTHONHASHSEED.
-        counter = [0]
-
-        def reinit(factor):
-            counter[0] += 1
-            a = jax.random.normal(
-                jax.random.fold_in(rng, counter[0]),
-                factor["a"].shape, jnp.float32) * 0.02
-            return {"a": a, "b": jnp.zeros_like(factor["b"])}
-
-        new = map_factors(reinit, client_loras[0])
+        new = reinit_adapters(client_loras[0], rng)
         # b = 0 → product 0 → the FULL ideal update goes into the residual.
         return [new] * k, ideal
 
     raise ValueError(f"unknown assignment strategy {strategy!r}")
+
+
+def reinit_adapters(template: Params, rng: jax.Array) -> Params:
+    """Fresh adapters for the reinit strategy: a ~ N(0, 0.02), b = 0.
+
+    The fold-in key is a stable per-leaf counter over the (deterministic,
+    insertion-ordered) factor traversal — NOT hash(str(shape)), which varies
+    across processes under PYTHONHASHSEED. Shared by
+    :func:`assign_after_aggregation` and the engine's reinit close so both
+    paths draw bitwise-identical adapters from the same rng.
+    """
+    counter = [0]
+
+    def reinit(factor):
+        counter[0] += 1
+        a = jax.random.normal(
+            jax.random.fold_in(rng, counter[0]),
+            factor["a"].shape, jnp.float32) * 0.02
+        return {"a": a, "b": jnp.zeros_like(factor["b"])}
+
+    return map_factors(reinit, template)
 
 
 def per_client_residuals(client_loras: List[Params],

@@ -4,47 +4,71 @@ The seed trainer closed a FedEx round with a Python tree-walk over *lists* of
 client adapter trees: per-leaf ``jnp.stack`` at deadline, an eager op per
 factor for the mean, an eager dense ΔW_res materialisation, an eager add into
 W0 — dozens of dispatches per round, each a host↔device round trip. This
-module replaces that with ONE jitted program over pre-stacked client buffers:
+module replaces that with ONE jitted program over pre-stacked client buffers,
+for EVERY aggregation variant the paper studies:
 
 * :class:`RoundBuffers` — preallocated ``(C_max, …)`` device stacks per
-  adapter leaf. The fedsrv transport decodes uplink payloads *into* a slot as
-  each delivery arrives (streaming accumulation), so round close starts with
-  the stack already resident — no burst of host→device copies at deadline.
-  Slots are assigned in client-id order over the round's candidate set;
-  non-delivered lanes simply keep zero weight (the participation mask).
-* :func:`make_close_fn` / :class:`RoundCloseEngine` — the fused close: global
-  factor means, the exact residual fold into W0, and the round's divergence
-  metric, all inside one ``jax.jit`` with the W0 leaves and client stacks
-  donated (``donate_argnums``) so XLA updates them in place. Stacked-layer
-  leaves and MoE raw-tensor targets batch through the same program; the
-  ``C_max`` padding means every round — any quorum, any weighting — reuses
-  one compiled executable per (uniform?, shapes) signature.
+  adapter leaf, DOUBLE-BUFFERED: a ring of ``depth`` rotating stack sets lets
+  the fedsrv transport stream round N+1 uplinks into a fresh set while round
+  N's close (which owns — and donates — the previous set) is still in
+  flight. Rotation rules: ``begin_round`` opens a new set (fresh zeros — the
+  close program consumed the previous allocation via donation, so sets are
+  never reused across rounds), ``write_flat`` routes a delivery to its
+  round's set by the payload's ``round_id``, ``take`` pops the OLDEST open
+  round and hands its stacks to the close program. At most ``depth`` rounds
+  may be open; exceeding it is an error, not a silent overwrite.
+* :func:`make_close_fn` / :class:`RoundCloseEngine` — the fused close for all
+  engine methods, each one jitted program with W0 leaves and client stacks
+  donated (``donate_argnums``) so XLA updates them in place:
+
+  - ``fedex`` — weighted factor means + the exact residual fold (Eq. 11–14).
+  - ``fedex_svd`` — the rank-r' truncated close (Eq. 15–16): the
+    Eckart–Young-optimal truncation is computed from the STACKED FACTORS via
+    two (C·r)×(C·r) Gram eigendecompositions plus one small SVD
+    (:func:`factored_truncated_residual`) — the dense m×n residual that the
+    eager ``fedex_svd_aggregate`` hands to ``jnp.linalg.svd`` never exists.
+  - ``reinit`` (§6 Table 5) — the full ideal update Σw_c·a_c b_c folds into
+    W0 (the signed product kernel); fresh adapters are drawn host-side with
+    the same deterministic fold-in as ``aggregation.reinit_adapters``.
+  - ``keep_local`` (§6 Table 5) — per-client residuals Σw_j·a_j b_j − a_i b_i
+    fold into every delivered client's OWN W0 in one pass over stacked
+    per-lane W0 buffers (the per-client kernel: per-lane sign vectors
+    w − e_i without C separate passes).
 
 Backends: ``jnp`` composes the operators of core/aggregation.py inside the
 jit (the mathematical ground truth — on CPU XLA fuses the residual+fold so
-nothing extra hits memory); ``pallas`` routes the fold through the
-kernels/fedex_residual + kernels/factor_mean tiled kernels, which never
-materialise the dense m×n residual in HBM (the TPU hot path). ``auto`` picks
-pallas on TPU, jnp elsewhere.
+nothing extra hits memory); ``pallas`` routes the folds through the
+kernels/fedex_residual (+ product/per-client variants) and kernels/factor_mean
+tiled kernels, which never materialise a dense m×n residual in HBM (the TPU
+hot path). ``auto`` picks pallas on TPU, jnp elsewhere. The svd close's small
+Gram eigendecomposition/SVD stays in jnp on EITHER backend (LAPACK / XLA
+custom calls on (C·r)×(C·r) matrices — there is nothing to tile); only its
+rank-r' fold goes through the product kernel on pallas.
 
-Numerics contract: the uniform full-participation close is **bitwise
-identical to the jitted composition** of ``fedex_aggregate`` +
-``apply_residual`` (same op sequence, same XLA program). The historical
-*eager* list path differs from any fused program by ≤2 ulp where XLA
-contracts mul+add into FMA — asserted in tests/test_engine.py. Weighted and
-ragged rounds hold the exact residual identity to tight float32 tolerance.
+Numerics contract: the uniform full-participation ``fedex`` / ``reinit`` /
+``keep_local`` closes are **bitwise identical to the jitted composition** of
+the core/aggregation.py operators (same op sequence, same XLA program). The
+historical *eager* list path differs from any fused program by ≤2 ulp where
+XLA contracts mul+add into FMA — asserted in tests/test_engine.py. Weighted
+and ragged rounds hold the exact residual identity to tight float32
+tolerance. The ``fedex_svd`` close matches the dense Eckart–Young oracle to
+~1e-5 relative (Gram squaring halves the attainable precision; documented
+and asserted in tests/test_engine_methods.py).
 
 The divergence metric (paper §6) is computed WITHOUT materialising the dense
-deviation: dev = Σu_c·a_c b_c − ā b̄ factors as L@R with L=[a_0…a_{C-1}, ā]
-and R=[u_0 b_0; …; −b̄], and ‖L@R‖²_F = Σ_{ij} (LᵀL)_{ij}·(R Rᵀ)_{ij} — two
-(C+1)r × (C+1)r Grams instead of an m×n deviation matrix. Cancellation in the
-Gram sum gives this an absolute noise floor around 1e-6 when clients have
-barely diverged (it is exact at any magnitude the §6 analysis cares about).
+deviation: dev = Σu_c·a_c b_c − ā b̄ = Σ_c u_c·a_c (b_c − b̄) factors as L@R
+with L = [u_0·a_0 … u_{C-1}·a_{C-1}] and R = [b_0 − b̄; …], and ‖L@R‖²_F =
+Σ_{ij} (LᵀL)_{ij}·(R Rᵀ)_{ij} — two C·r × C·r Grams instead of an m×n
+deviation matrix. The same factorisation feeds the svd close. Cancellation in
+the Gram sum gives the metric an absolute noise floor around 1e-6 when
+clients have barely diverged (it is exact at any magnitude the §6 analysis
+cares about).
 """
 
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -57,6 +81,8 @@ from repro.util.tree import flatten_with_paths, unflatten_from_paths
 Params = Dict[str, Any]
 
 _CPU = jax.default_backend() == "cpu"
+
+ENGINE_METHODS = ("fedex", "fedex_svd", "reinit", "keep_local")
 
 
 def _resolve_backend(backend: str) -> str:
@@ -139,35 +165,54 @@ def _set_path(tree: Params, path: str, value: Any) -> Params:
 
 
 # --------------------------------------------------------------------------
-# streaming round buffers
+# streaming round buffers (double-buffered ring)
 # --------------------------------------------------------------------------
 
 class RoundBuffers:
-    """Preallocated ``(C_max, …)`` device stacks, written slot-by-slot.
+    """Preallocated ``(C_max, …)`` device stacks, written slot-by-slot, with a
+    ``depth``-deep ring of rotating stack sets.
 
     The coordinator assigns each round's candidate clients to slots (client-id
-    order). On accelerators :meth:`write_flat` scatters one decoded payload
-    into its lane via a single jitted ``dynamic_update_index_in_dim`` program
-    with the stack buffers donated, so the update is in place — no copy of
-    the full stack per arrival. On CPU XLA has no donation (the scatter would
-    copy every stack per arrival), so arrivals stage into preallocated host
-    numpy buffers — one O(leaf) slice-assign each — and ``take()`` pays a
-    single host→device conversion per round, exactly the cost of the old
-    per-leaf ``jnp.stack``. ``take()`` hands the stacks to the close program
-    (which donates them as scratch); the next ``begin_round`` re-materialises
-    zeros.
+    order) via :meth:`begin_round`; deliveries scatter into their round's set
+    via :meth:`write_flat` (the transport passes the payload's ``round_id``
+    so round N+1 uplinks can stream while round N's set awaits — or is being
+    consumed by — its close); :meth:`take` pops the OLDEST open round (FIFO)
+    and hands its stacks to the close program.
+
+    Rotation / donation-safety rules:
+
+    * every ``begin_round`` allocates a FRESH zero set — the close program
+      donates (consumes) the set ``take`` handed it, so a set is never reused
+      across rounds and an in-flight close can never see the next round's
+      writes;
+    * at most ``depth`` rounds may be open at once; opening more raises
+      (never silently overwrites an un-closed round's data);
+    * within a round, slot lanes are written at most once per client and
+      non-delivered lanes simply stay zero (the weight mask handles them).
+
+    On accelerators :meth:`write_flat` scatters one decoded payload into its
+    lane via a single jitted ``dynamic_update_index_in_dim`` program with the
+    stack buffers donated, so the update is in place — no copy of the full
+    stack per arrival. On CPU XLA has no donation (the scatter would copy
+    every stack per arrival), so arrivals stage into preallocated host numpy
+    buffers — one O(leaf) slice-assign each — and ``take()`` pays a single
+    host→device conversion per round, exactly the cost of the old per-leaf
+    ``jnp.stack``.
     """
 
-    def __init__(self, lora_template: Params, c_max: int):
+    def __init__(self, lora_template: Params, c_max: int, depth: int = 2):
         if c_max < 1:
             raise ValueError("c_max must be ≥ 1")
+        if depth < 1:
+            raise ValueError("depth must be ≥ 1")
         self.c_max = c_max
+        self.depth = depth
         flat = flatten_with_paths(lora_template)
         self._shapes = {p: tuple(x.shape) for p, x in flat.items()}
         self._host = _CPU
-        self._stacks = None  # Dict[str, jnp.ndarray | np.ndarray]
-        self._slots: Dict[int, int] = {}
-        self._written: Dict[int, int] = {}
+        # round_id → {"slots": cid→lane, "written": cid→lane, "stacks": dict}
+        self._open: "OrderedDict[Any, Dict[str, Any]]" = OrderedDict()
+        self._auto = 0
         if not self._host:
             @functools.partial(jax.jit, donate_argnums=(0,))
             def _scatter(stacks, slot, leaves):
@@ -187,83 +232,209 @@ class RoundBuffers:
         return {p: jnp.zeros((self.c_max,) + s, jnp.float32)
                 for p, s in self._shapes.items()}
 
+    def _entry(self, round_id=None) -> Tuple[Any, Dict[str, Any]]:
+        if not self._open:
+            raise RuntimeError("no open round — begin_round() first")
+        if round_id is None:
+            rid = next(iter(self._open))
+            return rid, self._open[rid]
+        if round_id not in self._open:
+            raise KeyError(f"round {round_id!r} is not open "
+                           f"(open: {list(self._open)})")
+        return round_id, self._open[round_id]
+
     # -- round lifecycle ----------------------------------------------------
-    def begin_round(self, slots: Dict[int, int]) -> None:
-        """slots: client_id → lane, assigned over the round's candidate set."""
+    def begin_round(self, slots: Dict[int, int], round_id=None):
+        """Open a new round: ``slots`` maps client_id → lane over the round's
+        candidate set. Returns the round id (auto-assigned when omitted)."""
         if len(slots) > self.c_max:
             raise ValueError(f"{len(slots)} candidates > C_max={self.c_max}")
         if any(not 0 <= s < self.c_max for s in slots.values()):
             raise ValueError(f"slot out of range in {slots}")
-        self._slots = dict(slots)
-        self._written = {}
-        if self._stacks is None:
-            self._stacks = self._alloc()
+        if round_id is None:
+            round_id = f"_auto{self._auto}"
+            self._auto += 1
+        if round_id in self._open:
+            raise ValueError(f"round {round_id!r} is already open")
+        if len(self._open) >= self.depth:
+            raise RuntimeError(
+                f"all {self.depth} buffer sets are in flight (open rounds: "
+                f"{list(self._open)}) — take() the oldest before opening "
+                "another")
+        self._open[round_id] = {"slots": dict(slots), "written": {},
+                                "stacks": self._alloc()}
+        return round_id
 
-    def write_flat(self, client_id: int, flat: Dict[str, Any]) -> None:
-        """Scatter one client's decoded adapter leaves into its lane."""
-        slot = self._slots[client_id]
+    def write_flat(self, client_id: int, flat: Dict[str, Any],
+                   round_id=None) -> None:
+        """Scatter one client's decoded adapter leaves into its lane.
+
+        ``round_id=None`` routes to the oldest open round that has a lane for
+        this client (single-open callers never need to pass it)."""
+        if round_id is None:
+            for rid, e in self._open.items():
+                if client_id in e["slots"]:
+                    round_id = rid
+                    break
+            else:
+                raise KeyError(
+                    f"client {client_id} has no lane in any open round "
+                    f"(open: {list(self._open)}) — stale uplink from an "
+                    "already-closed round?")
+        _, e = self._entry(round_id)
+        slot = e["slots"][client_id]
         if self._host:
             for p in self._shapes:
-                self._stacks[p][slot] = np.asarray(flat[p], np.float32)
+                e["stacks"][p][slot] = np.asarray(flat[p], np.float32)
         else:
             leaves = {p: flat[p] for p in self._shapes}
-            self._stacks = self._scatter(self._stacks, jnp.int32(slot), leaves)
-        self._written[client_id] = slot
+            e["stacks"] = self._scatter(e["stacks"], jnp.int32(slot), leaves)
+        e["written"][client_id] = slot
 
-    def write(self, client_id: int, lora_tree: Params) -> None:
-        self.write_flat(client_id, flatten_with_paths(lora_tree))
+    def write(self, client_id: int, lora_tree: Params, round_id=None) -> None:
+        self.write_flat(client_id, flatten_with_paths(lora_tree), round_id)
 
     # -- views --------------------------------------------------------------
     @property
+    def open_rounds(self) -> List[Any]:
+        return list(self._open)
+
+    @property
     def delivered(self) -> Dict[int, int]:
-        """client_id → slot for every payload written this round."""
-        return dict(self._written)
+        """client_id → slot written in the OLDEST open round (next to close)."""
+        return dict(self._entry()[1]["written"])
 
-    def slot_of(self, client_id: int) -> int:
-        return self._slots[client_id]
+    def delivered_in(self, round_id=None) -> Dict[int, int]:
+        return dict(self._entry(round_id)[1]["written"])
 
-    def take(self) -> Dict[str, jnp.ndarray]:
-        """Hand the stacks to the close program (donated there); reset."""
-        stacks, self._stacks = self._stacks, None
-        if stacks is None:
-            raise RuntimeError("take() before begin_round/any writes")
+    def lanes(self, round_id=None) -> Dict[int, int]:
+        """client_id → lane for ALL of a round's candidates (delivered or not)."""
+        return dict(self._entry(round_id)[1]["slots"])
+
+    def slot_of(self, client_id: int, round_id=None) -> int:
+        return self._entry(round_id)[1]["slots"][client_id]
+
+    def take(self, round_id=None) -> Dict[str, jnp.ndarray]:
+        """Pop the oldest (or named) open round; hand its stacks to the close
+        program (donated there — this set is gone for good)."""
+        rid, e = self._entry(round_id)
+        del self._open[rid]
+        stacks = e["stacks"]
         if self._host:  # one host→device conversion per round
             stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
         return stacks
 
 
 # --------------------------------------------------------------------------
-# the fused close program
+# factored residual machinery (shared by divergence + the svd close)
 # --------------------------------------------------------------------------
+
+def _stacked_residual_factors(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
+                              u: jnp.ndarray
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-rank factors of the weighted residual, straight from the stacks.
+
+    Σ_c u_c·a_c b_c − ā b̄  =  Σ_c u_c·a_c (b_c − b̄)  =  L @ R  with
+    L = [u_0·a_0 | … | u_{C-1}·a_{C-1}]  (…, m, C·r)  and
+    R = [b_0 − b̄ ; … ; b_{C-1} − b̄]     (…, C·r, n),  b̄ = Σ_c u_c·b_c —
+    the rank-≤C·r form (ā b̄ lies inside span{a_c}, so no extra block is
+    needed). Zero-weight lanes contribute zero L columns.
+    """
+    a = a_stack.astype(jnp.float32)  # (C, ..., m, r)
+    b = b_stack.astype(jnp.float32)  # (C, ..., r, n)
+    c = a.shape[0]
+    bbar = jnp.einsum("c,c...rn->...rn", u, b)
+    L = jnp.concatenate([u[i] * a[i] for i in range(c)], axis=-1)
+    R = jnp.concatenate([b[i] - bbar for i in range(c)], axis=-2)
+    return L, R
+
 
 def _dev_fro_scaled(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
                     u: jnp.ndarray) -> jnp.ndarray:
     """Scaled Frobenius norm of Σu_c·a_c b_c − ā b̄ via the factored Grams —
     never materialises the (…, m, n) deviation. Returns (…,) per leading axes."""
-    a = a_stack.astype(jnp.float32)  # (C, ..., m, r)
-    b = b_stack.astype(jnp.float32)  # (C, ..., r, n)
-    c = a.shape[0]
-    abar = jnp.einsum("c,c...mr->...mr", u, a)
-    bbar = jnp.einsum("c,c...rn->...rn", u, b)
-    L = jnp.concatenate([a[i] for i in range(c)] + [abar], axis=-1)
-    R = jnp.concatenate([u[i] * b[i] for i in range(c)] + [-bbar], axis=-2)
+    L, R = _stacked_residual_factors(a_stack, b_stack, u)
     gl = jnp.einsum("...mi,...mj->...ij", L, L)
     gr = jnp.einsum("...in,...jn->...ij", R, R)
     fro_sq = jnp.maximum(jnp.einsum("...ij,...ij->...", gl, gr), 0.0)
-    m, n = a.shape[-2], b.shape[-1]
+    m, n = a_stack.shape[-2], b_stack.shape[-1]
     return jnp.sqrt(fro_sq) / np.sqrt(m * n)
+
+
+def _safe_inv_sqrt(lam: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(λ^{-1/2}, λ^{1/2}) with pseudo-inverse semantics: eigenvalues below
+    the rank-detection floor (masked lanes, redundant factors) map to 0."""
+    tol = jnp.max(lam, axis=-1, keepdims=True) * (lam.shape[-1] * 1e-7)
+    pos = lam > tol
+    safe = jnp.where(pos, lam, 1.0)
+    return (jnp.where(pos, jax.lax.rsqrt(safe), 0.0),
+            jnp.where(pos, jnp.sqrt(safe), 0.0))
+
+
+def factored_truncated_residual(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
+                                weights: jnp.ndarray, rank: int
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eckart–Young-optimal rank-``rank`` factors of the weighted residual,
+    computed WITHOUT ever forming the dense (m, n) matrix.
+
+    With ΔW = L @ R from :func:`_stacked_residual_factors` (P = C·r columns):
+    eigendecompose the two small Grams G_L = LᵀL = E_L Λ_L E_Lᵀ and
+    G_R = R Rᵀ = E_R Λ_R E_Rᵀ, so L = Q_L Λ_L^{1/2} E_Lᵀ with orthonormal
+    Q_L = L E_L Λ_L^{-1/2} (pseudo-inverse on null directions — masked lanes
+    give zero columns) and likewise R = E_R Λ_R^{1/2} Q_Rᵀ. Then
+    ΔW = Q_L S Q_Rᵀ with the P×P core S = Λ_L^{1/2} E_Lᵀ E_R Λ_R^{1/2}; the
+    SVD of S gives ΔW's singular triplets, and the top-r' slice yields
+
+        A' = L E_L Λ_L^{-1/2} U_{:r'} Σ_{:r'}   (…, m, r')
+        B' = V_{:r'}ᵀ Λ_R^{-1/2} E_Rᵀ R          (…, r', n)
+
+    with A' @ B' the optimal rank-r' approximation (Eq. 15–16). Every
+    intermediate is (m, P), (P, n) or (P, P) — asserted shape-by-shape on the
+    jaxpr in tests. Leading stacked-layer / expert axes batch through.
+    Accuracy: the Gram squaring costs ~half the float32 digits; the result
+    matches the dense-SVD oracle to ~1e-5 relative (documented tolerance).
+    """
+    L, R = _stacked_residual_factors(a_stack, b_stack, weights)
+    gl = jnp.einsum("...mi,...mj->...ij", L, L)
+    gr = jnp.einsum("...in,...jn->...ij", R, R)
+    el, vl = jnp.linalg.eigh(gl)
+    er, vr = jnp.linalg.eigh(gr)
+    il, sl = _safe_inv_sqrt(el)
+    ir, sr = _safe_inv_sqrt(er)
+    core = sl[..., :, None] * (jnp.swapaxes(vl, -1, -2) @ vr) * sr[..., None, :]
+    u, s, vt = jnp.linalg.svd(core, full_matrices=False)
+    u_r = u[..., :, :rank]
+    s_r = s[..., :rank]
+    vt_r = vt[..., :rank, :]
+    aprime = L @ ((vl * il[..., None, :]) @ u_r) * s_r[..., None, :]
+    bprime = (vt_r @ jnp.swapaxes(vr * ir[..., None, :], -1, -2)) @ R
+    return aprime, bprime
+
+
+# --------------------------------------------------------------------------
+# the fused close programs (one per engine method)
+# --------------------------------------------------------------------------
+
+def _slice_client_trees(specs: Sequence[FactorSpec],
+                        stacks: Dict[str, jnp.ndarray],
+                        c_max: int) -> List[Params]:
+    """Stack lanes as a list of adapter trees — the uniform closes feed these
+    to the aggregation operators verbatim, so the jitted program is the jnp
+    ground truth op-for-op (the bitwise contract)."""
+    return [
+        {s.key: {"a": stacks[s.key + "/a"][c], "b": stacks[s.key + "/b"][c]}
+         for s in specs}
+        for c in range(c_max)
+    ]
 
 
 def _uniform_close(specs: Sequence[FactorSpec], scale: float,
                    w0_leaves: Dict[str, jnp.ndarray],
                    stacks: Dict[str, jnp.ndarray], c_max: int):
-    """Full-participation uniform close — literally the aggregation operators
-    over stack slices, so the jitted program is the jnp ground truth."""
-    client_trees = [
-        {s.key: {"a": stacks[s.key + "/a"][c], "b": stacks[s.key + "/b"][c]}
-         for s in specs}
-        for c in range(c_max)
-    ]
+    """Full-participation uniform fedex close — literally the aggregation
+    operators over stack slices, so the jitted program is the jnp ground
+    truth."""
+    client_trees = _slice_client_trees(specs, stacks, c_max)
     g = agg.fedit_aggregate(client_trees)
     res = agg.fedex_residual(client_trees, g)
     new_w0 = {
@@ -279,8 +450,8 @@ def _weighted_close_jnp(specs: Sequence[FactorSpec], scale: float,
                         w0_leaves: Dict[str, jnp.ndarray],
                         stacks: Dict[str, jnp.ndarray],
                         w: jnp.ndarray, c_max: int):
-    """Weighted/masked close, jnp twin: Σw_c a_c b_c − ā b̄ folded into W0.
-    Zero-weight lanes vanish from every sum — the participation mask."""
+    """Weighted/masked fedex close, jnp twin: Σw_c a_c b_c − ā b̄ folded into
+    W0. Zero-weight lanes vanish from every sum — the participation mask."""
     new_w0, glob = {}, {}
     for s in specs:
         a = stacks[s.key + "/a"]  # (C, ..., m, r) f32
@@ -299,8 +470,8 @@ def _weighted_close_pallas(specs: Sequence[FactorSpec], scale: float,
                            w0_leaves: Dict[str, jnp.ndarray],
                            stacks: Dict[str, jnp.ndarray],
                            w: Optional[jnp.ndarray], interpret: Optional[bool]):
-    """Fused-kernel close: factor means + residual fold through the tiled
-    Pallas kernels — the dense m×n residual never exists in HBM."""
+    """Fused-kernel fedex close: factor means + residual fold through the
+    tiled Pallas kernels — the dense m×n residual never exists in HBM."""
     from repro.kernels import factor_mean, fedex_fold
 
     new_w0, glob = {}, {}
@@ -319,37 +490,176 @@ def _weighted_close_pallas(specs: Sequence[FactorSpec], scale: float,
     return new_w0, glob
 
 
+def _svd_close(specs: Sequence[FactorSpec], scale: float, svd_rank: int,
+               w0_leaves: Dict[str, jnp.ndarray],
+               stacks: Dict[str, jnp.ndarray], w: jnp.ndarray,
+               backend: str, interpret: Optional[bool]):
+    """Truncated-SVD close: factored Eckart–Young residual (never dense),
+    folded into W0 as the rank-r' product A' @ B'."""
+    new_w0, glob = {}, {}
+    for s in specs:
+        a = stacks[s.key + "/a"]  # (C, ..., m, r)
+        b = stacks[s.key + "/b"]
+        if backend == "pallas":
+            from repro.kernels import factor_mean, product_fold
+            ga = factor_mean(a, w, interpret=interpret)
+            gb = factor_mean(b, w, interpret=interpret)
+            ap, bp = factored_truncated_residual(a, b, w, svd_rank)
+            new_w0[s.key] = product_fold(
+                w0_leaves[s.key], jnp.expand_dims(ap, -3),
+                jnp.expand_dims(bp, -3), jnp.ones((1,), jnp.float32), scale,
+                interpret=interpret).astype(s.w0_dtype)
+        else:
+            ga = jnp.einsum("c,c...mr->...mr", w, a)
+            gb = jnp.einsum("c,c...rn->...rn", w, b)
+            ap, bp = factored_truncated_residual(a, b, w, svd_rank)
+            new_w0[s.key] = (w0_leaves[s.key].astype(jnp.float32)
+                             + scale * jnp.matmul(ap, bp)).astype(s.w0_dtype)
+        glob[s.key] = {"a": ga, "b": gb}
+    return new_w0, glob
+
+
+def _reinit_close(specs: Sequence[FactorSpec], scale: float,
+                  w0_leaves: Dict[str, jnp.ndarray],
+                  stacks: Dict[str, jnp.ndarray], w: jnp.ndarray,
+                  c_max: int, uniform: bool, backend: str,
+                  interpret: Optional[bool]):
+    """Reinit close (Table 5): the FULL ideal update Σw_c·a_c b_c folds into
+    W0 (fresh adapters carry b=0, so nothing is left behind). The uniform
+    branch composes product_mean over stack slices — bitwise twin of the
+    jitted assignment oracle on EVERY backend (like the fedex uniform
+    branch; the kernel path serves weighted/ragged rounds)."""
+    if uniform:
+        client_trees = _slice_client_trees(specs, stacks, c_max)
+        ideal = agg.product_mean(client_trees)
+        return {
+            s.key: (w0_leaves[s.key].astype(jnp.float32)
+                    + scale * ideal[s.key]).astype(s.w0_dtype)
+            for s in specs
+        }
+    new_w0 = {}
+    for s in specs:
+        a = stacks[s.key + "/a"]
+        b = stacks[s.key + "/b"]
+        if backend == "pallas":
+            from repro.kernels import product_fold
+            am = jnp.moveaxis(a, 0, -3)
+            bm = jnp.moveaxis(b, 0, -3)
+            new_w0[s.key] = product_fold(
+                w0_leaves[s.key], am, bm, w, scale,
+                interpret=interpret).astype(s.w0_dtype)
+        else:
+            ideal = jnp.einsum("c,c...mr,c...rn->...mn", w, a, b)
+            new_w0[s.key] = (w0_leaves[s.key].astype(jnp.float32)
+                             + scale * ideal).astype(s.w0_dtype)
+    return new_w0
+
+
+def _keep_local_close(specs: Sequence[FactorSpec], scale: float,
+                      w0_stacks: Dict[str, jnp.ndarray],
+                      stacks: Dict[str, jnp.ndarray], w: jnp.ndarray,
+                      c_max: int, uniform: bool, backend: str,
+                      interpret: Optional[bool]):
+    """Keep_local close (Table 5): every lane's OWN base gets its residual
+    Σ_j w_j·a_j b_j − a_c b_c. ``w0_stacks`` carry the per-lane W0 leaves
+    ((C_max, …) like the factor stacks); non-delivered lanes produce a lane
+    the caller discards. The uniform branch composes per_client_residuals
+    over stack slices — bitwise twin of the jitted assignment oracle on
+    EVERY backend (like the fedex uniform branch; the kernel path serves
+    weighted/ragged rounds)."""
+    if uniform:
+        # the bitwise branch composes the eager operators lane-by-lane; it
+        # costs ~2× the batched-einsum branch below (unbatchable per-client
+        # matmul chains) — the price of the uniform bitwise contract. The
+        # trainer's full-round close still beats the eager path (fused
+        # divergence + single dispatch); weighted/ragged rounds take the
+        # fast branch.
+        client_trees = _slice_client_trees(specs, stacks, c_max)
+        residuals = agg.per_client_residuals(client_trees)
+        return {
+            s.key: jnp.stack([
+                (w0_stacks[s.key][c].astype(jnp.float32)
+                 + scale * residuals[c][s.key]).astype(s.w0_dtype)
+                for c in range(c_max)
+            ])
+            for s in specs
+        }
+    new_w0 = {}
+    for s in specs:
+        a = stacks[s.key + "/a"]  # (C, ..., m, r)
+        b = stacks[s.key + "/b"]
+        if backend == "pallas":
+            from repro.kernels import perclient_fold
+            new_w0[s.key] = perclient_fold(
+                w0_stacks[s.key], a, b, w, scale,
+                interpret=interpret).astype(s.w0_dtype)
+        else:
+            ideal = jnp.einsum("c,c...mr,c...rn->...mn", w, a, b)
+            own = jnp.matmul(a, b)
+            new_w0[s.key] = (w0_stacks[s.key].astype(jnp.float32)
+                             + scale * (ideal[None] - own)).astype(s.w0_dtype)
+    return new_w0
+
+
 def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
+                  method: str = "fedex", svd_rank: int = 0,
                   backend: str = "auto", interpret: Optional[bool] = None,
                   donate: bool = True):
-    """Build the jitted close program.
+    """Build the jitted close program for one engine method.
 
     Signature: ``close(w0_leaves, stacks, weights, mask, uniform=...)`` →
     ``(new_w0_leaves, global_factors, divergence)`` with ``w0_leaves`` and
     ``stacks`` donated (in-place update; skipped on CPU where XLA has no
     donation support, or with ``donate=False`` for callers that replay the
-    program on the same buffers, e.g. benchmarks). ``uniform=True`` is the
-    static full-participation branch — bitwise twin of the jitted list path;
-    otherwise ``weights`` is the (C_max,) vector with zeros masking
-    non-delivered lanes and ``mask`` its 0/1 indicator (used for the
-    uniform-over-delivered divergence).
+    program on the same buffers, e.g. benchmarks).
+
+    * ``method="fedex"`` — ``uniform=True`` is the static full-participation
+      branch, bitwise twin of the jitted list path; otherwise ``weights`` is
+      the (C_max,) vector with zeros masking non-delivered lanes and ``mask``
+      its 0/1 indicator (used for the uniform-over-delivered divergence).
+    * ``method="fedex_svd"`` — the factored rank-``svd_rank`` truncated close
+      (requires ``svd_rank ≥ 1``); both uniform and ragged rounds go through
+      the weight vector (truncation has no bitwise-uniform contract).
+    * ``method="reinit"`` — ``w0_leaves`` as fedex; returns ``glob={}``
+      (fresh adapters are drawn host-side by the engine).
+    * ``method="keep_local"`` — ``w0_leaves`` holds (C_max, …)-stacked
+      per-lane W0 leaves and the returned ``new_w0`` is stacked likewise;
+      ``glob={}``.
     """
     backend = _resolve_backend(backend)
     specs = list(specs)
+    if method not in ENGINE_METHODS:
+        raise ValueError(f"unknown engine method {method!r} "
+                         f"(expected one of {ENGINE_METHODS})")
+    if method == "fedex_svd" and svd_rank < 1:
+        raise ValueError(f"fedex_svd close needs svd_rank ≥ 1, got {svd_rank}"
+                         " (svd_rank=0 means exact — use the fedex close)")
 
     def _close(w0_leaves, stacks, weights, mask, *, uniform: bool):
-        if uniform:
-            new_w0, glob = _uniform_close(specs, scale, w0_leaves, stacks,
-                                          c_max)
-            u = jnp.full((c_max,), 1.0 / c_max, jnp.float32)
-        else:
-            if backend == "pallas":
+        if method == "fedex":
+            if uniform:
+                new_w0, glob = _uniform_close(specs, scale, w0_leaves, stacks,
+                                              c_max)
+            elif backend == "pallas":
                 new_w0, glob = _weighted_close_pallas(
                     specs, scale, w0_leaves, stacks, weights, interpret)
             else:
                 new_w0, glob = _weighted_close_jnp(
                     specs, scale, w0_leaves, stacks, weights, c_max)
-            u = mask / jnp.maximum(mask.sum(), 1.0)
+        elif method == "fedex_svd":
+            new_w0, glob = _svd_close(specs, scale, svd_rank, w0_leaves,
+                                      stacks, weights, backend, interpret)
+        elif method == "reinit":
+            new_w0 = _reinit_close(specs, scale, w0_leaves, stacks, weights,
+                                   c_max, uniform, backend, interpret)
+            glob = {}
+        else:  # keep_local
+            new_w0 = _keep_local_close(specs, scale, w0_leaves, stacks,
+                                       weights, c_max, uniform, backend,
+                                       interpret)
+            glob = {}
+        u = (jnp.full((c_max,), 1.0 / c_max, jnp.float32) if uniform
+             else mask / jnp.maximum(mask.sum(), 1.0))
         parts = [
             _dev_fro_scaled(stacks[s.key + "/a"], stacks[s.key + "/b"],
                             u).ravel()
@@ -366,34 +676,44 @@ def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
 class RoundCloseEngine:
     """Owns the streaming buffers + the compiled close program for a trainer.
 
-    One engine per (params structure, adapter structure, C_max, scale):
-    ``buffers`` is handed to the fedsrv coordinator as the delivery sink, and
-    :meth:`close` runs the single-dispatch fused close over whatever subset
-    actually arrived, with any weighting. The C_max padding contract: stacks
-    are always ``(C_max, …)``; a round's candidates get lanes in client-id
-    order; weights (zeros on non-delivered lanes) mask the rest — so ragged
-    quorums and weighted rounds reuse ONE compiled program, and the uniform
-    full-participation round keeps its own bitwise-stable branch.
+    One engine per (params structure, adapter structure, C_max, scale,
+    method): ``buffers`` is handed to the fedsrv coordinator as the delivery
+    sink, and :meth:`close` / :meth:`close_keep_local` run the
+    single-dispatch fused close over whatever subset actually arrived, with
+    any weighting. The C_max padding contract: stacks are always
+    ``(C_max, …)``; a round's candidates get lanes in client-id order;
+    weights (zeros on non-delivered lanes) mask the rest — so ragged quorums
+    and weighted rounds reuse ONE compiled program, and the uniform
+    full-participation fedex/reinit/keep_local rounds keep their own
+    bitwise-stable branch. ``depth`` (default 2) double-buffers the streaming
+    stacks so the next round's uplinks can be decoded into a fresh set while
+    this round's close still owns the previous one.
     """
 
     def __init__(self, params: Params, lora_template: Params, *,
-                 c_max: int, scale: float, backend: str = "auto",
-                 interpret: Optional[bool] = None, donate: bool = True):
+                 c_max: int, scale: float, method: str = "fedex",
+                 svd_rank: int = 0, backend: str = "auto",
+                 interpret: Optional[bool] = None, donate: bool = True,
+                 depth: int = 2):
         self.specs = build_factor_specs(params, lora_template)
         self.c_max = c_max
         self.scale = scale
+        self.method = method
+        self.svd_rank = svd_rank
         self.backend = _resolve_backend(backend)
-        self.buffers = RoundBuffers(lora_template, c_max)
+        self.buffers = RoundBuffers(lora_template, c_max, depth=depth)
+        self._lora_template = lora_template
         self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
+                                    method=method, svd_rank=svd_rank,
                                     backend=self.backend, interpret=interpret,
                                     donate=donate)
 
     # ------------------------------------------------------------------
     def weight_vector(self, client_ids: Sequence[int],
-                      weights: Optional[Sequence[float]]
-                      ) -> Tuple[np.ndarray, np.ndarray, bool]:
+                      weights: Optional[Sequence[float]],
+                      round_id=None) -> Tuple[np.ndarray, np.ndarray, bool]:
         """(C_max,) weights + mask from the delivered ids; uniform? flag."""
-        slots = [self.buffers.slot_of(cid) for cid in client_ids]
+        slots = [self.buffers.slot_of(cid, round_id) for cid in client_ids]
         mask = np.zeros(self.c_max, np.float32)
         mask[slots] = 1.0
         norm = agg.normalize_weights(weights, len(client_ids))
@@ -406,30 +726,25 @@ class RoundCloseEngine:
                 w[s] = wi
         return w, mask, uniform
 
-    def close(self, params: Params, client_ids: Sequence[int],
-              weights: Optional[Sequence[float]] = None
-              ) -> Tuple[Params, Params, float]:
-        """Close the round over the delivered subset.
-
-        Returns ``(global_lora, new_params, divergence)``. ``params`` W0
-        leaves and the streamed stacks are donated to the close program.
-        """
+    def _validate_delivered(self, client_ids: Sequence[int],
+                            round_id=None) -> None:
         if not client_ids:
             raise ValueError("cannot close a round with no deliveries")
-        missing = [c for c in client_ids if c not in self.buffers.delivered]
+        written = self.buffers.delivered_in(round_id)
+        missing = [c for c in client_ids if c not in written]
         if missing:
             raise ValueError(f"clients {missing} were never written to the "
                              "round buffers")
-        w, mask, uniform = self.weight_vector(client_ids, weights)
-        w0_leaves = {
+
+    def _w0_leaves(self, params: Params) -> Dict[str, jnp.ndarray]:
+        return {
             s.key: (_get_path(params, s.key)["kernel"] if s.has_kernel
                     else _get_path(params, s.key))
             for s in self.specs
         }
-        stacks = self.buffers.take()
-        new_w0, glob, div = self._close(w0_leaves, stacks,
-                                        jnp.asarray(w), jnp.asarray(mask),
-                                        uniform=uniform)
+
+    def _fold_back(self, params: Params,
+                   new_w0: Dict[str, jnp.ndarray]) -> Params:
         new_params = params
         for s in self.specs:
             if s.has_kernel:
@@ -437,9 +752,88 @@ class RoundCloseEngine:
                 new_params = _set_path(new_params, s.key, node)
             else:
                 new_params = _set_path(new_params, s.key, new_w0[s.key])
-        flat = {}
-        for s in self.specs:
-            flat[s.key + "/a"] = glob[s.key]["a"]
-            flat[s.key + "/b"] = glob[s.key]["b"]
-        global_lora = unflatten_from_paths(flat)
+        return new_params
+
+    # ------------------------------------------------------------------
+    def close(self, params: Params, client_ids: Sequence[int],
+              weights: Optional[Sequence[float]] = None, *,
+              round_id=None, rng: Optional[jax.Array] = None
+              ) -> Tuple[Params, Params, float]:
+        """Close the round over the delivered subset (fedex / fedex_svd /
+        reinit methods — keep_local closes through :meth:`close_keep_local`).
+
+        Returns ``(global_lora, new_params, divergence)``. ``params`` W0
+        leaves and the streamed stacks are donated to the close program.
+        ``reinit`` additionally needs the round's ``rng`` and returns the
+        freshly drawn adapters (identical to ``aggregation.reinit_adapters``)
+        as the new global.
+        """
+        if self.method == "keep_local":
+            raise ValueError("keep_local engine closes per-client bases — "
+                             "use close_keep_local()")
+        if self.method == "reinit" and rng is None:
+            raise ValueError("reinit close needs the round's rng")
+        self._validate_delivered(client_ids, round_id)
+        w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
+        w0_leaves = self._w0_leaves(params)
+        stacks = self.buffers.take(round_id)
+        new_w0, glob, div = self._close(w0_leaves, stacks,
+                                        jnp.asarray(w), jnp.asarray(mask),
+                                        uniform=uniform)
+        new_params = self._fold_back(params, new_w0)
+        if self.method == "reinit":
+            global_lora = agg.reinit_adapters(self._lora_template, rng)
+        else:
+            flat = {}
+            for s in self.specs:
+                flat[s.key + "/a"] = glob[s.key]["a"]
+                flat[s.key + "/b"] = glob[s.key]["b"]
+            global_lora = unflatten_from_paths(flat)
         return global_lora, new_params, float(div)
+
+    def close_keep_local(self, client_params: Sequence[Params],
+                         client_ids: Sequence[int],
+                         weights: Optional[Sequence[float]] = None, *,
+                         round_id=None) -> Tuple[Dict[int, Params], float]:
+        """Close a keep_local round: every DELIVERED client's own base gets
+        its residual Σ_j w_j·a_j b_j − a_i b_i folded in, all lanes in one
+        jitted dispatch over (C_max, …)-stacked per-lane W0 buffers.
+
+        ``client_params`` is the trainer's per-client params list (indexed by
+        client id). Returns ``({client_id: new_params}, divergence)`` for the
+        delivered subset only — non-delivered lanes' outputs are discarded.
+        """
+        if self.method != "keep_local":
+            raise ValueError(f"engine method is {self.method!r}, "
+                             "not keep_local")
+        self._validate_delivered(client_ids, round_id)
+        w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
+        lanes = self.buffers.lanes(round_id)
+        lane_to_cid = {lane: cid for cid, lane in lanes.items()}
+        w0_stacks = {}
+        for s in self.specs:
+            leaves = []
+            for lane in range(self.c_max):
+                cid = lane_to_cid.get(lane)
+                p = client_params[cid] if cid is not None else client_params[0]
+                node = _get_path(p, s.key)
+                leaves.append(node["kernel"] if s.has_kernel else node)
+            w0_stacks[s.key] = jnp.stack(leaves)
+        stacks = self.buffers.take(round_id)
+        new_stacks, _, div = self._close(w0_stacks, stacks,
+                                         jnp.asarray(w), jnp.asarray(mask),
+                                         uniform=uniform)
+        out: Dict[int, Params] = {}
+        for cid in client_ids:
+            lane = lanes[cid]
+            newp = client_params[cid]
+            for s in self.specs:
+                leaf = new_stacks[s.key][lane]
+                if s.has_kernel:
+                    node = dict(_get_path(client_params[cid], s.key),
+                                kernel=leaf)
+                    newp = _set_path(newp, s.key, node)
+                else:
+                    newp = _set_path(newp, s.key, leaf)
+            out[cid] = newp
+        return out, float(div)

@@ -128,18 +128,30 @@ class FederatedTrainer:
                           _dc.replace(self.lora_cfg, rank=r))
                 for i, r in enumerate(self.fed_cfg.client_ranks)]
             self.client_params = [self.params] * self.fed_cfg.num_clients
+        from repro.configs.base import validate_fed_lora
+        validate_fed_lora(self.fed_cfg, self.lora_cfg)
         self.coordinator = self._build_coordinator()
-        # fused round-close engine (core/engine.py): the fedex/average hot
-        # path closes in ONE jitted program over streamed (C_max, …) stacks.
-        # Everything else (other methods, assignments, hetero ranks) keeps
-        # the eager list-of-trees ground truth.
+        # fused round-close engine (core/engine.py): every engine-covered
+        # method — fedex with any §6 assignment (average / keep_local /
+        # reinit) and fedex_svd — closes in ONE jitted program over streamed
+        # (C_max, …) stacks. Everything else (fedit/ffa/centralized, hetero
+        # ranks) keeps the eager list-of-trees ground truth.
         self.engine = None
-        if (self.fed_cfg.engine != "off" and self.method == "fedex"
-                and self.fed_cfg.assignment == "average" and not self.hetero):
+        eng_method = None
+        if self.fed_cfg.engine != "off" and not self.hetero:
+            if self.method == "fedex":
+                eng_method = {"average": "fedex",
+                              "keep_local": "keep_local",
+                              "reinit": "reinit"}[self.fed_cfg.assignment]
+            elif self.method == "fedex_svd":
+                # svd_rank=0 means exact (config contract) → the fedex close
+                eng_method = "fedex_svd" if self.fed_cfg.svd_rank else "fedex"
+        if eng_method is not None:
             from repro.core.engine import RoundCloseEngine
             self.engine = RoundCloseEngine(
                 self.params, self.global_lora,
                 c_max=self.fed_cfg.num_clients, scale=self.scale,
+                method=eng_method, svd_rank=self.fed_cfg.svd_rank,
                 backend=self.fed_cfg.engine)
             self.coordinator.sink = self.engine.buffers
 
@@ -178,14 +190,36 @@ class FederatedTrainer:
     def _close_round(self, rnd: int, outcome, client_loras: List, weights):
         """Method-specific round close over the delivered subset (weighted)."""
         if self.engine is not None:
-            # fused single-dispatch close: weighted factor means + exact
-            # residual fold + divergence in one jitted program over the
-            # streamed stacks (W0 leaves and stacks donated). No dense m×n
-            # residual tree ever exists host-side.
+            # fused single-dispatch close: weighted factor means + the
+            # method-specific residual fold + divergence in one jitted
+            # program over the streamed stacks (W0 leaves and stacks
+            # donated). No dense m×n residual tree ever exists host-side —
+            # the svd close truncates on the factored Grams, the assignment
+            # closes fold through the signed/per-client kernels.
+            rid = outcome.round_id
+            if self.engine.method == "keep_local":
+                new_cp, self._last_div = self.engine.close_keep_local(
+                    self.client_params, outcome.client_ids, weights,
+                    round_id=rid)
+                for cid, lora_i in zip(outcome.client_ids, client_loras):
+                    self._client_lora[cid] = lora_i
+                    self.client_params[cid] = new_cp[cid]
+                self.global_lora = client_loras[0]
+                return
+            rng = (jax.random.key(self.seed + rnd)
+                   if self.engine.method == "reinit" else None)
             self.global_lora, self.params, self._last_div = self.engine.close(
-                self.params, outcome.client_ids, weights)
+                self.params, outcome.client_ids, weights, round_id=rid,
+                rng=rng)
+            # ledger the truncation rank clamped to the delivered subset's
+            # bound k_d·r — singular triplets past it are identically zero
+            # and never transmitted (mirrors the eager path's clamp)
+            k_d = len(outcome.client_ids)
             self._ledger_residual(
-                rnd, None, len(outcome.client_ids),
+                rnd, None, k_d,
+                truncated_rank=(min(self.engine.svd_rank,
+                                    self.lora_cfg.rank * k_d)
+                                if self.engine.method == "fedex_svd" else 0),
                 leaf_shapes=[s.w0_shape for s in self.engine.specs])
             return
         k_d = len(client_loras)
@@ -194,7 +228,11 @@ class FederatedTrainer:
         elif self.method == "ffa":
             self.global_lora = agg.ffa_aggregate(client_loras, weights)
         elif self.method == "fedex_svd":
-            svd_rank = self.fed_cfg.svd_rank or self.lora_cfg.rank * k_d
+            # clamp to the DELIVERED subset's rank bound k_d·r: config-time
+            # validation bounds r' by k·r only, and ranks past the bound are
+            # pure padding (fedex_svd_aggregate rejects them).
+            svd_rank = min(self.fed_cfg.svd_rank or self.lora_cfg.rank * k_d,
+                           self.lora_cfg.rank * k_d)
             self.global_lora, residual = agg.fedex_svd_aggregate(
                 client_loras, svd_rank, weights)
             self.params = agg.apply_residual(self.params, residual, self.scale)

@@ -90,7 +90,8 @@ def weighted_close(outcome: RoundOutcome, method: str = "fedex",
     """Close a round: (new global adapter, residual-or-None) over the
     delivered subset with the outcome's weights. Exact for fedex/fedex_svd
     (modulo truncation for svd), inexact-by-design for fedit, exact by
-    construction for ffa."""
+    construction for ffa. ``svd_rank=0`` keeps the config-level "exact"
+    meaning: the round closes through the plain (untruncated) fedex path."""
     loras = [d.lora for d in outcome.delivered]
     if not loras:
         raise ValueError(f"round {outcome.round_id} closed with no deliveries")
@@ -98,6 +99,8 @@ def weighted_close(outcome: RoundOutcome, method: str = "fedex",
     if method == "fedex":
         return agg.fedex_aggregate(loras, w)
     if method == "fedex_svd":
+        if svd_rank < 1:  # 0 → exact: never truncate
+            return agg.fedex_aggregate(loras, w)
         return agg.fedex_svd_aggregate(loras, svd_rank, w)
     if method == "fedit":
         return agg.fedit_aggregate(loras, w), None
@@ -135,13 +138,18 @@ class RoundCoordinator:
         self._downlink_params: Optional[int] = None  # adapter tree is static
 
     # ------------------------------------------------------------------
-    def _open_sink(self, candidates: List[int]) -> None:
+    def _open_sink(self, candidates: List[int], round_id: int) -> None:
         """Assign this round's candidate clients to stack lanes in client-id
         order (stable: the uniform full-participation sum visits lanes in the
-        same order the legacy list path visited clients)."""
-        if self.sink is not None:
-            self.sink.begin_round({cid: i
-                                   for i, cid in enumerate(sorted(candidates))})
+        same order the legacy list path visited clients). The round_id keys
+        the sink's double-buffer ring: round N+1 uplinks stream into a fresh
+        stack set while round N's set is still owned by its in-flight close.
+        Zero-candidate rounds never open a set (there is nothing to stream
+        and no close will ever take() it)."""
+        if self.sink is not None and candidates:
+            self.sink.begin_round(
+                {cid: i for i, cid in enumerate(sorted(candidates))},
+                round_id=round_id)
 
     def _uplink(self, lora: Any, round_id: int, client_id: int) -> Any:
         """Client → server through the codec; the server aggregates what was
@@ -191,7 +199,7 @@ class RoundCoordinator:
 
         # streaming close: every non-dropout candidate gets a stack lane up
         # front; late/dropped lanes simply stay masked (weight 0) at close
-        self._open_sink([c.client_id for _, c in arrivals])
+        self._open_sink([c.client_id for _, c in arrivals], round_id)
 
         delivered: List[Delivery] = []
         dropped_deadline: List[int] = []
@@ -299,7 +307,7 @@ class AsyncBufferCoordinator(RoundCoordinator):
                 weights=None, opened_at=opened, closed_at=self.clock.now(),
                 comm=self.ledger.round_totals(round_id))
         batch, self._inflight = self._inflight[:take], self._inflight[take:]
-        self._open_sink([c.client_id for _, c, _ in batch])
+        self._open_sink([c.client_id for _, c, _ in batch], round_id)
 
         delivered: List[Delivery] = []
         for t, c, v in batch:

@@ -107,13 +107,16 @@ class AdapterCodec:
         The dequantized leaves are scattered into the sink's preallocated
         ``(C_max, …)`` device stacks at the payload's client lane as the
         delivery arrives — the round close reads the stacks, so there is no
-        burst of stacking work at the deadline. The sink aggregates exactly
-        what was transmitted (quantization included), like :meth:`decode`.
-        Also returns the host tree (one decode, shared) so the coordinator's
-        ``Delivery.lora`` stays inspectable by diagnostics and tests.
+        burst of stacking work at the deadline. The payload's ``round_id``
+        selects the stack SET in the sink's double-buffer ring, so round
+        N+1 uplinks stream into a fresh set while round N's close still owns
+        the previous one. The sink aggregates exactly what was transmitted
+        (quantization included), like :meth:`decode`. Also returns the host
+        tree (one decode, shared) so the coordinator's ``Delivery.lora``
+        stays inspectable by diagnostics and tests.
         """
         flat = self._decode_flat(payload)
-        buffers.write_flat(payload.client_id, flat)
+        buffers.write_flat(payload.client_id, flat, round_id=payload.round_id)
         return unflatten_from_paths(flat)
 
 

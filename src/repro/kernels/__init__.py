@@ -2,7 +2,11 @@
 
 * lora_matmul     — fused base+adapter projection (every LoRA'd matmul)
 * fedex_residual  — the paper's aggregation residual, fused into the W0 update
-                    (uniform OR weighted/masked via a scalar-prefetch vector)
+                    (uniform OR weighted/masked via a scalar-prefetch vector),
+                    plus two masked siblings sharing its tiling:
+                    product_fold (signed Σ s_c·a_c b_c — reinit close and the
+                    factored rank-r' svd-residual fold) and perclient_fold
+                    (keep_local per-client residuals, all lanes in one pass)
 * factor_mean     — weighted client-mean of stacked adapter factors (ā, b̄)
 * flash_swa       — sliding-window flash attention (mixtral/gemma3 long ctx)
 
@@ -19,6 +23,8 @@ identical to the *jitted* ground truth (the eager path differs by ≤2 ulp
 where XLA contracts mul+add to FMA inside fused programs).
 """
 
-from repro.kernels.ops import factor_mean, fedex_fold, lora_dense, swa_attention
+from repro.kernels.ops import (factor_mean, fedex_fold, lora_dense,
+                               perclient_fold, product_fold, swa_attention)
 
-__all__ = ["factor_mean", "fedex_fold", "lora_dense", "swa_attention"]
+__all__ = ["factor_mean", "fedex_fold", "lora_dense", "perclient_fold",
+           "product_fold", "swa_attention"]

@@ -1,11 +1,12 @@
-"""FedEx-LoRA residual fold-in Pallas kernel (the paper's Eq. 12+14, fused).
+"""FedEx-LoRA residual fold-in Pallas kernels (the paper's Eq. 12+14, fused).
 
-Computes  W0 + scale·( Σ_c w_c·(a_c @ b_c) − ā @ b̄ )  tile-by-tile, where
-ā = Σ_c w_c·a_c (and likewise b̄): for each MXU-aligned (bm, bn) output tile,
-the stacked client factors stream through VMEM once and the dense m×n residual
-is NEVER materialised in HBM (the naive host path builds the full ΔW_res then
-adds — an extra 2·m·n f32 HBM round trip per adapted matrix per round; at
-deepseek-v2 scale that is ~5 GB of avoidable traffic per aggregation).
+The flagship kernel computes  W0 + scale·( Σ_c w_c·(a_c @ b_c) − ā @ b̄ )
+tile-by-tile, where ā = Σ_c w_c·a_c (and likewise b̄): for each MXU-aligned
+(bm, bn) output tile, the stacked client factors stream through VMEM once and
+the dense m×n residual is NEVER materialised in HBM (the naive host path
+builds the full ΔW_res then adds — an extra 2·m·n f32 HBM round trip per
+adapted matrix per round; at deepseek-v2 scale that is ~5 GB of avoidable
+traffic per aggregation).
 
 Two weighting modes:
 
@@ -20,11 +21,25 @@ Two weighting modes:
   example-count weighting all reuse the same program, they only change the
   vector.
 
+Two masked variants share the tiling and the scalar-prefetch weight vector,
+covering the remaining round-close methods of the engine (core/engine.py):
+
+* :func:`product_fold_apply` — W0 + scale·Σ_c s_c·(a_c @ b_c) with a SIGNED
+  per-lane vector and no mean-product subtraction. s = w closes a ``reinit``
+  round (the full ideal update folds into W0, paper Table 5); a single lane
+  with s = [1] folds a factored rank-r' truncated residual (the fedex_svd
+  close) without the dense ΔW ever reaching HBM.
+* :func:`perclient_fold_apply` — the ``keep_local`` close: every lane's own
+  update  W0_c + scale·(Σ_j w_j a_j b_j − a_c b_c)  in ONE pass. The ideal
+  tile Σ_j w_j a_j b_j is accumulated once per output tile and the per-lane
+  own-product is recomputed from the resident VMEM slabs (r is small, so the
+  extra FLOPs are negligible vs re-streaming C dense residuals from HBM).
+
 Tile-indivisible shapes (whisper/qwen head dims, odd vocab slices) are padded
 to the next (bm, bn) multiple with zeros and sliced back — zero rows/columns
 of a/b contribute nothing to any product, so padding is exact.
 
-The client sum over C is unrolled inside the kernel (C = cross-silo client
+The client sum over C is unrolled inside the kernels (C = cross-silo client
 count, 3–32 — small); ā/b̄ tiles are recomputed per tile from the same VMEM
 slabs, trading negligible FLOPs for zero extra memory traffic.
 """
@@ -133,3 +148,108 @@ def fedex_residual_apply(w0: jnp.ndarray, a_stack: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
     )(weights.astype(jnp.float32), w0p, ap, bp)[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# signed product fold: W0 + scale·Σ_c s_c·(a_c @ b_c)  (no mean subtraction)
+# --------------------------------------------------------------------------
+
+def _kernel_product(s_ref, w0_ref, a_ref, b_ref, o_ref, *, scale: float,
+                    num_clients: int):
+    """s_ref is a SIGNED (C,) scalar-prefetch vector: s = w folds the ideal
+    update (reinit close); s = w − e_i folds client i's keep_local residual;
+    one lane with s = [1] folds a factored low-rank residual (svd close).
+    Zero lanes vanish — the same participation-mask contract as the weighted
+    residual kernel."""
+    a = a_ref[...].astype(jnp.float32)  # (C, bm, r)
+    b = b_ref[...].astype(jnp.float32)  # (C, r, bn)
+    acc = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    for c in range(num_clients):  # static unroll: C is small
+        acc += s_ref[c] * jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
+    o_ref[...] = w0_ref[...].astype(jnp.float32) + scale * acc
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def product_fold_apply(w0: jnp.ndarray, a_stack: jnp.ndarray,
+                       b_stack: jnp.ndarray, signs: jnp.ndarray, *,
+                       scale: float = 1.0, bm: int = 256, bn: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """w0: (m, n), a_stack: (C, m, r), b_stack: (C, r, n), signs: (C,) f32
+    (may be negative) → (m, n) f32 = W0 + scale·Σ_c s_c·a_c b_c."""
+    m, n = w0.shape
+    c, _, r = a_stack.shape
+    bm, bn = min(bm, m), min(bn, n)
+    w0p = _pad_axis(_pad_axis(w0, bm, 0), bn, 1)
+    ap = _pad_axis(a_stack, bm, 1)
+    bp = _pad_axis(b_stack, bn, 2)
+    mp, np_ = w0p.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j, *_: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j, *_: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_product, scale=scale, num_clients=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(signs.astype(jnp.float32), w0p, ap, bp)[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# per-client fold: the keep_local close, all lanes in one pass
+# --------------------------------------------------------------------------
+
+def _kernel_perclient(w_ref, w0_ref, a_ref, b_ref, o_ref, *, scale: float,
+                      num_clients: int):
+    """o[c] = w0[c] + scale·(Σ_j w_j a_j b_j − a_c b_c): the ideal tile is
+    accumulated ONCE, then each lane's own product is recomputed from the
+    same VMEM slabs — per-lane sign vectors (w − e_c) without C passes."""
+    a = a_ref[...].astype(jnp.float32)  # (C, bm, r)
+    b = b_ref[...].astype(jnp.float32)  # (C, r, bn)
+    ideal = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    for c in range(num_clients):  # static unroll: C is small
+        ideal += w_ref[c] * jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
+    for c in range(num_clients):
+        own = jnp.dot(a[c], b[c], preferred_element_type=jnp.float32)
+        o_ref[c, :, :] = w0_ref[c].astype(jnp.float32) + scale * (ideal - own)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def perclient_fold_apply(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
+                         b_stack: jnp.ndarray, weights: jnp.ndarray, *,
+                         scale: float = 1.0, bm: int = 256, bn: int = 256,
+                         interpret: bool = False) -> jnp.ndarray:
+    """w0_stack: (C, m, n), a_stack: (C, m, r), b_stack: (C, r, n),
+    weights: (C,) f32 → (C, m, n) f32 with lane c = W0_c + scale·(ideal −
+    a_c b_c). Masked (zero-weight) lanes still produce a lane (W0_c +
+    scale·ideal when their factors are zero) — callers discard non-delivered
+    lanes, exactly as the engine's C_max padding contract prescribes."""
+    c, m, n = w0_stack.shape
+    r = a_stack.shape[-1]
+    bm, bn = min(bm, m), min(bn, n)
+    w0p = _pad_axis(_pad_axis(w0_stack, bm, 1), bn, 2)
+    ap = _pad_axis(a_stack, bm, 1)
+    bp = _pad_axis(b_stack, bn, 2)
+    mp, np_ = w0p.shape[1:]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((c, bm, bn), lambda i, j, *_: (0, i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j, *_: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j, *_: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((c, bm, bn), lambda i, j, *_: (0, i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_perclient, scale=scale, num_clients=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, mp, np_), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), w0p, ap, bp)[:, :m, :n]

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.factor_mean import lora_factor_mean
-from repro.kernels.fedex_residual import fedex_residual_apply
+from repro.kernels.fedex_residual import (fedex_residual_apply,
+                                          perclient_fold_apply,
+                                          product_fold_apply)
 from repro.kernels.flash_swa import flash_swa
 from repro.kernels.lora_matmul import lora_matmul
 
@@ -69,6 +71,51 @@ def fedex_fold(w0: jnp.ndarray, a_stack: jnp.ndarray, b_stack: jnp.ndarray,
     out = fedex_residual_apply(w0, a_stack, b_stack, weights, scale=scale,
                                bm=bm, bn=bn, interpret=interpret)
     return out.astype(w0.dtype)
+
+
+def _fold_tiles(m: int, n: int) -> tuple:
+    bm = 256 if m % 256 == 0 else (128 if m % 128 == 0 else min(m, 512))
+    bn = 256 if n % 256 == 0 else (128 if n % 128 == 0 else min(n, 512))
+    return bm, bn
+
+
+def product_fold(w0: jnp.ndarray, a_stack: jnp.ndarray, b_stack: jnp.ndarray,
+                 signs: jnp.ndarray, scale: float, *,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """W0 + scale·Σ_c s_c·a_c b_c, fused & tiled — SIGNED per-lane vector,
+    no mean-product subtraction. The engine's reinit close (s = w) and the
+    factored rank-r' residual fold of the fedex_svd close (one lane, s=[1])
+    both route here. Layout matches ``fedex_fold``: stacked-layer leading
+    axes come first, the client axis sits immediately before (m, r)/(r, n).
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if w0.ndim > 2:  # stacked layers: vmap over the leading axes
+        return jax.vmap(lambda w, a, b: product_fold(w, a, b, signs, scale,
+                                                     interpret=interpret)
+                        )(w0, a_stack, b_stack)
+    bm, bn = _fold_tiles(*w0.shape)
+    out = product_fold_apply(w0, a_stack, b_stack, signs, scale=scale,
+                             bm=bm, bn=bn, interpret=interpret)
+    return out.astype(w0.dtype)
+
+
+def perclient_fold(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
+                   b_stack: jnp.ndarray, weights: jnp.ndarray, scale: float, *,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Keep_local close: lane c gets W0_c + scale·(Σ_j w_j a_j b_j − a_c b_c),
+    all lanes in one tiled pass. Unlike the other folds the CLIENT axis leads
+    every input/output — (C, …, m, n) / (C, …, m, r) — matching the engine's
+    streamed stacks natively; stacked-layer axes in between are vmapped.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if w0_stack.ndim > 3:  # (C, L, ..., m, n): vmap over the layer axes
+        return jax.vmap(lambda w, a, b: perclient_fold(w, a, b, weights, scale,
+                                                       interpret=interpret),
+                        in_axes=1, out_axes=1)(w0_stack, a_stack, b_stack)
+    bm, bn = _fold_tiles(*w0_stack.shape[1:])
+    out = perclient_fold_apply(w0_stack, a_stack, b_stack, weights,
+                               scale=scale, bm=bm, bn=bn, interpret=interpret)
+    return out.astype(w0_stack.dtype)
 
 
 def factor_mean(stack: jnp.ndarray, weights: Optional[jnp.ndarray] = None, *,

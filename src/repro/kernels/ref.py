@@ -37,6 +37,30 @@ def fedex_residual_ref(w0: jnp.ndarray, a_stack: jnp.ndarray,
     return w0.astype(jnp.float32) + scale * (mean_prod - abar @ bbar)
 
 
+def product_fold_ref(w0: jnp.ndarray, a_stack: jnp.ndarray,
+                     b_stack: jnp.ndarray, signs: jnp.ndarray,
+                     scale: float) -> jnp.ndarray:
+    """W0 + scale·Σ_c s_c·(a_c @ b_c) — signed per-lane weights, no mean
+    subtraction (reinit / factored low-rank folds)."""
+    s = jnp.asarray(signs, jnp.float32)
+    acc = jnp.einsum("c,cmr,crn->mn", s, a_stack.astype(jnp.float32),
+                     b_stack.astype(jnp.float32))
+    return w0.astype(jnp.float32) + scale * acc
+
+
+def perclient_fold_ref(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
+                       b_stack: jnp.ndarray, weights: jnp.ndarray,
+                       scale: float) -> jnp.ndarray:
+    """Lane c: W0_c + scale·(Σ_j w_j a_j b_j − a_c b_c) — the keep_local
+    per-client residual folds over a stacked client axis."""
+    w = jnp.asarray(weights, jnp.float32)
+    af = a_stack.astype(jnp.float32)
+    bf = b_stack.astype(jnp.float32)
+    ideal = jnp.einsum("c,cmr,crn->mn", w, af, bf)
+    own = jnp.einsum("cmr,crn->cmn", af, bf)
+    return w0_stack.astype(jnp.float32) + scale * (ideal[None] - own)
+
+
 def factor_mean_ref(stack: jnp.ndarray,
                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Σ_c w_c · x_c over the leading client axis (uniform 1/C when None)."""

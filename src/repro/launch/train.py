@@ -27,7 +27,8 @@ from typing import List
 
 import numpy as np
 
-from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.configs import (FedConfig, LoRAConfig, TrainConfig, get_config,
+                           validate_fed_lora)
 from repro.core import FederatedTrainer
 from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
 from repro.models import build_model
@@ -104,13 +105,37 @@ def main() -> None:
                     help="uplink adapter codec (fedsrv transport)")
     ap.add_argument("--engine", default="auto",
                     choices=("auto", "jnp", "pallas", "off"),
-                    help="fused round-close engine (core/engine.py): auto "
+                    help="fused round-close engine (core/engine.py) for "
+                         "fedex/fedex_svd/keep_local/reinit closes: auto "
                          "picks Pallas kernels on TPU / jitted jnp twin on "
                          "CPU; off = legacy eager list-of-trees close")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
     args = ap.parse_args()
+
+    lora_cfg = LoRAConfig(rank=args.rank, alpha=args.alpha,
+                          include_mlp=args.include_mlp)
+    fed_cfg = FedConfig(num_clients=args.clients, rounds=args.rounds,
+                        local_steps=args.local_steps, method=args.method,
+                        svd_rank=args.svd_rank, assignment=args.assignment,
+                        dirichlet_alpha=args.dirichlet_alpha, seed=args.seed,
+                        dp_clip=args.dp_clip,
+                        dp_noise_multiplier=args.dp_noise,
+                        client_ranks=tuple(
+                            int(r) for r in args.client_ranks.split(",")
+                            if r.strip()),
+                        participation=args.participation,
+                        min_quorum=args.min_quorum,
+                        round_deadline=args.deadline,
+                        weighting=args.weighting,
+                        straggler_prob=args.stragglers,
+                        dropout_prob=args.dropout_prob,
+                        async_buffer=args.async_buffer,
+                        quantize_uplink=args.quantize_uplink,
+                        engine=args.engine)
+    # fail before any model build: svd_rank beyond the k·r residual bound
+    validate_fed_lora(fed_cfg, lora_cfg)
 
     cfg = get_config(args.arch)
     if args.vocab:
@@ -124,26 +149,8 @@ def main() -> None:
 
     trainer = FederatedTrainer(
         model=model,
-        lora_cfg=LoRAConfig(rank=args.rank, alpha=args.alpha,
-                            include_mlp=args.include_mlp),
-        fed_cfg=FedConfig(num_clients=args.clients, rounds=args.rounds,
-                          local_steps=args.local_steps, method=args.method,
-                          svd_rank=args.svd_rank, assignment=args.assignment,
-                          dirichlet_alpha=args.dirichlet_alpha, seed=args.seed,
-                          dp_clip=args.dp_clip,
-                          dp_noise_multiplier=args.dp_noise,
-                          client_ranks=tuple(
-                              int(r) for r in args.client_ranks.split(",")
-                              if r.strip()),
-                          participation=args.participation,
-                          min_quorum=args.min_quorum,
-                          round_deadline=args.deadline,
-                          weighting=args.weighting,
-                          straggler_prob=args.stragglers,
-                          dropout_prob=args.dropout_prob,
-                          async_buffer=args.async_buffer,
-                          quantize_uplink=args.quantize_uplink,
-                          engine=args.engine),
+        lora_cfg=lora_cfg,
+        fed_cfg=fed_cfg,
         train_cfg=TrainConfig(learning_rate=args.lr, schedule="constant",
                               total_steps=args.rounds * args.local_steps),
         client_loaders=loaders,
@@ -151,6 +158,10 @@ def main() -> None:
         seed=args.seed,
     )
     history = trainer.run()
+    if trainer.engine is not None:
+        logger.info("round closes ran through the fused engine "
+                    "(method=%s backend=%s)", trainer.engine.method,
+                    trainer.engine.backend)
     final = history[-1]
     print(f"\nfinal: method={args.method} eval_loss={final.eval_loss:.4f} "
           f"eval_acc={final.eval_acc:.4f} divergence={final.divergence_scaled:.3e}")

@@ -152,8 +152,18 @@ class TestApplyResidual:
                                    0.5 * res["blk"]["q_proj"], rtol=1e-6)
 
     def test_fedex_svd_aggregate_full_rank_is_exact(self):
+        """r' = k·r (the residual's rank bound) reconstructs exactly."""
         loras = make_client_loras()
-        g, res_t = fedex_svd_aggregate(loras, svd_rank=(len(loras) + 1) * 4)
+        g, res_t = fedex_svd_aggregate(loras, svd_rank=len(loras) * 4)
         _, res = fedex_aggregate(loras)
         np.testing.assert_allclose(res_t["blk"]["q_proj"], res["blk"]["q_proj"],
                                    rtol=1e-4, atol=1e-5)
+
+    def test_fedex_svd_aggregate_rejects_degenerate_ranks(self):
+        """r' ≤ 0 (silent rank-0 truncation) and r' > k·r (pure padding)
+        both raise instead of falling through to a degenerate dense SVD."""
+        loras = make_client_loras()
+        with pytest.raises(ValueError, match="svd_rank"):
+            fedex_svd_aggregate(loras, svd_rank=0)
+        with pytest.raises(ValueError, match="rank bound"):
+            fedex_svd_aggregate(loras, svd_rank=len(loras) * 4 + 1)

@@ -247,14 +247,15 @@ class TestRoundBuffers:
 
     def test_transport_decode_into_matches_decode(self):
         """int8 uplink through decode_into ≡ decode: the sink aggregates
-        exactly what was transmitted (dequantized values)."""
+        exactly what was transmitted (dequantized values). The payload's
+        round_id selects the ring set, so the round must be open under it."""
         from repro.fedsrv.transport import AdapterCodec
 
         rng = np.random.default_rng(2)
         template = self._template(rng)
         codec = AdapterCodec("int8")
         bufs = RoundBuffers(template, 2)
-        bufs.begin_round({0: 0, 1: 1})
+        bufs.begin_round({0: 0, 1: 1}, round_id=0)
         tree = self._template(np.random.default_rng(5))
         payload = codec.encode(tree, round_id=0, client_id=1)
         codec.decode_into(payload, bufs)
