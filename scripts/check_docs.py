@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Docs vs package consistency check (CI `docs` job).
+
+Guards README.md / ROADMAP.md / docs/*.md against rot:
+
+* fenced code blocks — every ``python -m <module>`` invocation, every
+  ``import repro…`` / ``from repro… import names`` statement, and every
+  ``python path/to/file.py`` must resolve against the live package (modules
+  via importlib, imported names via getattr);
+* prose — every backticked ``foo/bar.py`` path token must exist, either
+  repo-relative or under ``src/repro/`` (module docs conventionally drop the
+  ``src/repro/`` prefix);
+* markdown links — relative link targets must exist (anchors stripped);
+  http(s) links are left to humans (no network in the check).
+
+Exit code 1 with a per-finding report when anything dangles.
+
+  PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))  # benchmarks.* / examples are repo-rooted
+
+DOC_FILES = [REPO / "README.md", REPO / "ROADMAP.md"]
+DOC_FILES += sorted((REPO / "docs").glob("*.md"))
+
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+RUN_MODULE_RE = re.compile(r"python\s+-m\s+([\w.]+)")
+RUN_FILE_RE = re.compile(r"python\s+([\w./-]+\.py)")
+IMPORT_RE = re.compile(r"^\s*import\s+(repro[\w.]*)", re.MULTILINE)
+# names: either a parenthesized (possibly multi-line) group, or the rest of
+# the line — [\w, \t] must NOT match newlines or the following source line
+# would be parsed as an imported name
+FROM_IMPORT_RE = re.compile(
+    r"^\s*from\s+(repro[\w.]*)\s+import\s+(?:\(([^)]*)\)|([\w, \t]+))",
+    re.MULTILINE)
+PY_PATH_RE = re.compile(r"`([\w.\-]+(?:/[\w.\-]+)+\.py)")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def module_exists(name: str) -> bool:
+    try:
+        return importlib.util.find_spec(name) is not None
+    except (ImportError, ModuleNotFoundError, ValueError):
+        return False
+
+
+def path_exists(token: str) -> bool:
+    """Repo-relative, or under src/repro/ (docs drop the prefix)."""
+    candidates = [REPO / token, REPO / "src" / "repro" / token,
+                  REPO / "src" / token]
+    return any(c.is_file() for c in candidates)
+
+
+def check_fences(doc: Path, text: str, errors: list) -> None:
+    for lang, body in FENCE_RE.findall(text):
+        if lang == "mermaid":
+            continue
+        for mod in RUN_MODULE_RE.findall(body):
+            if mod == "pytest":
+                continue
+            if not module_exists(mod):
+                errors.append(f"{doc.name}: fenced `python -m {mod}` — "
+                              "module not found")
+        for f in RUN_FILE_RE.findall(body):
+            if not path_exists(f):
+                errors.append(f"{doc.name}: fenced `python {f}` — "
+                              "file not found")
+        for mod in IMPORT_RE.findall(body):
+            if not module_exists(mod):
+                errors.append(f"{doc.name}: fenced `import {mod}` — "
+                              "module not found")
+        for mod, paren_names, line_names in FROM_IMPORT_RE.findall(body):
+            names = paren_names or line_names
+            if not module_exists(mod):
+                errors.append(f"{doc.name}: fenced `from {mod} import …` — "
+                              "module not found")
+                continue
+            m = importlib.import_module(mod)
+            for name in filter(None, (n.strip() for n in names.split(","))):
+                name = name.split(" as ")[0].strip()  # 'x as y' checks x
+                if not hasattr(m, name):
+                    errors.append(f"{doc.name}: fenced `from {mod} import "
+                                  f"{name}` — name not found")
+
+
+def check_paths(doc: Path, text: str, errors: list) -> None:
+    for token in PY_PATH_RE.findall(text):
+        if not path_exists(token):
+            errors.append(f"{doc.name}: dead module reference `{token}`")
+
+
+def check_links(doc: Path, text: str, errors: list) -> None:
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not (doc.parent / rel).exists() and not (REPO / rel).exists():
+            errors.append(f"{doc.name}: dead link `{target}`")
+
+
+def main() -> int:
+    errors: list = []
+    checked = 0
+    for doc in DOC_FILES:
+        if not doc.is_file():
+            errors.append(f"missing doc file: {doc.relative_to(REPO)}")
+            continue
+        text = doc.read_text()
+        check_fences(doc, text, errors)
+        check_paths(doc, text, errors)
+        check_links(doc, text, errors)
+        checked += 1
+    if errors:
+        print(f"docs check FAILED ({len(errors)} finding(s) "
+              f"across {checked} file(s)):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"docs check OK: {checked} file(s), no dead module refs or links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

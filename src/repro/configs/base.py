@@ -210,6 +210,13 @@ class FedConfig:
     # on TPU, jitted jnp twin elsewhere; "jnp"/"pallas" force a backend;
     # "off" → the legacy eager list-of-trees close.
     engine: str = "auto"
+    # RoundBuffers ring depth: how many rounds' uplink stacks may be in
+    # flight at once (2 = classic double buffering; >2 lets FedBuff commits
+    # pipeline deeper). With an async buffer, rounds lagging ring_max_lag or
+    # more commit versions are EVICTED from a full ring rather than wedging
+    # it (stale uplinks for them are dropped).
+    ring_depth: int = 2
+    ring_max_lag: int = 1
 
     def __post_init__(self):
         if self.method not in ("fedex", "fedit", "ffa", "fedex_svd",
@@ -226,6 +233,12 @@ class FedConfig:
                 "(0 → exact aggregation, r' ≥ 1 → rank-r' truncation)")
         if self.weighting not in ("uniform", "examples"):
             raise ValueError(f"unknown weighting {self.weighting!r}")
+        if self.ring_depth < 1:
+            raise ValueError(f"ring_depth must be ≥ 1, got {self.ring_depth}")
+        if self.ring_max_lag < 1:
+            raise ValueError(
+                f"ring_max_lag must be ≥ 1, got {self.ring_max_lag} "
+                "(a commit may always lag up to its own version)")
 
 
 def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:

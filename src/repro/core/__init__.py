@@ -23,11 +23,13 @@ from repro.core.decompose import (
     truncated_svd_product,
 )
 from repro.core.divergence import deviation_tree, flatten_deviations, mean_deviation
-from repro.core.engine import RoundBuffers, RoundCloseEngine, make_close_fn
+from repro.core.engine import (DeferredDivergence, RoundBuffers,
+                               RoundCloseEngine, make_close_fn)
 from repro.core.federated import FederatedTrainer, make_eval_fn, make_local_step
 from repro.core.lora import init_lora, lora_param_count, merge_lora, resolve_targets
 
 __all__ = [
+    "DeferredDivergence",
     "FederatedTrainer",
     "RoundBuffers",
     "RoundCloseEngine",

@@ -53,8 +53,10 @@ HBM). Method-by-method:
   (C_max, …)-stacked per-lane W0 buffers; :func:`per_client_residuals` here
   is the eager oracle only.
 
-The mesh-collective twin of ``fedex`` (psum-mean over a client axis inside a
-pjit'd program) lives in launch/train.py.
+The mesh-collective twin of ``fedex`` (a masked WEIGHTED psum-mean over a
+sharded client axis inside one pjit'd program — partial participation and
+non-uniform weights enter only through the weight vector) lives in
+launch/mesh_train.py, reached via ``launch/train.py --mode mesh``.
 
 The C_max padding contract: engine stacks are always ``(C_max, …)``; a
 round's candidates get lanes in client-id order and non-delivered lanes keep
@@ -314,7 +316,15 @@ def reinit_adapters(template: Params, rng: jax.Array) -> Params:
 
 def per_client_residuals(client_loras: List[Params],
                          weights: Weights = None) -> List[Params]:
-    """keep_local strategy: residual_i = Σwⱼaⱼbⱼ − aᵢ bᵢ for every client."""
+    """keep_local residuals, EAGER ORACLE: residual_i = Σwⱼaⱼbⱼ − aᵢ bᵢ.
+
+    One dense residual tree per client, materialised host-side — kept as the
+    auditable ground truth for tests and the ``engine="off"`` path. The
+    production keep_local close runs through ``core/engine.py`` (one jitted
+    pass over (C_max, …)-stacked per-lane W0 buffers; the
+    ``kernels/fedex_residual.perclient_fold`` kernel on TPU) and never
+    builds this list.
+    """
     ideal = product_mean(client_loras, weights)
     out = []
     for i in range(len(client_loras)):

@@ -16,7 +16,20 @@ for EVERY aggregation variant the paper studies:
   never reused across rounds), ``write_flat`` routes a delivery to its
   round's set by the payload's ``round_id``, ``take`` pops the OLDEST open
   round and hands its stacks to the close program. At most ``depth`` rounds
-  may be open; exceeding it is an error, not a silent overwrite.
+  may be open; exceeding it is an error, not a silent overwrite — UNLESS the
+  caller gave open rounds a ``deadline`` and passes ``now`` when opening the
+  next one: expired rounds are then EVICTED (dropped with a warning, late
+  uplinks for them discarded) instead of wedging the ring. ``depth > 2``
+  plus per-round deadlines is the FedBuff regime: commits lagging
+  ``max_version_lag`` or more versions are evicted rather than blocking new
+  rounds.
+* :class:`DeferredDivergence` — the §6 divergence metric leaves the close as
+  a DEVICE scalar; the host sync (``float(...)``, a blocking device→host
+  transfer) happens only when the caller resolves the handle, which the
+  trainer does at the NEXT round boundary. Dispatching the close therefore
+  returns immediately, and the ring's round-N+1 uplink decoding genuinely
+  overlaps the round-N close on accelerators. The handle quacks like a float
+  (comparisons, arithmetic, ``np.asarray``) — any numeric use resolves it.
 * :func:`make_close_fn` / :class:`RoundCloseEngine` — the fused close for all
   engine methods, each one jitted program with W0 leaves and client stacks
   donated (``donate_argnums``) so XLA updates them in place:
@@ -76,13 +89,115 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.util.logging import get_logger
 from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+logger = get_logger("engine")
 
 Params = Dict[str, Any]
 
 _CPU = jax.default_backend() == "cpu"
 
 ENGINE_METHODS = ("fedex", "fedex_svd", "reinit", "keep_local")
+
+
+class DeferredDivergence:
+    """§6 divergence as a device scalar with the host sync deferred.
+
+    The close program computes the divergence on device; wrapping it here
+    instead of calling ``float()`` keeps the close dispatch ASYNCHRONOUS —
+    the trainer resolves the handle at the next round boundary, so the
+    round-N close overlaps round-N+1 uplink decoding (the whole point of the
+    :class:`RoundBuffers` ring). Any numeric use (comparison, arithmetic,
+    ``np.asarray``, ``float``) resolves the handle — i.e. blocks on the
+    device value — and caches the result.
+    """
+
+    __slots__ = ("_raw", "_value", "round_id")
+
+    def __init__(self, raw, round_id=None):
+        self._raw = raw
+        self._value: Optional[float] = None
+        self.round_id = round_id
+
+    @property
+    def resolved(self) -> bool:
+        """True once the host sync has happened (no device value pending)."""
+        return self._value is not None
+
+    @property
+    def raw(self):
+        """The unresolved device scalar (None after resolution)."""
+        return self._raw
+
+    def resolve(self) -> float:
+        """Block on the device value (the ONLY host sync) and cache it."""
+        if self._value is None:
+            self._value = float(self._raw)
+            self._raw = None  # drop the device reference
+        return self._value
+
+    # -- float duck-typing: any numeric use resolves ------------------------
+    def __float__(self) -> float:
+        return self.resolve()
+
+    def __array__(self, dtype=None, copy=None):
+        return np.asarray(self.resolve(), dtype=dtype)
+
+    def __lt__(self, other):
+        return self.resolve() < other
+
+    def __le__(self, other):
+        return self.resolve() <= other
+
+    def __gt__(self, other):
+        return self.resolve() > other
+
+    def __ge__(self, other):
+        return self.resolve() >= other
+
+    def __eq__(self, other):
+        if isinstance(other, DeferredDivergence):
+            return self.resolve() == other.resolve()
+        return self.resolve() == other
+
+    def __ne__(self, other):
+        return not self.__eq__(other)
+
+    __hash__ = None  # mutable (resolution caches); never a dict key
+
+    def __abs__(self):
+        return abs(self.resolve())
+
+    def __sub__(self, other):
+        return self.resolve() - other
+
+    def __rsub__(self, other):
+        return other - self.resolve()
+
+    def __add__(self, other):
+        return self.resolve() + other
+
+    __radd__ = __add__
+
+    def __mul__(self, other):
+        return self.resolve() * other
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other):
+        return self.resolve() / other
+
+    def __rtruediv__(self, other):
+        return other / self.resolve()
+
+    def __format__(self, spec):
+        return format(self.resolve(), spec)
+
+    def __repr__(self) -> str:
+        if self.resolved:
+            return f"DeferredDivergence({self._value!r}, resolved)"
+        return f"DeferredDivergence(<device scalar>, round_id={self.round_id!r})"
 
 
 def _resolve_backend(backend: str) -> str:
@@ -164,6 +279,32 @@ def _set_path(tree: Params, path: str, value: Any) -> Params:
     return out
 
 
+def collect_w0_leaves(specs: Sequence[FactorSpec],
+                      params: Params) -> Dict[str, jnp.ndarray]:
+    """key → adapted W0 leaf (the ``kernel`` child for projection modules,
+    the raw tensor for MoE expert stacks). Shared by the streaming engine and
+    the mesh-mode closer (launch/mesh_train.py)."""
+    return {
+        s.key: (_get_path(params, s.key)["kernel"] if s.has_kernel
+                else _get_path(params, s.key))
+        for s in specs
+    }
+
+
+def fold_back_w0(specs: Sequence[FactorSpec], params: Params,
+                 new_w0: Dict[str, jnp.ndarray]) -> Params:
+    """Write the close's updated W0 leaves back into the params tree
+    (functional spine-copy update). Inverse of :func:`collect_w0_leaves`."""
+    new_params = params
+    for s in specs:
+        if s.has_kernel:
+            node = dict(_get_path(params, s.key), kernel=new_w0[s.key])
+            new_params = _set_path(new_params, s.key, node)
+        else:
+            new_params = _set_path(new_params, s.key, new_w0[s.key])
+    return new_params
+
+
 # --------------------------------------------------------------------------
 # streaming round buffers (double-buffered ring)
 # --------------------------------------------------------------------------
@@ -186,9 +327,22 @@ class RoundBuffers:
       across rounds and an in-flight close can never see the next round's
       writes;
     * at most ``depth`` rounds may be open at once; opening more raises
-      (never silently overwrites an un-closed round's data);
+      (never silently overwrites an un-closed round's data) — unless expired
+      rounds can be evicted first, see below;
     * within a round, slot lanes are written at most once per client and
       non-delivered lanes simply stay zero (the weight mask handles them).
+
+    Per-round deadlines / eviction (the ``depth > 2`` FedBuff regime): a
+    round may be opened with a ``deadline`` on whatever monotonic scale its
+    coordinator uses (sim-seconds for the sync coordinator, commit VERSIONS
+    for FedBuff). When a ``begin_round`` with ``now=...`` finds all ``depth``
+    sets in flight, open rounds whose deadline has passed (``deadline ≤
+    now``) are EVICTED — their stacks dropped with a warning — instead of
+    wedging the ring; a commit lagging ``max_version_lag`` or more versions
+    behind is abandoned, not waited on. Uplinks that later arrive for an
+    evicted round are discarded (``write_flat`` returns ``False``), never
+    scattered into a live round's lanes. Rounds without a deadline are never
+    evicted implicitly; :meth:`evict` drops one explicitly.
 
     On accelerators :meth:`write_flat` scatters one decoded payload into its
     lane via a single jitted ``dynamic_update_index_in_dim`` program with the
@@ -210,8 +364,13 @@ class RoundBuffers:
         flat = flatten_with_paths(lora_template)
         self._shapes = {p: tuple(x.shape) for p, x in flat.items()}
         self._host = _CPU
-        # round_id → {"slots": cid→lane, "written": cid→lane, "stacks": dict}
+        # round_id → {"slots": cid→lane, "written": cid→lane, "stacks": dict,
+        #             "deadline": Optional[float]}
         self._open: "OrderedDict[Any, Dict[str, Any]]" = OrderedDict()
+        # recently evicted round ids (bounded): late uplinks for them are
+        # dropped silently instead of raising as unroutable
+        self._evicted: "OrderedDict[Any, Any]" = OrderedDict()
+        self.evictions = 0
         self._auto = 0
         if not self._host:
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -244,9 +403,17 @@ class RoundBuffers:
         return round_id, self._open[round_id]
 
     # -- round lifecycle ----------------------------------------------------
-    def begin_round(self, slots: Dict[int, int], round_id=None):
+    def begin_round(self, slots: Dict[int, int], round_id=None, *,
+                    deadline: Optional[float] = None,
+                    now: Optional[float] = None):
         """Open a new round: ``slots`` maps client_id → lane over the round's
-        candidate set. Returns the round id (auto-assigned when omitted)."""
+        candidate set. Returns the round id (auto-assigned when omitted).
+
+        ``deadline`` (optional) marks when this round becomes evictable, on
+        the caller's monotonic scale (sim-time / commit version); ``now`` is
+        the current value on that scale. A full ring first evicts expired
+        rounds (``deadline ≤ now``) before giving up; without ``now`` (or
+        with nothing expired) a full ring still raises."""
         if len(slots) > self.c_max:
             raise ValueError(f"{len(slots)} candidates > C_max={self.c_max}")
         if any(not 0 <= s < self.c_max for s in slots.values()):
@@ -256,21 +423,50 @@ class RoundBuffers:
             self._auto += 1
         if round_id in self._open:
             raise ValueError(f"round {round_id!r} is already open")
+        if len(self._open) >= self.depth and now is not None:
+            for rid in [r for r, e in self._open.items()
+                        if e["deadline"] is not None and e["deadline"] <= now]:
+                self.evict(rid, reason=f"deadline {self._open[rid]['deadline']}"
+                                       f" ≤ now {now}")
         if len(self._open) >= self.depth:
             raise RuntimeError(
                 f"all {self.depth} buffer sets are in flight (open rounds: "
                 f"{list(self._open)}) — take() the oldest before opening "
-                "another")
+                "another, or give open rounds a deadline so a full ring can "
+                "evict them")
         self._open[round_id] = {"slots": dict(slots), "written": {},
-                                "stacks": self._alloc()}
+                                "stacks": self._alloc(), "deadline": deadline}
         return round_id
 
+    def evict(self, round_id, reason: str = "explicit") -> Dict[int, int]:
+        """Drop an open round WITHOUT closing it: its stacks are discarded and
+        any late uplink for it will be dropped (not an error). Returns the
+        evicted round's delivered {client_id: lane} map for accounting."""
+        rid, e = self._entry(round_id)
+        del self._open[rid]
+        self._evicted[rid] = reason
+        while len(self._evicted) > 64:  # bounded memory of evicted ids
+            self._evicted.popitem(last=False)
+        self.evictions += 1
+        logger.warning("evicted round %r (%s): %d/%d lanes delivered — "
+                       "its uplinks are discarded", rid, reason,
+                       len(e["written"]), len(e["slots"]))
+        return dict(e["written"])
+
     def write_flat(self, client_id: int, flat: Dict[str, Any],
-                   round_id=None) -> None:
+                   round_id=None) -> bool:
         """Scatter one client's decoded adapter leaves into its lane.
 
         ``round_id=None`` routes to the oldest open round that has a lane for
-        this client (single-open callers never need to pass it)."""
+        this client (single-open callers never need to pass it). Returns
+        ``True`` when the write landed; a write addressed to an EVICTED round
+        is dropped (returns ``False``) — the uplink lost its race against the
+        ring's deadline and must not scatter into a live round's lanes.
+        The eviction-drop guarantee needs the EXPLICIT ``round_id``: with
+        ``None`` there is no payload identity to check against the evicted
+        set, so a late uplink could land in a newer open round that also has
+        a lane for this client. Any caller that evicts (the coordinators, via
+        ``decode_into``) must route by the payload's round_id — they do."""
         if round_id is None:
             for rid, e in self._open.items():
                 if client_id in e["slots"]:
@@ -281,6 +477,10 @@ class RoundBuffers:
                     f"client {client_id} has no lane in any open round "
                     f"(open: {list(self._open)}) — stale uplink from an "
                     "already-closed round?")
+        if round_id in self._evicted and round_id not in self._open:
+            logger.warning("dropping uplink from client %d for evicted "
+                           "round %r", client_id, round_id)
+            return False
         _, e = self._entry(round_id)
         slot = e["slots"][client_id]
         if self._host:
@@ -290,9 +490,11 @@ class RoundBuffers:
             leaves = {p: flat[p] for p in self._shapes}
             e["stacks"] = self._scatter(e["stacks"], jnp.int32(slot), leaves)
         e["written"][client_id] = slot
+        return True
 
-    def write(self, client_id: int, lora_tree: Params, round_id=None) -> None:
-        self.write_flat(client_id, flatten_with_paths(lora_tree), round_id)
+    def write(self, client_id: int, lora_tree: Params, round_id=None) -> bool:
+        return self.write_flat(client_id, flatten_with_paths(lora_tree),
+                               round_id)
 
     # -- views --------------------------------------------------------------
     @property
@@ -737,33 +939,25 @@ class RoundCloseEngine:
                              "round buffers")
 
     def _w0_leaves(self, params: Params) -> Dict[str, jnp.ndarray]:
-        return {
-            s.key: (_get_path(params, s.key)["kernel"] if s.has_kernel
-                    else _get_path(params, s.key))
-            for s in self.specs
-        }
+        return collect_w0_leaves(self.specs, params)
 
     def _fold_back(self, params: Params,
                    new_w0: Dict[str, jnp.ndarray]) -> Params:
-        new_params = params
-        for s in self.specs:
-            if s.has_kernel:
-                node = dict(_get_path(params, s.key), kernel=new_w0[s.key])
-                new_params = _set_path(new_params, s.key, node)
-            else:
-                new_params = _set_path(new_params, s.key, new_w0[s.key])
-        return new_params
+        return fold_back_w0(self.specs, params, new_w0)
 
     # ------------------------------------------------------------------
     def close(self, params: Params, client_ids: Sequence[int],
               weights: Optional[Sequence[float]] = None, *,
               round_id=None, rng: Optional[jax.Array] = None
-              ) -> Tuple[Params, Params, float]:
+              ) -> Tuple[Params, Params, DeferredDivergence]:
         """Close the round over the delivered subset (fedex / fedex_svd /
         reinit methods — keep_local closes through :meth:`close_keep_local`).
 
         Returns ``(global_lora, new_params, divergence)``. ``params`` W0
         leaves and the streamed stacks are donated to the close program.
+        The divergence comes back as a :class:`DeferredDivergence` device
+        handle — NO host sync happens inside the close; the caller resolves
+        the handle at its next round boundary (or on first numeric use).
         ``reinit`` additionally needs the round's ``rng`` and returns the
         freshly drawn adapters (identical to ``aggregation.reinit_adapters``)
         as the new global.
@@ -789,12 +983,13 @@ class RoundCloseEngine:
                 flat[s.key + "/a"] = glob[s.key]["a"]
                 flat[s.key + "/b"] = glob[s.key]["b"]
             global_lora = unflatten_from_paths(flat)
-        return global_lora, new_params, float(div)
+        return global_lora, new_params, DeferredDivergence(div, round_id)
 
     def close_keep_local(self, client_params: Sequence[Params],
                          client_ids: Sequence[int],
                          weights: Optional[Sequence[float]] = None, *,
-                         round_id=None) -> Tuple[Dict[int, Params], float]:
+                         round_id=None
+                         ) -> Tuple[Dict[int, Params], DeferredDivergence]:
         """Close a keep_local round: every DELIVERED client's own base gets
         its residual Σ_j w_j·a_j b_j − a_i b_i folded in, all lanes in one
         jitted dispatch over (C_max, …)-stacked per-lane W0 buffers.
@@ -802,6 +997,7 @@ class RoundCloseEngine:
         ``client_params`` is the trainer's per-client params list (indexed by
         client id). Returns ``({client_id: new_params}, divergence)`` for the
         delivered subset only — non-delivered lanes' outputs are discarded.
+        The divergence is a :class:`DeferredDivergence` (no host sync here).
         """
         if self.method != "keep_local":
             raise ValueError(f"engine method is {self.method!r}, "
@@ -836,4 +1032,4 @@ class RoundCloseEngine:
                 else:
                     newp = _set_path(newp, s.key, leaf)
             out[cid] = newp
-        return out, float(div)
+        return out, DeferredDivergence(div, round_id)

@@ -15,9 +15,16 @@ trainer then dispatches the method-specific CLOSE (aggregation + residual
 fold) over the delivered subset with the round's weights.
 
 This is the *reference orchestration*: one process, clients sequential, every
-client step jit'd. The mesh-parallel launcher (launch/train.py) vmaps clients
-over a mesh axis and replaces the host-side tree arithmetic with collectives —
-both paths call the SAME aggregation operators from core/aggregation.py.
+client step jit'd. The mesh-parallel launcher (launch/mesh_train.py, via
+``launch/train.py --mode mesh``) vmaps clients over a mesh axis and replaces
+the host-side tree arithmetic with collectives — both paths run the SAME
+close program over the same aggregation math (core/aggregation.py).
+
+Overlap-aware closes: when the fused engine is on, the round close returns
+its §6 divergence as a ``DeferredDivergence`` DEVICE handle — the trainer
+records it un-synced and resolves it at the NEXT round boundary, so the
+close's dispatch returns immediately and the RoundBuffers ring can stream
+round N+1 uplinks while round N's close executes.
 """
 
 from __future__ import annotations
@@ -78,8 +85,39 @@ class RoundRecord:
     client_losses: List[float]
     eval_loss: float
     eval_acc: float
-    divergence_scaled: float  # FedIT-vs-ideal deviation of this round's adapters
+    # FedIT-vs-ideal deviation of this round's adapters. On the engine path
+    # this briefly holds a core/engine.DeferredDivergence device handle; the
+    # trainer swaps in the float at the next round boundary (run() never
+    # returns records with unresolved handles).
+    divergence_scaled: float
     lr: float
+
+
+def evaluate_on_batches(eval_fn, params, lora,
+                        batches) -> tuple[float, float]:
+    """Mean (loss, accuracy) of ``eval_fn`` over ``batches`` (NaNs when
+    empty). Shared by the host and mesh trainers."""
+    if not batches:
+        return float("nan"), float("nan")
+    ls, accs = [], []
+    for b in batches:
+        l, a = eval_fn(params, lora, b)
+        ls.append(float(l))
+        accs.append(float(a))
+    return sum(ls) / len(ls), sum(accs) / len(accs)
+
+
+def resolve_divergences(history: List["RoundRecord"]) -> None:
+    """Round-boundary host sync: swap any DeferredDivergence handles in the
+    history for their float values. This is the ONLY place a trainer blocks
+    on a close's device scalar — the close itself returns without a host
+    transfer, so the ring's next-round uplink decoding overlaps the
+    in-flight close on accelerators. Shared by the host and mesh trainers."""
+    from repro.core.engine import DeferredDivergence
+
+    for rec in history:
+        if isinstance(rec.divergence_scaled, DeferredDivergence):
+            rec.divergence_scaled = rec.divergence_scaled.resolve()
 
 
 @dataclass
@@ -152,7 +190,8 @@ class FederatedTrainer:
                 self.params, self.global_lora,
                 c_max=self.fed_cfg.num_clients, scale=self.scale,
                 method=eng_method, svd_rank=self.fed_cfg.svd_rank,
-                backend=self.fed_cfg.engine)
+                backend=self.fed_cfg.engine,
+                depth=self.fed_cfg.ring_depth)
             self.coordinator.sink = self.engine.buffers
 
     def _build_coordinator(self):
@@ -183,7 +222,8 @@ class FederatedTrainer:
             return AsyncBufferCoordinator(
                 registry, policy, stragglers, codec, self.ledger,
                 buffer_size=fc.async_buffer,
-                staleness_alpha=fc.staleness_alpha)
+                staleness_alpha=fc.staleness_alpha,
+                max_version_lag=fc.ring_max_lag)
         return RoundCoordinator(registry, policy, stragglers, codec, self.ledger)
 
     # ------------------------------------------------------------------
@@ -309,19 +349,21 @@ class FederatedTrainer:
         return lora, losses
 
     def _evaluate(self, params, lora) -> tuple[float, float]:
-        if not self.eval_batches:
-            return float("nan"), float("nan")
-        ls, accs = [], []
-        for b in self.eval_batches:
-            l, a = self.eval_fn(params, lora, b)
-            ls.append(float(l))
-            accs.append(float(a))
-        return sum(ls) / len(ls), sum(accs) / len(accs)
+        return evaluate_on_batches(self.eval_fn, params, lora,
+                                   self.eval_batches)
+
+    def _resolve_divergences(self) -> None:
+        resolve_divergences(self.history)
 
     # ------------------------------------------------------------------
     def run(self) -> List[RoundRecord]:
         k = self.fed_cfg.num_clients
+        from repro.core.engine import DeferredDivergence
+
         for rnd in range(self.fed_cfg.rounds):
+            # round boundary: resolve the previous round's deferred
+            # divergence (its close has long since been dispatched)
+            self._resolve_divergences()
             lr_now = float(lr_at(self._global_step, base_lr=self.train_cfg.learning_rate,
                                  total_steps=self._total_steps,
                                  kind=self.train_cfg.schedule,
@@ -417,8 +459,13 @@ class FederatedTrainer:
                               eval_loss=ev_loss, eval_acc=ev_acc,
                               divergence_scaled=div, lr=lr_now)
             self.history.append(rec)
+            deferred = (isinstance(div, DeferredDivergence)
+                        and not div.resolved)
             logger.info(
-                "round=%d method=%s eval_loss=%.4f eval_acc=%.4f div=%.3e "
-                "client_loss=%.4f", rnd, self.method, ev_loss, ev_acc, div,
+                "round=%d method=%s eval_loss=%.4f eval_acc=%.4f div=%s "
+                "client_loss=%.4f", rnd, self.method, ev_loss, ev_acc,
+                "deferred" if deferred else f"{float(div):.3e}",
                 sum(client_losses) / len(client_losses))
+        # final boundary: no record leaves run() with an unresolved handle
+        self._resolve_divergences()
         return self.history

@@ -138,18 +138,26 @@ class RoundCoordinator:
         self._downlink_params: Optional[int] = None  # adapter tree is static
 
     # ------------------------------------------------------------------
-    def _open_sink(self, candidates: List[int], round_id: int) -> None:
+    def _open_sink(self, candidates: List[int], round_id: int, *,
+                   deadline: Optional[float] = None,
+                   now: Optional[float] = None) -> None:
         """Assign this round's candidate clients to stack lanes in client-id
         order (stable: the uniform full-participation sum visits lanes in the
         same order the legacy list path visited clients). The round_id keys
         the sink's double-buffer ring: round N+1 uplinks stream into a fresh
         stack set while round N's set is still owned by its in-flight close.
         Zero-candidate rounds never open a set (there is nothing to stream
-        and no close will ever take() it)."""
+        and no close will ever take() it).
+
+        ``deadline``/``now`` thread the ring's per-round eviction contract
+        through (core/engine.RoundBuffers): when every ring set is in flight,
+        open rounds whose deadline has passed are evicted instead of wedging
+        the ring — the sync coordinator uses sim-seconds, the FedBuff
+        coordinator commit VERSIONS, as the monotonic scale."""
         if self.sink is not None and candidates:
             self.sink.begin_round(
                 {cid: i for i, cid in enumerate(sorted(candidates))},
-                round_id=round_id)
+                round_id=round_id, deadline=deadline, now=now)
 
     def _uplink(self, lora: Any, round_id: int, client_id: int) -> Any:
         """Client → server through the codec; the server aggregates what was
@@ -198,8 +206,13 @@ class RoundCoordinator:
         quorum = min(quorum, len(arrivals)) if arrivals else 0
 
         # streaming close: every non-dropout candidate gets a stack lane up
-        # front; late/dropped lanes simply stay masked (weight 0) at close
-        self._open_sink([c.client_id for _, c in arrivals], round_id)
+        # front; late/dropped lanes simply stay masked (weight 0) at close.
+        # A policy deadline doubles as the ring-eviction deadline: a round
+        # that never closed by its deadline may be evicted from a full ring.
+        self._open_sink([c.client_id for _, c in arrivals], round_id,
+                        deadline=(opened + pol.deadline
+                                  if pol.deadline > 0 else None),
+                        now=opened)
 
         delivered: List[Delivery] = []
         dropped_deadline: List[int] = []
@@ -258,12 +271,20 @@ class AsyncBufferCoordinator(RoundCoordinator):
                  ledger: Optional[BytesLedger] = None,
                  clock: Optional[SimClock] = None,
                  buffer_size: int = 2,
-                 staleness_alpha: float = 0.5):
+                 staleness_alpha: float = 0.5,
+                 max_version_lag: int = 1):
         super().__init__(registry, policy, stragglers, codec, ledger, clock)
         if buffer_size < 1:
             raise ValueError("buffer_size must be ≥ 1")
+        if max_version_lag < 1:
+            raise ValueError("max_version_lag must be ≥ 1")
         self.buffer_size = buffer_size
         self.staleness_alpha = staleness_alpha
+        # ring eviction: a commit's stack set opened at version v is
+        # evictable from a FULL ring once the server version has advanced by
+        # max_version_lag — a commit lagging a full version (default lag 1)
+        # is abandoned rather than wedging deeper (depth > 2) rings.
+        self.max_version_lag = max_version_lag
         self._version = 0
         self._snapshots: Dict[int, Any] = {}  # version → global lora
         # in-flight: (arrival_time, client, launch_version)
@@ -307,7 +328,11 @@ class AsyncBufferCoordinator(RoundCoordinator):
                 weights=None, opened_at=opened, closed_at=self.clock.now(),
                 comm=self.ledger.round_totals(round_id))
         batch, self._inflight = self._inflight[:take], self._inflight[take:]
-        self._open_sink([c.client_id for _, c, _ in batch], round_id)
+        # versions are the FedBuff ring's monotonic scale: this commit's set
+        # expires max_version_lag versions from now
+        self._open_sink([c.client_id for _, c, _ in batch], round_id,
+                        deadline=self._version + self.max_version_lag,
+                        now=self._version)
 
         delivered: List[Delivery] = []
         for t, c, v in batch:

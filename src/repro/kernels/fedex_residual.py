@@ -22,16 +22,21 @@ Two weighting modes:
   vector.
 
 Two masked variants share the tiling and the scalar-prefetch weight vector,
-covering the remaining round-close methods of the engine (core/engine.py):
+covering the remaining round-close methods of the engine (core/engine.py).
+Their padded public wrappers are ``kernels/ops.py::product_fold`` and
+``perclient_fold`` (as ``fedex_fold`` wraps :func:`fedex_residual_apply`) —
+the engine and every caller go through those:
 
-* :func:`product_fold_apply` — W0 + scale·Σ_c s_c·(a_c @ b_c) with a SIGNED
-  per-lane vector and no mean-product subtraction. s = w closes a ``reinit``
-  round (the full ideal update folds into W0, paper Table 5); a single lane
-  with s = [1] folds a factored rank-r' truncated residual (the fedex_svd
-  close) without the dense ΔW ever reaching HBM.
-* :func:`perclient_fold_apply` — the ``keep_local`` close: every lane's own
-  update  W0_c + scale·(Σ_j w_j a_j b_j − a_c b_c)  in ONE pass. The ideal
-  tile Σ_j w_j a_j b_j is accumulated once per output tile and the per-lane
+* :func:`product_fold_apply` (→ ``ops.product_fold``) — W0 +
+  scale·Σ_c s_c·(a_c @ b_c) with a SIGNED per-lane vector and no
+  mean-product subtraction. s = w closes a ``reinit`` round (the full ideal
+  update folds into W0, paper Table 5); a single lane with s = [1] folds a
+  factored rank-r' truncated residual (the fedex_svd close) without the
+  dense ΔW ever reaching HBM.
+* :func:`perclient_fold_apply` (→ ``ops.perclient_fold``) — the
+  ``keep_local`` close: every lane's own update
+  W0_c + scale·(Σ_j w_j a_j b_j − a_c b_c)  in ONE pass. The ideal tile
+  Σ_j w_j a_j b_j is accumulated once per output tile and the per-lane
   own-product is recomputed from the resident VMEM slabs (r is small, so the
   extra FLOPs are negligible vs re-streaming C dense residuals from HBM).
 

@@ -1,3 +1,4 @@
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (make_client_mesh, make_local_mesh,
+                               make_production_mesh)
 
-__all__ = ["make_local_mesh", "make_production_mesh"]
+__all__ = ["make_client_mesh", "make_local_mesh", "make_production_mesh"]

@@ -28,3 +28,37 @@ def make_local_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_client_mesh(c_max: int, model_parallel: int = 1):
+    """Mesh for co-scheduled federated rounds: a leading ``client`` axis.
+
+    Client-stacked adapters/optimizer state/batches shard their leading
+    ``(C_max, …)`` axis over ``client`` (sharding/specs.client_stack_spec)
+    and base params replicate across it, so per-client local training and
+    the masked weighted round close each run as ONE pjit'd program with the
+    close's client-axis reductions lowered to psum-mean collectives.
+
+    The client axis is sized to the largest divisor of ``c_max`` that the
+    available device count supports — C_max lanes spread lane-per-device-
+    group when it divides, and fall back toward 1 (fully replicated lanes,
+    e.g. single-device CPU tests: same program, trivial collectives)
+    otherwise. ``model_parallel`` carves an inner ``model`` axis off the
+    remaining devices for tensor-parallel lanes.
+    """
+    if c_max < 1:
+        raise ValueError(f"c_max must be ≥ 1, got {c_max}")
+    devices = jax.devices()
+    avail = len(devices) // model_parallel
+    if avail < 1:
+        raise RuntimeError(
+            f"model_parallel={model_parallel} exceeds the {len(devices)} "
+            "available devices")
+    n_client = 1
+    for d in range(min(c_max, avail), 0, -1):
+        if c_max % d == 0:
+            n_client = d
+            break
+    used = n_client * model_parallel
+    return jax.make_mesh((n_client, model_parallel), ("client", "model"),
+                         devices=devices[:used])

@@ -1,0 +1,375 @@
+"""Mesh-mode federated rounds: co-scheduled clients, one pjit'd close.
+
+The host-orchestrated trainer (core/federated.py) runs clients sequentially
+and closes rounds through the streaming engine. THIS module is the
+datacenter twin (``launch/train.py --mode mesh``): client state is STACKED
+on a leading ``(C_max, …)`` axis sharded over a ``client`` mesh axis
+(launch/mesh.make_client_mesh + sharding/specs.client_stack_spec), and each
+phase of a round is ONE pjit'd program:
+
+* **local training** — ``make_mesh_round_fn`` vmaps a client's whole
+  ``local_steps`` scan over the client axis, so every client's AdamW steps
+  for the round run in a single compiled program (lanes co-scheduled on the
+  mesh; base params replicated across the client axis, adapters/optimizer
+  state/batches lane-sharded).
+* **the round close** — the engine's weighted close program
+  (core/engine.make_close_fn, jnp backend) compiled over the client-sharded
+  stacks: weighted factor means, the exact residual fold into W0 and the §6
+  divergence. Under GSPMD the ``Σ_c w_c·…`` reductions over the sharded
+  client axis lower to psum-mean collectives — the masked psum-mean.
+
+Partial participation / weighting contract (same C_max padding contract as
+the streaming engine): lane c always belongs to client c; a round's sampled
+subset and its weights enter ONLY through the ``(C_max,)`` weight vector —
+zero weight masks a lane exactly (its factors vanish from every sum), so a
+50 % sampled round, an example-weighted round and a full uniform round all
+reuse the SAME compiled close program. One program per (method, shapes)
+signature, asserted via the close's compile-cache count in
+tests/test_mesh_round.py. Non-sampled lanes still train (the hardware lanes
+exist either way — their updates are simply masked at the close); their
+compute is the padding cost, not a correctness concern.
+
+Numerics: mesh mode always takes the engine's weighted branch (there is no
+bitwise-uniform branch here — a uniform round is just the uniform weight
+vector), which matches the eager weighted oracle to tight float32 tolerance
+(≤ ~1e-5; see docs/architecture.md for the full contract table).
+
+Overlap: the close returns its divergence as a
+core/engine.DeferredDivergence device handle — the mesh loop resolves it at
+the next round boundary, never inside the close.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import FedConfig, LoRAConfig, TrainConfig
+from repro.core import aggregation as agg
+from repro.core.engine import (DeferredDivergence, build_factor_specs,
+                               collect_w0_leaves, fold_back_w0, make_close_fn)
+from repro.core.federated import (RoundRecord, evaluate_on_batches,
+                                  make_eval_fn, resolve_divergences)
+from repro.core.lora import init_lora
+from repro.optim import adamw_update, clip_by_global_norm, init_adamw, lr_at
+from repro.sharding import client_stack_spec
+from repro.util.logging import get_logger
+from repro.util.tree import flatten_with_paths, unflatten_from_paths
+
+logger = get_logger("mesh_train")
+
+Params = Dict[str, Any]
+
+MESH_METHODS = ("fedex", "fedex_svd")
+
+
+# --------------------------------------------------------------------------
+# the stacked local-training program (one pjit'd program per round)
+# --------------------------------------------------------------------------
+
+def make_mesh_round_fn(model, lora_scale: float,
+                       train_cfg: TrainConfig) -> Callable:
+    """One round of local training for ALL lanes in a single jitted program.
+
+    ``round_fn(params, lora_stack, batches, lrs)`` scans a lane's
+    ``local_steps`` of clipped AdamW (identical math to
+    core/federated.make_local_step) and vmaps the scan over the leading
+    client axis; ``batches`` leaves are ``(C_max, steps, B, …)``, ``lrs`` is
+    the precomputed ``(steps,)`` schedule slice (shared by every lane, like
+    the host trainer). Returns ``(new_lora_stack, losses (C_max, steps))``.
+    Base ``params`` broadcast unsharded across lanes; the adapter stack and
+    batches shard over the client axis where the caller placed them so XLA
+    partitions lane compute across the mesh.
+    """
+
+    def one_lane(params, lora, batches, lrs):
+        opt_state = init_adamw(lora)
+
+        def body(carry, xs):
+            lora, opt_state = carry
+            batch, lr = xs
+
+            def loss_fn(l):
+                return model.loss(params, batch, lora=l,
+                                  lora_scale=lora_scale)
+
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora)
+            grads, _ = clip_by_global_norm(grads, train_cfg.grad_clip)
+            lora, opt_state = adamw_update(
+                grads, opt_state, lora, learning_rate=lr,
+                beta1=train_cfg.beta1, beta2=train_cfg.beta2,
+                eps=train_cfg.eps, weight_decay=train_cfg.weight_decay)
+            return (lora, opt_state), loss
+
+        (lora, _), losses = jax.lax.scan(body, (lora, opt_state),
+                                         (batches, lrs))
+        return lora, losses
+
+    def round_fn(params, lora_stack, batches, lrs):
+        return jax.vmap(one_lane, in_axes=(None, 0, 0, None))(
+            params, lora_stack, batches, lrs)
+
+    return jax.jit(round_fn)
+
+
+# --------------------------------------------------------------------------
+# the mesh close: the engine's weighted program over client-sharded stacks
+# --------------------------------------------------------------------------
+
+class MeshRoundCloser:
+    """Masked psum-mean round close for mesh mode.
+
+    Wraps the engine's weighted close program (core/engine.make_close_fn,
+    jnp backend — its client-axis einsum reductions are what GSPMD lowers to
+    collectives over the ``client`` mesh axis) with the mesh-mode lane
+    contract: lane c IS client c, and a round's participation pattern lives
+    entirely in the ``(C_max,)`` weight vector, so every round of a run —
+    full, sampled, weighted — hits ONE compiled program per (method, shapes)
+    signature (``compiled_programs`` exposes the cache count for the tests).
+
+    The close returns the divergence as a :class:`DeferredDivergence` — no
+    host sync inside the close; resolve at the next round boundary.
+    """
+
+    def __init__(self, mesh, params: Params, lora_template: Params, *,
+                 c_max: int, scale: float, method: str = "fedex",
+                 svd_rank: int = 0, donate: bool = False):
+        if method not in MESH_METHODS:
+            raise ValueError(
+                f"mesh mode closes {MESH_METHODS} rounds, got {method!r} "
+                "(the §6 assignment strategies are host-orchestrated — "
+                "see core/federated.py)")
+        self.mesh = mesh
+        self.c_max = c_max
+        self.method = method
+        self.specs = build_factor_specs(params, lora_template)
+        self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
+                                    method=method, svd_rank=svd_rank,
+                                    backend="jnp", donate=donate)
+
+    # ------------------------------------------------------------------
+    @property
+    def compiled_programs(self) -> int:
+        """How many close programs have been compiled (the padding-contract
+        promise is that this stays at 1 per (method, shapes) signature no
+        matter how participation or weights vary across rounds)."""
+        return self._close._cache_size()
+
+    def stack_shardings(self, stacks: Dict[str, jnp.ndarray]):
+        """path → NamedSharding placing each (C_max, …) stack's leading axis
+        on the ``client`` mesh axis (divisibility-guarded)."""
+        return {p: NamedSharding(self.mesh, client_stack_spec(p, x, self.mesh))
+                for p, x in stacks.items()}
+
+    def shard_stacks(self, stacks: Dict[str, jnp.ndarray]
+                     ) -> Dict[str, jnp.ndarray]:
+        shardings = self.stack_shardings(stacks)
+        return {p: jax.device_put(stacks[p], shardings[p]) for p in stacks}
+
+    def weight_vector(self, client_ids: Sequence[int],
+                      weights: Optional[Sequence[float]] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(C_max,) weight vector + 0/1 mask for the sampled subset.
+
+        Lane c ≡ client c (mesh mode co-schedules every lane); non-sampled
+        lanes get weight 0 — the participation mask. Uniform-over-subset
+        when ``weights`` is None."""
+        if not client_ids:
+            raise ValueError("cannot close a round with no participants")
+        ids = sorted(client_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate client ids in {list(client_ids)}")
+        if ids[0] < 0 or ids[-1] >= self.c_max:
+            raise ValueError(f"client ids {ids} outside [0, {self.c_max})")
+        mask = np.zeros(self.c_max, np.float32)
+        mask[ids] = 1.0
+        w = np.zeros(self.c_max, np.float32)
+        norm = agg.normalize_weights(weights, len(ids))
+        if norm is None:
+            w[ids] = 1.0 / len(ids)
+        else:
+            # norm[i] belongs to client_ids[i] — pair in the CALLER's order
+            # (lane c ≡ client c regardless of how the subset was listed)
+            for cid, wi in zip(client_ids, norm):
+                w[cid] = wi
+        return w, mask
+
+    # ------------------------------------------------------------------
+    def close(self, params: Params, stacks: Dict[str, jnp.ndarray],
+              client_ids: Sequence[int],
+              weights: Optional[Sequence[float]] = None, *, round_id=None
+              ) -> Tuple[Params, Params, DeferredDivergence]:
+        """Close a mesh round over the sampled subset.
+
+        ``stacks`` is the flattened client-stacked adapter tree (path →
+        ``(C_max, …)``, e.g. a round_fn output through
+        :func:`flatten_with_paths`). Returns ``(global_lora, new_params,
+        divergence)`` exactly like the streaming engine's close, with the
+        divergence deferred."""
+        w, mask = self.weight_vector(client_ids, weights)
+        w0_leaves = collect_w0_leaves(self.specs, params)
+        new_w0, glob, div = self._close(w0_leaves, stacks, jnp.asarray(w),
+                                        jnp.asarray(mask), uniform=False)
+        new_params = fold_back_w0(self.specs, params, new_w0)
+        flat = {}
+        for s in self.specs:
+            flat[s.key + "/a"] = glob[s.key]["a"]
+            flat[s.key + "/b"] = glob[s.key]["b"]
+        return (unflatten_from_paths(flat), new_params,
+                DeferredDivergence(div, round_id))
+
+
+# --------------------------------------------------------------------------
+# the mesh-mode federated loop
+# --------------------------------------------------------------------------
+
+@dataclass
+class MeshFederatedTrainer:
+    """Mesh-mode orchestration: every round is two pjit'd programs.
+
+    The loop mirrors core/federated.FederatedTrainer's record format but
+    replaces host-side orchestration with the stacked programs above:
+    sampling draws a per-round subset (seeded, like the fedsrv registry),
+    ALL lanes run the local-training program from the broadcast global
+    adapter, and the masked weighted close folds the exact residual server-
+    side. Divergence handles resolve at round boundaries (overlap-aware).
+    """
+
+    model: Any
+    lora_cfg: LoRAConfig
+    fed_cfg: FedConfig
+    train_cfg: TrainConfig
+    client_loaders: List[Any]
+    eval_batches: List[Dict] = field(default_factory=list)
+    seed: int = 0
+    mesh: Any = None
+
+    def __post_init__(self):
+        from repro.launch.mesh import make_client_mesh
+
+        fc = self.fed_cfg
+        if fc.method not in MESH_METHODS:
+            raise ValueError(f"--mode mesh supports {MESH_METHODS}, "
+                             f"got {fc.method!r}")
+        rng = jax.random.key(self.seed)
+        rp, rl = jax.random.split(rng)
+        if self.mesh is None:
+            self.mesh = make_client_mesh(fc.num_clients)
+        # commit base params REPLICATED on the mesh up front: the close's
+        # updated W0 leaves come back committed, and matching shardings on
+        # round 0 keep every round on the same compiled program (the
+        # one-program-per-signature contract)
+        from jax.sharding import PartitionSpec as P
+        self.params = jax.device_put(
+            self.model.init(rp),
+            NamedSharding(self.mesh, P()))
+        self.global_lora = init_lora(rl, self.params, self.model.cfg,
+                                     self.lora_cfg)
+        if not self.global_lora:
+            raise ValueError("no LoRA targets matched — check target_modules")
+        self.scale = self.lora_cfg.scale
+        method = fc.method
+        svd_rank = fc.svd_rank
+        if method == "fedex_svd" and not svd_rank:
+            method = "fedex"  # svd_rank=0 means exact (config contract)
+        self.closer = MeshRoundCloser(
+            self.mesh, self.params, self.global_lora,
+            c_max=fc.num_clients, scale=self.scale, method=method,
+            svd_rank=svd_rank)
+        self.round_fn = make_mesh_round_fn(self.model, self.scale,
+                                           self.train_cfg)
+        self.eval_fn = make_eval_fn(self.model, self.scale)
+        self.history: List[RoundRecord] = []
+        self._total_steps = fc.rounds * fc.local_steps
+        self._examples = [len(l.sequences) for l in self.client_loaders]
+
+    # ------------------------------------------------------------------
+    def _sample_round(self, rnd: int) -> Tuple[List[int],
+                                               Optional[List[float]]]:
+        """Seeded participant subset + optional example-count weights."""
+        fc = self.fed_cfg
+        k = fc.num_clients
+        n = max(1, int(round(fc.participation * k)))
+        rng = np.random.default_rng((self.seed, rnd))
+        ids = sorted(rng.choice(k, size=n, replace=False).tolist())
+        weights = None
+        if fc.weighting == "examples":
+            weights = [float(self._examples[c % len(self._examples)])
+                       for c in ids]
+        return ids, weights
+
+    def _stack_batches(self, steps: int) -> Dict[str, jnp.ndarray]:
+        """(C_max, steps, B, …) batch stacks, lane c fed by loader c."""
+        per_lane = []
+        for c in range(self.fed_cfg.num_clients):
+            loader = self.client_loaders[c % len(self.client_loaders)]
+            per_lane.append([loader.next_batch() for _ in range(steps)])
+        return jax.tree.map(
+            lambda *leaves: jnp.stack(leaves),
+            *[jax.tree.map(lambda *xs: jnp.stack(xs), *lane)
+              for lane in per_lane])
+
+    def _shard_client_tree(self, tree):
+        """Place each (C_max, …) leaf's leading axis on the client mesh axis
+        so the training program's lanes partition across the mesh."""
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                x, NamedSharding(self.mesh,
+                                 client_stack_spec("", x, self.mesh))),
+            tree)
+
+    def _resolve_divergences(self) -> None:
+        resolve_divergences(self.history)
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[RoundRecord]:
+        fc = self.fed_cfg
+        c = fc.num_clients
+        step0 = 0
+        for rnd in range(fc.rounds):
+            self._resolve_divergences()  # round boundary host sync
+            lrs = jnp.asarray([
+                lr_at(step0 + s, base_lr=self.train_cfg.learning_rate,
+                      total_steps=self._total_steps,
+                      warmup_ratio=self.train_cfg.warmup_ratio,
+                      kind=self.train_cfg.schedule)
+                for s in range(fc.local_steps)], jnp.float32)
+            ids, weights = self._sample_round(rnd)
+
+            # downlink broadcast: every lane starts from the global adapter
+            lora_stack = self._shard_client_tree(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (c,) + x.shape),
+                self.global_lora))
+            batches = self._shard_client_tree(
+                self._stack_batches(fc.local_steps))
+            new_stack, losses = self.round_fn(self.params, lora_stack,
+                                              batches, lrs)
+
+            stacks = self.closer.shard_stacks(
+                dict(flatten_with_paths(new_stack)))
+            self.global_lora, self.params, div = self.closer.close(
+                self.params, stacks, ids, weights, round_id=rnd)
+
+            step0 += fc.local_steps
+            ev_loss, ev_acc = self._evaluate()
+            lane_losses = np.asarray(losses)[:, -1]
+            rec = RoundRecord(
+                round=rnd, client_losses=[float(lane_losses[i]) for i in ids],
+                eval_loss=ev_loss, eval_acc=ev_acc, divergence_scaled=div,
+                lr=float(lrs[0]))
+            self.history.append(rec)
+            logger.info(
+                "round=%d mode=mesh sampled=%d/%d eval_loss=%.4f "
+                "eval_acc=%.4f div=deferred programs=%d", rnd, len(ids), c,
+                ev_loss, ev_acc, self.closer.compiled_programs)
+        self._resolve_divergences()
+        return self.history
+
+    def _evaluate(self) -> Tuple[float, float]:
+        return evaluate_on_batches(self.eval_fn, self.params,
+                                   self.global_lora, self.eval_batches)

@@ -5,16 +5,22 @@ Two execution modes sharing the SAME aggregation math (core/aggregation.py):
 * ``--mode host`` (default): the paper's cross-silo simulation — clients run
   sequentially on the local device(s); aggregation is host-side tree
   arithmetic (optionally through the Pallas fedex_residual kernel).
-* ``--mode mesh``: datacenter co-scheduled clients — client adapters are
-  STACKED on a leading axis and every client trains in the same pjit'd
-  program; the FedEx aggregation is ``mean over the client axis`` + residual,
-  expressed with jnp ops inside jit so XLA lowers it to psum-mean collectives
-  over the mesh. Used by the dry-run-scale runs and the multi-pod config
-  (clients ↔ pods).
+* ``--mode mesh`` (launch/mesh_train.py): datacenter co-scheduled clients —
+  client adapters are STACKED on a leading axis sharded over a ``client``
+  mesh axis and every client trains in the same pjit'd program; the FedEx
+  close is a masked WEIGHTED psum-mean over the client axis + the exact
+  residual fold, expressed with jnp ops inside jit so XLA lowers it to
+  collectives over the mesh. Partial participation (``--participation``),
+  non-uniform weights (``--weighting examples``) and full rounds all reuse
+  ONE compiled close program — sampling only changes the weight vector
+  (zero-weight lanes are masked), never the program. The divergence comes
+  back as a deferred device scalar, resolved at round boundaries.
 
 Example (CPU, tiny model):
   PYTHONPATH=src python -m repro.launch.train --arch paper-tiny --method fedex \
       --clients 3 --rounds 3 --local-steps 5 --vocab 64
+  PYTHONPATH=src python -m repro.launch.train --mode mesh --participation 0.5 \
+      --clients 4 --rounds 2 --local-steps 3 --vocab 32
 """
 
 from __future__ import annotations
@@ -59,6 +65,10 @@ def build_federated_data(vocab: int, num_clients: int, *, seqs_per_task: int = 1
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="host", choices=("host", "mesh"),
+                    help="host = paper's cross-silo simulation (fedsrv "
+                         "coordinator); mesh = co-scheduled clients, one "
+                         "pjit'd program per round phase (mesh_train.py)")
     ap.add_argument("--arch", default="paper-tiny")
     ap.add_argument("--method", default="fedex",
                     choices=("fedex", "fedit", "ffa", "fedex_svd", "centralized"))
@@ -109,6 +119,11 @@ def main() -> None:
                          "fedex/fedex_svd/keep_local/reinit closes: auto "
                          "picks Pallas kernels on TPU / jitted jnp twin on "
                          "CPU; off = legacy eager list-of-trees close")
+    ap.add_argument("--ring-depth", type=int, default=2,
+                    help="RoundBuffers ring depth: rounds whose uplink "
+                         "stacks may be in flight at once (2 = double "
+                         "buffering; >2 pipelines FedBuff commits deeper, "
+                         "with deadline eviction of lagging rounds)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
@@ -133,7 +148,8 @@ def main() -> None:
                         dropout_prob=args.dropout_prob,
                         async_buffer=args.async_buffer,
                         quantize_uplink=args.quantize_uplink,
-                        engine=args.engine)
+                        engine=args.engine,
+                        ring_depth=args.ring_depth)
     # fail before any model build: svd_rank beyond the k·r residual bound
     validate_fed_lora(fed_cfg, lora_cfg)
 
@@ -147,25 +163,54 @@ def main() -> None:
         cfg.vocab_size, args.clients, seq_len=args.seq_len,
         alpha=args.dirichlet_alpha, seed=args.seed, batch_size=args.batch_size)
 
-    trainer = FederatedTrainer(
-        model=model,
-        lora_cfg=lora_cfg,
-        fed_cfg=fed_cfg,
-        train_cfg=TrainConfig(learning_rate=args.lr, schedule="constant",
-                              total_steps=args.rounds * args.local_steps),
-        client_loaders=loaders,
-        eval_batches=eval_batches,
-        seed=args.seed,
-    )
-    history = trainer.run()
-    if trainer.engine is not None:
-        logger.info("round closes ran through the fused engine "
-                    "(method=%s backend=%s)", trainer.engine.method,
-                    trainer.engine.backend)
+    train_cfg = TrainConfig(learning_rate=args.lr, schedule="constant",
+                            total_steps=args.rounds * args.local_steps)
+    if args.mode == "mesh":
+        from repro.launch.mesh_train import MeshFederatedTrainer
+
+        # mesh mode co-schedules every lane: the fedsrv orchestration knobs
+        # (and host-side engine/ring tuning) have no effect there — warn so
+        # a run is never attributed to a configuration that didn't happen
+        _host_only = ("assignment", "stragglers", "dropout_prob", "deadline",
+                      "min_quorum", "async_buffer", "quantize_uplink",
+                      "dp_clip", "dp_noise", "client_ranks", "engine",
+                      "ring_depth")
+        ignored = [f"--{k.replace('_', '-')}" for k in _host_only
+                   if getattr(args, k) != ap.get_default(k)]
+        if ignored:
+            logger.warning(
+                "--mode mesh ignores host-mode flag(s) %s — mesh rounds are "
+                "co-scheduled (no stragglers/async/quantization/DP) and "
+                "always close through the engine's weighted program",
+                ", ".join(ignored))
+
+        trainer = MeshFederatedTrainer(
+            model=model, lora_cfg=lora_cfg, fed_cfg=fed_cfg,
+            train_cfg=train_cfg, client_loaders=loaders,
+            eval_batches=eval_batches, seed=args.seed)
+        history = trainer.run()
+        logger.info("mesh mode: %d round(s) closed through %d compiled close "
+                    "program(s)", args.rounds,
+                    trainer.closer.compiled_programs)
+    else:
+        trainer = FederatedTrainer(
+            model=model,
+            lora_cfg=lora_cfg,
+            fed_cfg=fed_cfg,
+            train_cfg=train_cfg,
+            client_loaders=loaders,
+            eval_batches=eval_batches,
+            seed=args.seed,
+        )
+        history = trainer.run()
+        if trainer.engine is not None:
+            logger.info("round closes ran through the fused engine "
+                        "(method=%s backend=%s)", trainer.engine.method,
+                        trainer.engine.backend)
     final = history[-1]
     print(f"\nfinal: method={args.method} eval_loss={final.eval_loss:.4f} "
           f"eval_acc={final.eval_acc:.4f} divergence={final.divergence_scaled:.3e}")
-    if trainer.ledger.entries:
+    if args.mode == "host" and trainer.ledger.entries:
         print("comm ledger (measured, fedsrv transport):")
         for line in trainer.ledger.summary_lines():
             print("  " + line)

@@ -1,6 +1,9 @@
 from repro.sharding.specs import (
+    CLIENT,
     batch_spec,
     cache_spec,
+    client_axis_size,
+    client_stack_spec,
     data_axes,
     param_spec,
     param_spec_serving,
@@ -9,8 +12,11 @@ from repro.sharding.specs import (
 )
 
 __all__ = [
+    "CLIENT",
     "batch_spec",
     "cache_spec",
+    "client_axis_size",
+    "client_stack_spec",
     "data_axes",
     "param_spec",
     "param_spec_serving",

@@ -14,6 +14,16 @@ on the data axes. SSM/xLSTM states shard heads on ``model`` where divisible.
 LoRA factors stay replicated: rank-r is tiny and replication makes the FedEx
 aggregation a pure psum-mean with no resharding (DESIGN §5).
 
+Mesh-mode federated rounds (launch/mesh_train.py) add a ``client`` axis:
+client-STACKED adapter/optimizer/batch leaves carry a leading ``(C_max, …)``
+axis sharded over it (:func:`client_stack_spec`), so per-client local
+training partitions lane-per-device-group and the round close's weighted
+reductions over the client axis (``Σ_c w_c·…``, zero weight = masked lane)
+lower to psum-mean collectives inside ONE pjit'd program — partial
+participation and non-uniform weights only change the weight VECTOR, never
+the program. Base params stay replicated across the client axis (every lane
+fine-tunes the same frozen W0).
+
 Every axis assignment is guarded by divisibility — non-divisible dims fall
 back to replication rather than relying on GSPMD padding.
 """
@@ -29,6 +39,7 @@ from repro.util.tree import flatten_with_paths, unflatten_from_paths
 
 MODEL = "model"
 FSDP = "data"  # weights are additionally sharded over the data axis (ZeRO-3)
+CLIENT = "client"  # mesh-mode federated rounds: leading client-stack axis
 
 _COLUMN_MODULES = (
     "q_proj", "k_proj", "v_proj", "up_proj", "gate_proj", "in_proj",
@@ -229,6 +240,24 @@ def cache_spec(path: str, leaf, mesh: Mesh, dp) -> P:
 
 def batch_spec(path: str, leaf, mesh: Mesh, dp) -> P:
     return _guard(leaf.shape, mesh, (dp,) + (None,) * (leaf.ndim - 1))
+
+
+def client_stack_spec(path: str, leaf, mesh: Mesh) -> P:
+    """Client-STACKED leaves for mesh-mode federated rounds: the leading
+    ``(C_max, …)`` axis shards over the ``client`` mesh axis; trailing dims
+    stay replicated (LoRA factors are rank-r tiny — see module docstring).
+    With this layout every ``Σ_c w_c · leaf[c]`` inside the close program
+    lowers to a psum-mean over the client axis; zero-weight lanes (masked /
+    non-sampled clients) contribute exact zeros, so the SAME compiled
+    program serves full, sampled-subset and weighted rounds. Divisibility
+    guard as everywhere: a C_max the client axis doesn't divide falls back
+    to replication instead of GSPMD padding."""
+    return _guard(leaf.shape, mesh, (CLIENT,) + (None,) * (leaf.ndim - 1))
+
+
+def client_axis_size(mesh: Mesh) -> int:
+    """Size of the ``client`` mesh axis (1 when the mesh has none)."""
+    return _axis_size(mesh, CLIENT)
 
 
 # --------------------------------------------------------------------------
