@@ -68,5 +68,20 @@ def run_method(method: str, *, rounds=5, local_steps=25, rank=8, lr=3e-2,
     }
 
 
+def env_metadata(**extra) -> Dict:
+    """BENCH-json environment stamp: jax version + device identity, so a
+    recorded perf number can never be attributed to the wrong hardware.
+    ``extra`` merges bench-specific context (C_max, method, …)."""
+    import jax
+
+    dev = jax.devices()[0]
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "platform": dev.platform,
+            "device_count": jax.device_count(),
+            **extra}
+
+
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"

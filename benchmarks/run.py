@@ -46,6 +46,9 @@ def main() -> None:
 
     wanted = [s.strip() for s in args.only.split(",") if s.strip()] or list(SUITES)
     print("name,us_per_call,derived")
+    from benchmarks.common import env_metadata
+    env = env_metadata()
+    print("env/_metadata,0.0," + ";".join(f"{k}={v}" for k, v in env.items()))
     failures = 0
     for name in wanted:
         mod = SUITES[name]

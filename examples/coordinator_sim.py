@@ -8,11 +8,20 @@ engine vs the eager list path — every scenario here exercises the engine via
 ``FedConfig.engine``), and the measured comm ledger, plus a direct
 weighted-exactness check on synthetic adapters.
 
+With ``--trace`` / ``--metrics-out`` every scenario records through ONE
+shared obs recorder (repro.obs) under its own run label, so a single trace /
+metrics stream holds all scenarios side by side — ``scripts/obs_report.py``
+summarizes it and ``--check`` proves the overlap invariant on it (this is
+CI's obs smoke step, with ``--quick``).
+
   PYTHONPATH=src python examples/coordinator_sim.py        # ~1–2 min CPU
+  PYTHONPATH=src python examples/coordinator_sim.py --quick \
+      --trace /tmp/trace.json --metrics-out /tmp/metrics.jsonl
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -49,15 +58,22 @@ def build_data(seed=0):
     return loaders, evals
 
 
-def run_scenario(title: str, fed_cfg: FedConfig, loaders, evals, model):
+def run_scenario(title: str, fed_cfg: FedConfig, loaders, evals, model,
+                 recorder=None):
     print(f"\n=== {title} ===")
     t0 = time.time()
+    if recorder is not None:
+        # one shared recorder across scenarios; the run label namespaces
+        # this scenario's rounds/spans (round 0 of scenario 2 never merges
+        # into round 0 of scenario 1)
+        recorder.set_run(title.split(":")[0].replace(" ", "-"))
     trainer = FederatedTrainer(
         model=model, lora_cfg=LoRAConfig(rank=4, alpha=8),
         fed_cfg=fed_cfg,
         train_cfg=TrainConfig(learning_rate=5e-3, schedule="constant",
                               total_steps=fed_cfg.rounds * fed_cfg.local_steps),
-        client_loaders=loaders, eval_batches=evals, seed=0)
+        client_loaders=loaders, eval_batches=evals, seed=0,
+        recorder=recorder)
     if trainer.engine is not None:
         print(f"  close path: fused engine (method={trainer.engine.method} "
               f"backend={trainer.engine.backend} "
@@ -114,6 +130,23 @@ def exactness_check():
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON covering every "
+                         "scenario (implies obs=trace)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the obs metrics JSONL stream here "
+                         "(scripts/obs_report.py reads it)")
+    ap.add_argument("--quick", action="store_true",
+                    help="scenarios 1 + 3 only, 2 rounds each (the CI obs "
+                         "smoke configuration)")
+    args = ap.parse_args()
+
+    rec = None
+    if args.trace or args.metrics_out:
+        from repro.obs import make_recorder
+        rec = make_recorder("trace" if args.trace else "basic")
+
     t_start = time.time()
     cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
                               vocab_size=VOCAB)
@@ -122,28 +155,51 @@ def main():
 
     # engine="auto" on every scenario: all closes run through the fused
     # single-dispatch engine (core/engine.py), not the eager list path
-    base = dict(num_clients=CLIENTS, rounds=3, local_steps=3, method="fedex",
-                weighting="examples", engine="auto")
+    rounds = 2 if args.quick else 3
+    base = dict(num_clients=CLIENTS, rounds=rounds, local_steps=3,
+                method="fedex", weighting="examples", engine="auto")
     run_scenario("scenario 1: sync, 60% participation, example weights",
-                 FedConfig(**base, participation=0.6), loaders, evals, model)
-    run_scenario("scenario 2: deadline drops stragglers (quorum 2)",
-                 FedConfig(**base, straggler_prob=0.4, straggler_factor=8.0,
-                           dropout_prob=0.1, round_deadline=2.5, min_quorum=2),
-                 loaders, evals, model)
-    run_scenario("scenario 3: async FedBuff buffer=2, int8 uplink",
+                 FedConfig(**base, participation=0.6), loaders, evals, model,
+                 recorder=rec)
+    if not args.quick:
+        run_scenario("scenario 2: deadline drops stragglers (quorum 2)",
+                     FedConfig(**base, straggler_prob=0.4,
+                               straggler_factor=8.0, dropout_prob=0.1,
+                               round_deadline=2.5, min_quorum=2),
+                     loaders, evals, model, recorder=rec)
+    # depth-3 ring: FedBuff commits may pipeline two stack sets deep while
+    # a third streams — the configuration the obs overlap check runs on
+    run_scenario("scenario 3: async FedBuff buffer=2, int8 uplink, "
+                 "depth-3 ring",
                  FedConfig(**base, participation=0.6, async_buffer=2,
                            straggler_prob=0.3, straggler_factor=6.0,
-                           quantize_uplink="int8"),
-                 loaders, evals, model)
-    run_scenario("scenario 4: fedex_svd rank-4 truncated close (factored "
-                 "Gram SVD in the engine — no dense residual)",
-                 FedConfig(**{**base, "method": "fedex_svd"}, svd_rank=4,
-                           participation=0.8), loaders, evals, model)
-    run_scenario("scenario 5: keep_local assignment (per-client bases, "
-                 "engine per-lane folds)",
-                 FedConfig(**{**base, "weighting": "uniform"},
-                           assignment="keep_local"), loaders, evals, model)
+                           quantize_uplink="int8", ring_depth=3,
+                           ring_max_lag=2),
+                 loaders, evals, model, recorder=rec)
+    if not args.quick:
+        run_scenario("scenario 4: fedex_svd rank-4 truncated close (factored "
+                     "Gram SVD in the engine — no dense residual)",
+                     FedConfig(**{**base, "method": "fedex_svd"}, svd_rank=4,
+                               participation=0.8), loaders, evals, model,
+                     recorder=rec)
+        run_scenario("scenario 5: keep_local assignment (per-client bases, "
+                     "engine per-lane folds)",
+                     FedConfig(**{**base, "weighting": "uniform"},
+                               assignment="keep_local"), loaders, evals,
+                     model, recorder=rec)
     exactness_check()
+    if rec is not None:
+        rec.set_run(None)
+        print()
+        for line in rec.summary_lines():
+            print(line)
+        if args.trace:
+            rec.write_trace(args.trace)
+            print(f"trace → {args.trace} (Perfetto / chrome://tracing)")
+        if args.metrics_out:
+            rec.write_metrics(args.metrics_out)
+            print(f"metrics JSONL → {args.metrics_out} "
+                  "(scripts/obs_report.py)")
     print(f"\ntotal wall time: {time.time() - t_start:.1f}s")
 
 

@@ -1,0 +1,281 @@
+#!/usr/bin/env python
+"""Summarize an obs metrics JSONL stream (and optionally check a trace).
+
+Reads the JSONL written by ``Recorder.write_metrics`` (launch/train.py
+``--metrics-out``, examples/coordinator_sim.py ``--metrics-out``) and prints
+a per-round table: client counts (sampled / delivered / stragglers /
+dropouts), close latency split into dispatch vs block-until-ready, ring
+occupancy / evictions / stale drops, ledger bytes, divergence, compile-cache
+misses and the measured-vs-analytic comm reconciliation flag.
+
+``--check`` turns the report into an assertion pass (CI's obs smoke step):
+
+* the stream has ``meta`` + ``counters`` records and ≥ 1 round record;
+* every CLOSED round record (one carrying ``close_dispatch_us``) also
+  carries its block time, divergence, ring stats and ledger bytes;
+* no ``comm_match = 0`` (a round where the measured BytesLedger disagreed
+  with core/comm.py's closed form);
+* with spans in the stream (obs=trace): the Chrome trace (``--trace``) is
+  structurally valid, and the OVERLAP INVARIANT holds — for consecutive
+  closed rounds N, N+1 of the same run, round N+1's ``ring.write`` spans
+  intersect round N's close window [``close.dispatch`` start,
+  ``divergence.resolve`` end]. This is the trace-level proof that the ring
+  streams the next round's uplinks while the previous close is in flight.
+
+  PYTHONPATH=src python scripts/obs_report.py metrics.jsonl
+  PYTHONPATH=src python scripts/obs_report.py metrics.jsonl --trace trace.json --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def load_stream(path: str) -> List[Dict[str, Any]]:
+    recs = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{i + 1}: bad JSON line: {e}")
+    return recs
+
+
+def split_stream(recs: List[Dict[str, Any]]):
+    meta = next((r for r in recs if r.get("type") == "meta"), None)
+    counters = next((r for r in recs if r.get("type") == "counters"), None)
+    rounds = [r for r in recs if r.get("type") == "round"]
+    spans = [r for r in recs if r.get("type") == "span"]
+    events = [r for r in recs if r.get("type") == "event"]
+    return meta, counters, rounds, spans, events
+
+
+# -- per-round table ---------------------------------------------------------
+
+_COLS = [
+    ("round", "round"), ("run", "run"), ("sampled", "smp"),
+    ("delivered", "dlv"), ("stragglers", "strg"), ("dropped_out", "drop"),
+    ("deadline_drops", "late"), ("close_dispatch_us", "dispatch_us"),
+    ("close_block_us", "block_us"), ("ring_occupancy", "occ"),
+    ("ring_evictions", "evict"), ("stale_drops", "stale"),
+    ("uplink_bytes", "up_B"), ("downlink_bytes", "down_B"),
+    ("divergence", "divergence"), ("compile_miss", "miss"),
+    ("comm_match", "comm"),
+]
+
+
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+def round_table(rounds: List[Dict[str, Any]]) -> List[str]:
+    header = [short for _, short in _COLS]
+    body = [[_fmt(r.get(key)) for key, _ in _COLS] for r in rounds]
+    widths = [max(len(h), *(len(row[i]) for row in body)) if body else len(h)
+              for i, h in enumerate(header)]
+    lines = [" ".join(h.rjust(w) for h, w in zip(header, widths))]
+    for row in body:
+        lines.append(" ".join(c.rjust(w) for c, w in zip(row, widths)))
+    return lines
+
+
+# -- the overlap invariant ---------------------------------------------------
+
+def _closed_rounds(spans: List[Dict[str, Any]]
+                   ) -> Dict[Tuple[Any, Any], Dict[str, float]]:
+    """(run, round) → close window from span timestamps: the window opens at
+    ``close.dispatch`` start and shuts at ``divergence.resolve`` end."""
+    windows: Dict[Tuple[Any, Any], Dict[str, float]] = {}
+    for s in spans:
+        rid = s.get("args", {}).get("round")
+        if rid is None:
+            continue
+        key = (s.get("run"), rid)
+        if s["name"] == "close.dispatch":
+            w = windows.setdefault(key, {})
+            w["start"] = min(w.get("start", float("inf")), s["ts_us"])
+        elif s["name"] == "divergence.resolve":
+            w = windows.setdefault(key, {})
+            w["end"] = max(w.get("end", 0.0), s["ts_us"] + s["dur_us"])
+    return {k: w for k, w in windows.items()
+            if "start" in w and "end" in w}
+
+
+def check_overlap(spans: List[Dict[str, Any]]) -> Tuple[List[str], List[str]]:
+    """Verify the overlap invariant; returns (proven lines, failures).
+
+    Only consecutive closed-round pairs (N, N+1) of the SAME run where round
+    N+1 actually produced ``ring.write`` spans are checked — a run's last
+    round has no successor and non-engine paths write no ring spans.
+    """
+    windows = _closed_rounds(spans)
+    writes: Dict[Tuple[Any, Any], List[Tuple[float, float]]] = defaultdict(list)
+    for s in spans:
+        if s["name"] != "ring.write":
+            continue
+        rid = s.get("args", {}).get("round")
+        if rid is not None:
+            writes[(s.get("run"), rid)].append(
+                (s["ts_us"], s["ts_us"] + s["dur_us"]))
+
+    proven, failures = [], []
+    for (run, rid), w in sorted(windows.items(),
+                                key=lambda kw: (str(kw[0][0]), kw[0][1])):
+        nxt = (run, rid + 1)
+        if nxt not in windows or nxt not in writes:
+            continue
+        lo, hi = w["start"], w["end"]
+        hits = sum(1 for (a, b) in writes[nxt] if a < hi and b > lo)
+        tag = f"run={run} round={rid}→{rid + 1}"
+        if hits:
+            proven.append(f"  {tag}: {hits}/{len(writes[nxt])} ring.write "
+                          f"span(s) overlap the close window "
+                          f"[{lo:.0f}, {hi:.0f}]us")
+        else:
+            failures.append(
+                f"{tag}: none of round {rid + 1}'s {len(writes[nxt])} "
+                f"ring.write spans intersect round {rid}'s close window "
+                f"[{lo:.0f}, {hi:.0f}]us — the ring did not overlap the close")
+    return proven, failures
+
+
+# -- trace JSON structure ----------------------------------------------------
+
+def check_trace_file(path: str) -> List[str]:
+    """Structural validation of a Chrome trace-event JSON export."""
+    problems = []
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"trace {path}: unreadable ({e})"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"trace {path}: no traceEvents"]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            problems.append(f"trace event {i}: missing ph/name: {ev!r}")
+            continue
+        if ev["ph"] == "X" and not (isinstance(ev.get("ts"), (int, float))
+                                    and isinstance(ev.get("dur"), (int, float))):
+            problems.append(f"trace event {i} ({ev['name']}): X-phase event "
+                            "without numeric ts/dur")
+    if not any(ev.get("ph") == "X" for ev in events):
+        problems.append(f"trace {path}: no complete (ph=X) span events")
+    return problems
+
+
+# -- --check -----------------------------------------------------------------
+
+# every CLOSED round record must carry these (a record is "closed" when the
+# engine stamped its dispatch time on it)
+_CLOSED_REQUIRED = ("close_block_us", "divergence", "ring_evictions",
+                    "stale_drops", "uplink_bytes", "downlink_bytes")
+
+
+def run_checks(meta, counters, rounds, spans, trace_path: Optional[str]
+               ) -> List[str]:
+    failures: List[str] = []
+    if meta is None:
+        failures.append("stream has no meta record")
+    if counters is None:
+        failures.append("stream has no counters record")
+    if not rounds:
+        failures.append("stream has no round records")
+    closed = [r for r in rounds if "close_dispatch_us" in r]
+    if rounds and not closed:
+        failures.append("no round record carries close_dispatch_us — "
+                        "no engine close was ever traced")
+    for r in closed:
+        missing = [k for k in _CLOSED_REQUIRED if k not in r]
+        if missing:
+            failures.append(f"round {r.get('round')} (run={r.get('run')}) "
+                            f"closed but missing {missing}")
+    mismatched = [r for r in rounds if r.get("comm_match") == 0]
+    for r in mismatched:
+        failures.append(f"round {r.get('round')} (run={r.get('run')}): "
+                        "measured ledger ≠ core/comm.py closed form")
+    if spans:
+        proven, overlap_failures = check_overlap(spans)
+        failures += overlap_failures
+        if not proven and not overlap_failures:
+            failures.append("spans present but no consecutive closed-round "
+                            "pair with ring.write spans — nothing proves "
+                            "the overlap invariant")
+        if trace_path:
+            failures += check_trace_file(trace_path)
+    elif trace_path:
+        failures.append("--trace given but the metrics stream has no spans "
+                        "(was the run obs=basic?)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("metrics", help="metrics JSONL (Recorder.write_metrics)")
+    ap.add_argument("--trace", default="",
+                    help="Chrome trace JSON to validate alongside (--check)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert required fields, comm reconciliation and "
+                         "the overlap invariant; exit 1 on any failure")
+    args = ap.parse_args(argv)
+
+    recs = load_stream(args.metrics)
+    meta, counters, rounds, spans, events = split_stream(recs)
+
+    if meta:
+        env = {k: v for k, v in meta.items() if k != "type"}
+        print("env:", " ".join(f"{k}={v}" for k, v in env.items()))
+    print(f"stream: {len(rounds)} round(s), {len(spans)} span(s), "
+          f"{len(events)} event(s)")
+    if rounds:
+        print()
+        for line in round_table(rounds):
+            print(line)
+    if counters:
+        print()
+        for name in sorted(counters.get("counters", {})):
+            print(f"counter {name} = {counters['counters'][name]}")
+        for name, s in sorted(counters.get("histograms", {}).items()):
+            if s.get("count"):
+                print(f"hist    {name}: n={s['count']} mean={s['mean']:.1f} "
+                      f"min={s['min']:.1f} max={s['max']:.1f}")
+    if spans:
+        proven, overlap_failures = check_overlap(spans)
+        print()
+        if proven:
+            print("overlap invariant (next round's ring.write ∩ close window):")
+            for line in proven:
+                print(line)
+        for line in overlap_failures:
+            print("OVERLAP FAILURE:", line)
+
+    if not args.check:
+        return 0
+    failures = run_checks(meta, counters, rounds, spans,
+                          args.trace or None)
+    print()
+    if failures:
+        print(f"CHECK FAILED ({len(failures)} problem(s)):")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print("CHECK OK: round records complete, comm reconciled"
+          + (", overlap invariant proven, trace valid" if spans else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -217,6 +217,11 @@ class FedConfig:
     # it (stale uplinks for them are dropped).
     ring_depth: int = 2
     ring_max_lag: int = 1
+    # observability mode (repro.obs): "off" → shared zero-overhead no-op
+    # recorder, "basic" → metrics + per-round records, "trace" → spans too
+    # (Chrome trace-event export). The launcher's --trace/--metrics-out
+    # flags imply trace/basic respectively.
+    obs: str = "off"
 
     def __post_init__(self):
         if self.method not in ("fedex", "fedit", "ffa", "fedex_svd",
@@ -239,6 +244,9 @@ class FedConfig:
             raise ValueError(
                 f"ring_max_lag must be ≥ 1, got {self.ring_max_lag} "
                 "(a commit may always lag up to its own version)")
+        if self.obs not in ("off", "basic", "trace"):
+            raise ValueError(f"unknown obs mode {self.obs!r} "
+                             "(off | basic | trace)")
 
 
 def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.decompose import factored_residual_params, truncated_residual_params
 
@@ -65,14 +65,26 @@ def participating_clients(k: int, participation_fraction: float,
 def round_comm_params(method: str, mats: List[MatrixSpec], r: int, k: int,
                       svd_rank: int = 0,
                       participation_fraction: float = 1.0,
-                      min_clients: int = 1) -> Dict[str, int]:
+                      min_clients: int = 1,
+                      participants: Optional[int] = None) -> Dict[str, int]:
     """Parameters communicated in ONE aggregation round.
 
     With partial participation only the k_p = ⌈fraction·k⌉ sampled clients
     exchange traffic, and the FedEx factored residual's rank bound tightens
     to (k_p+1)·r — the analytic twin of fedsrv's measured BytesLedger.
+
+    ``participants`` pins k_p to an OBSERVED delivered-client count (dropout
+    and deadline drops make the realized count differ from the ceil-fraction
+    estimate) — this is what the obs layer passes when reconciling the
+    measured ledger against this closed form.
     """
-    k_p = participating_clients(k, participation_fraction, min_clients)
+    if participants is not None:
+        if not 1 <= participants <= k:
+            raise ValueError(f"participants must be in [1, {k}], "
+                             f"got {participants}")
+        k_p = int(participants)
+    else:
+        k_p = participating_clients(k, participation_fraction, min_clients)
     adapters = sum(ms.m * r + r * ms.n for ms in mats)
     full = sum(ms.m * ms.n for ms in mats)
 

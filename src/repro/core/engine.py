@@ -81,6 +81,7 @@ cares about).
 from __future__ import annotations
 
 import functools
+import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -89,6 +90,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.obs import NULL
 from repro.util.logging import get_logger
 from repro.util.tree import flatten_with_paths, unflatten_from_paths
 
@@ -113,12 +115,15 @@ class DeferredDivergence:
     device value — and caches the result.
     """
 
-    __slots__ = ("_raw", "_value", "round_id")
+    __slots__ = ("_raw", "_value", "round_id", "_recorder")
 
-    def __init__(self, raw, round_id=None):
+    def __init__(self, raw, round_id=None, recorder=None):
         self._raw = raw
         self._value: Optional[float] = None
         self.round_id = round_id
+        # obs: resolution is the close's block-until-ready — record it as its
+        # own span so a premature host sync is visible in the trace
+        self._recorder = recorder
 
     @property
     def resolved(self) -> bool:
@@ -133,7 +138,20 @@ class DeferredDivergence:
     def resolve(self) -> float:
         """Block on the device value (the ONLY host sync) and cache it."""
         if self._value is None:
-            self._value = float(self._raw)
+            rec = self._recorder
+            if rec is not None and rec.enabled:
+                t0 = time.perf_counter_ns()
+                with rec.span("divergence.resolve", cat="engine",
+                              round=self.round_id):
+                    self._value = float(self._raw)
+                block_us = (time.perf_counter_ns() - t0) / 1e3
+                rec.hist("engine.close_block_us").observe(block_us)
+                if self.round_id is not None:
+                    rec.round_set(self.round_id,
+                                  close_block_us=round(block_us, 1),
+                                  divergence=self._value)
+            else:
+                self._value = float(self._raw)
             self._raw = None  # drop the device reference
         return self._value
 
@@ -354,13 +372,15 @@ class RoundBuffers:
     ``jnp.stack``.
     """
 
-    def __init__(self, lora_template: Params, c_max: int, depth: int = 2):
+    def __init__(self, lora_template: Params, c_max: int, depth: int = 2,
+                 recorder=None):
         if c_max < 1:
             raise ValueError("c_max must be ≥ 1")
         if depth < 1:
             raise ValueError("depth must be ≥ 1")
         self.c_max = c_max
         self.depth = depth
+        self.rec = recorder if recorder is not None else NULL
         flat = flatten_with_paths(lora_template)
         self._shapes = {p: tuple(x.shape) for p, x in flat.items()}
         self._host = _CPU
@@ -371,6 +391,7 @@ class RoundBuffers:
         # dropped silently instead of raising as unroutable
         self._evicted: "OrderedDict[Any, Any]" = OrderedDict()
         self.evictions = 0
+        self.stale_drops = 0  # uplinks discarded for already-evicted rounds
         self._auto = 0
         if not self._host:
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -436,6 +457,10 @@ class RoundBuffers:
                 "evict them")
         self._open[round_id] = {"slots": dict(slots), "written": {},
                                 "stacks": self._alloc(), "deadline": deadline}
+        if self.rec.enabled:
+            self.rec.event("ring.begin", cat="ring", round=round_id,
+                           lanes=len(slots), deadline=deadline)
+            self.rec.gauge("ring.occupancy").set(len(self._open))
         return round_id
 
     def evict(self, round_id, reason: str = "explicit") -> Dict[int, int]:
@@ -448,6 +473,11 @@ class RoundBuffers:
         while len(self._evicted) > 64:  # bounded memory of evicted ids
             self._evicted.popitem(last=False)
         self.evictions += 1
+        if self.rec.enabled:
+            self.rec.counter("ring.evictions").inc()
+            self.rec.event("ring.evict", cat="ring", round=rid, reason=reason,
+                           delivered=len(e["written"]), lanes=len(e["slots"]))
+            self.rec.gauge("ring.occupancy").set(len(self._open))
         logger.warning("evicted round %r (%s): %d/%d lanes delivered — "
                        "its uplinks are discarded", rid, reason,
                        len(e["written"]), len(e["slots"]))
@@ -478,17 +508,27 @@ class RoundBuffers:
                     f"(open: {list(self._open)}) — stale uplink from an "
                     "already-closed round?")
         if round_id in self._evicted and round_id not in self._open:
+            self.stale_drops += 1
+            if self.rec.enabled:
+                self.rec.counter("ring.stale_drops").inc()
+                self.rec.event("ring.stale_drop", cat="ring", round=round_id,
+                               client=client_id)
             logger.warning("dropping uplink from client %d for evicted "
                            "round %r", client_id, round_id)
             return False
         _, e = self._entry(round_id)
         slot = e["slots"][client_id]
-        if self._host:
-            for p in self._shapes:
-                e["stacks"][p][slot] = np.asarray(flat[p], np.float32)
-        else:
-            leaves = {p: flat[p] for p in self._shapes}
-            e["stacks"] = self._scatter(e["stacks"], jnp.int32(slot), leaves)
+        # obs: the ring.write span is the overlap invariant's witness — round
+        # N+1 write intervals must land inside round N's close window
+        with self.rec.span("ring.write", cat="ring", round=round_id,
+                           client=client_id):
+            if self._host:
+                for p in self._shapes:
+                    e["stacks"][p][slot] = np.asarray(flat[p], np.float32)
+            else:
+                leaves = {p: flat[p] for p in self._shapes}
+                e["stacks"] = self._scatter(e["stacks"], jnp.int32(slot),
+                                            leaves)
         e["written"][client_id] = slot
         return True
 
@@ -521,6 +561,10 @@ class RoundBuffers:
         program (donated there — this set is gone for good)."""
         rid, e = self._entry(round_id)
         del self._open[rid]
+        if self.rec.enabled:
+            self.rec.event("ring.take", cat="ring", round=rid,
+                           delivered=len(e["written"]), lanes=len(e["slots"]))
+            self.rec.gauge("ring.occupancy").set(len(self._open))
         stacks = e["stacks"]
         if self._host:  # one host→device conversion per round
             stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
@@ -896,19 +940,53 @@ class RoundCloseEngine:
                  c_max: int, scale: float, method: str = "fedex",
                  svd_rank: int = 0, backend: str = "auto",
                  interpret: Optional[bool] = None, donate: bool = True,
-                 depth: int = 2):
+                 depth: int = 2, recorder=None):
         self.specs = build_factor_specs(params, lora_template)
         self.c_max = c_max
         self.scale = scale
         self.method = method
         self.svd_rank = svd_rank
         self.backend = _resolve_backend(backend)
-        self.buffers = RoundBuffers(lora_template, c_max, depth=depth)
+        self.rec = recorder if recorder is not None else NULL
+        self.buffers = RoundBuffers(lora_template, c_max, depth=depth,
+                                    recorder=self.rec)
         self._lora_template = lora_template
         self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
                                     method=method, svd_rank=svd_rank,
                                     backend=self.backend, interpret=interpret,
                                     donate=donate)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, w0_leaves, stacks, w, mask, uniform: bool, round_id):
+        """Run the jitted close program with obs instrumentation: the
+        ``close.dispatch`` span times ONLY the (async) dispatch — the
+        block-until-ready half lives in ``DeferredDivergence.resolve`` —
+        and the compile-cache delta distinguishes a compile (miss) from a
+        cache hit per (method, uniform) signature."""
+        rec = self.rec
+        if not rec.enabled:
+            return self._close(w0_leaves, stacks, jnp.asarray(w),
+                               jnp.asarray(mask), uniform=uniform)
+        before = self._close._cache_size()
+        t0 = time.perf_counter_ns()
+        with rec.span("close.dispatch", cat="engine", round=round_id,
+                      method=self.method, uniform=uniform):
+            out = self._close(w0_leaves, stacks, jnp.asarray(w),
+                              jnp.asarray(mask), uniform=uniform)
+        dispatch_us = (time.perf_counter_ns() - t0) / 1e3
+        sig = f"{self.method}[uniform={uniform}]"
+        compiled = self._close._cache_size() > before
+        rec.counter(f"engine.compile_{'miss' if compiled else 'hit'}"
+                    f"[{sig}]").inc()
+        rec.hist("engine.close_dispatch_us").observe(dispatch_us)
+        if round_id is not None:
+            rec.round_set(round_id, method=self.method,
+                          close_dispatch_us=round(dispatch_us, 1),
+                          compile_miss=int(compiled),
+                          ring_occupancy=len(self.buffers.open_rounds),
+                          ring_evictions=self.buffers.evictions,
+                          stale_drops=self.buffers.stale_drops)
+        return out
 
     # ------------------------------------------------------------------
     def weight_vector(self, client_ids: Sequence[int],
@@ -971,9 +1049,8 @@ class RoundCloseEngine:
         w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
         w0_leaves = self._w0_leaves(params)
         stacks = self.buffers.take(round_id)
-        new_w0, glob, div = self._close(w0_leaves, stacks,
-                                        jnp.asarray(w), jnp.asarray(mask),
-                                        uniform=uniform)
+        new_w0, glob, div = self._dispatch(w0_leaves, stacks, w, mask,
+                                           uniform, round_id)
         new_params = self._fold_back(params, new_w0)
         if self.method == "reinit":
             global_lora = agg.reinit_adapters(self._lora_template, rng)
@@ -983,7 +1060,8 @@ class RoundCloseEngine:
                 flat[s.key + "/a"] = glob[s.key]["a"]
                 flat[s.key + "/b"] = glob[s.key]["b"]
             global_lora = unflatten_from_paths(flat)
-        return global_lora, new_params, DeferredDivergence(div, round_id)
+        return global_lora, new_params, DeferredDivergence(
+            div, round_id, recorder=self.rec if self.rec.enabled else None)
 
     def close_keep_local(self, client_params: Sequence[Params],
                          client_ids: Sequence[int],
@@ -1016,9 +1094,8 @@ class RoundCloseEngine:
                 leaves.append(node["kernel"] if s.has_kernel else node)
             w0_stacks[s.key] = jnp.stack(leaves)
         stacks = self.buffers.take(round_id)
-        new_stacks, _, div = self._close(w0_stacks, stacks,
-                                         jnp.asarray(w), jnp.asarray(mask),
-                                         uniform=uniform)
+        new_stacks, _, div = self._dispatch(w0_stacks, stacks, w, mask,
+                                            uniform, round_id)
         out: Dict[int, Params] = {}
         for cid in client_ids:
             lane = lanes[cid]
@@ -1032,4 +1109,5 @@ class RoundCloseEngine:
                 else:
                     newp = _set_path(newp, s.key, leaf)
             out[cid] = newp
-        return out, DeferredDivergence(div, round_id)
+        return out, DeferredDivergence(
+            div, round_id, recorder=self.rec if self.rec.enabled else None)

@@ -129,9 +129,17 @@ class FederatedTrainer:
     client_loaders: List[Any]
     eval_batches: List[Dict] = field(default_factory=list)
     seed: int = 0
+    # obs recorder (repro.obs). None → built from fed_cfg.obs; pass a shared
+    # Recorder to collect several trainer runs into one trace/metrics stream
+    # (examples/coordinator_sim.py does this, one run label per scenario).
+    recorder: Any = None
 
     def __post_init__(self):
         import dataclasses as _dc
+
+        if self.recorder is None:
+            from repro.obs import make_recorder
+            self.recorder = make_recorder(self.fed_cfg.obs)
 
         rng = jax.random.key(self.seed)
         rp, rl = jax.random.split(rng)
@@ -191,7 +199,8 @@ class FederatedTrainer:
                 c_max=self.fed_cfg.num_clients, scale=self.scale,
                 method=eng_method, svd_rank=self.fed_cfg.svd_rank,
                 backend=self.fed_cfg.engine,
-                depth=self.fed_cfg.ring_depth)
+                depth=self.fed_cfg.ring_depth,
+                recorder=self.recorder)
             self.coordinator.sink = self.engine.buffers
 
     def _build_coordinator(self):
@@ -223,8 +232,10 @@ class FederatedTrainer:
                 registry, policy, stragglers, codec, self.ledger,
                 buffer_size=fc.async_buffer,
                 staleness_alpha=fc.staleness_alpha,
-                max_version_lag=fc.ring_max_lag)
-        return RoundCoordinator(registry, policy, stragglers, codec, self.ledger)
+                max_version_lag=fc.ring_max_lag,
+                recorder=self.recorder)
+        return RoundCoordinator(registry, policy, stragglers, codec,
+                                self.ledger, recorder=self.recorder)
 
     # ------------------------------------------------------------------
     def _close_round(self, rnd: int, outcome, client_loras: List, weights):
@@ -333,6 +344,54 @@ class FederatedTrainer:
                                     note="factored-residual broadcast")
 
     # ------------------------------------------------------------------
+    def _reconcile_comm(self, rnd: int, outcome) -> None:
+        """Surface the round's measured ledger totals as round metrics and —
+        where the analytic table applies — reconcile the measured param
+        counts against ``core/comm.round_comm_params`` pinned to the
+        OBSERVED delivered-client count. The measured ledger and the closed
+        form are independent accountings of the same round; ``comm_match``
+        is the per-round witness that they agree."""
+        rec = self.recorder
+        tot = self.ledger.round_totals(rnd)
+        rec.round_set(rnd,
+                      uplink_params=tot["uplink_params"],
+                      uplink_bytes=tot["uplink_bytes"],
+                      downlink_params=tot["downlink_params"],
+                      downlink_bytes=tot["downlink_bytes"])
+        k_d = len(outcome.delivered)
+        if k_d == 0:
+            return
+        method = self.method
+        if method == "fedex" and self.fed_cfg.assignment != "average":
+            return  # keep_local/reinit ledger differs from the table's fedex
+        if method not in ("fedex", "fedit", "fedex_svd"):
+            return
+        from repro.core.comm import adapted_matrices, round_comm_params
+        from repro.util.tree import count_params
+        try:
+            mats = adapted_matrices(self.model.cfg, self.lora_cfg)
+        except (AttributeError, TypeError):
+            return  # model without a decoder-style config: no analytic twin
+        r = self.lora_cfg.rank
+        if count_params(self.global_lora) != sum(ms.m * r + r * ms.n
+                                                 for ms in mats):
+            return  # adapter layout ≠ the table's matrix set (e.g. subset)
+        eff, svd = method, self.fed_cfg.svd_rank
+        if method == "fedex_svd" and not svd:
+            eff = "fedex"  # svd_rank=0 → the exact close (config contract)
+        analytic = round_comm_params(
+            eff, mats, r, self.fed_cfg.num_clients,
+            svd_rank=min(svd, r * k_d) if svd else 0,
+            participants=k_d)
+        recon = self.ledger.reconcile(rnd, analytic)
+        rec.round_set(rnd, comm_match=int(recon["ok"]))
+        rec.counter(f"comm.reconcile_{'ok' if recon['ok'] else 'mismatch'}"
+                    ).inc()
+        if not recon["ok"]:
+            rec.event("comm.mismatch", cat="trainer", round=rnd,
+                      uplink=recon["uplink"], downlink=recon["downlink"])
+
+    # ------------------------------------------------------------------
     def _client_round(self, client: int, params, lora):
         loader = self.client_loaders[client % len(self.client_loaders)]
         opt_state = init_adamw(lora)
@@ -361,9 +420,6 @@ class FederatedTrainer:
         from repro.core.engine import DeferredDivergence
 
         for rnd in range(self.fed_cfg.rounds):
-            # round boundary: resolve the previous round's deferred
-            # divergence (its close has long since been dispatched)
-            self._resolve_divergences()
             lr_now = float(lr_at(self._global_step, base_lr=self.train_cfg.learning_rate,
                                  total_steps=self._total_steps,
                                  kind=self.train_cfg.schedule,
@@ -424,6 +480,12 @@ class FederatedTrainer:
 
                 outcome = self.coordinator.run_round(rnd, train_fn,
                                                      self.global_lora)
+                # round boundary: the PREVIOUS round's deferred divergence
+                # resolves only now — after this round's uplinks have already
+                # streamed into the ring — so its ring.write spans genuinely
+                # overlap the in-flight close's [dispatch, resolve] window
+                # (the invariant scripts/obs_report.py --check proves).
+                self._resolve_divergences()
                 self.outcomes.append(outcome)
                 # keep adapter payloads only for the latest round — otherwise
                 # history retains O(rounds · k · adapter_size) of fp32 trees
@@ -443,18 +505,29 @@ class FederatedTrainer:
                     # the divergence metric inside the same jitted program
                     # (factored Grams — no dense deviation matrix, and no
                     # eager mean_deviation tree-walk per round)
-                    self._close_round(rnd, outcome, client_loras, weights)
+                    with self.recorder.span("round.close", cat="trainer",
+                                            round=rnd, engine=True):
+                        self._close_round(rnd, outcome, client_loras, weights)
                     div = self._last_div
                 else:
                     div = mean_deviation(client_loras)
-                    self._close_round(rnd, outcome, client_loras, weights)
+                    with self.recorder.span("round.close", cat="trainer",
+                                            round=rnd, engine=False):
+                        self._close_round(rnd, outcome, client_loras, weights)
+                if self.recorder.enabled:
+                    self._reconcile_comm(rnd, outcome)
 
             self._global_step += self.fed_cfg.local_steps
             eval_params = (self.client_params[0] if self.client_params is not None
                            else self.params)
             eval_lora = (self._client_lora[0] if hasattr(self, "_client_lora")
                          else self.global_lora)
-            ev_loss, ev_acc = self._evaluate(eval_params, eval_lora)
+            with self.recorder.span("round.eval", cat="trainer", round=rnd,
+                                    batches=len(self.eval_batches)):
+                ev_loss, ev_acc = self._evaluate(eval_params, eval_lora)
+            if self.recorder.enabled:
+                self.recorder.round_set(rnd, eval_loss=round(ev_loss, 6),
+                                        eval_acc=round(ev_acc, 6))
             rec = RoundRecord(round=rnd, client_losses=client_losses,
                               eval_loss=ev_loss, eval_acc=ev_acc,
                               divergence_scaled=div, lr=lr_now)

@@ -32,6 +32,7 @@ from repro.core import aggregation as agg
 from repro.fedsrv.registry import (ClientInfo, ClientRegistry, SimClock,
                                    StragglerModel)
 from repro.fedsrv.transport import AdapterCodec, BytesLedger
+from repro.obs import NULL
 from repro.util.logging import get_logger
 from repro.util.tree import count_params
 
@@ -123,13 +124,21 @@ class RoundCoordinator:
                  codec: Optional[AdapterCodec] = None,
                  ledger: Optional[BytesLedger] = None,
                  clock: Optional[SimClock] = None,
-                 sink: Optional[Any] = None):
+                 sink: Optional[Any] = None,
+                 recorder: Optional[Any] = None):
         self.registry = registry
         self.policy = policy or RoundPolicy()
         self.stragglers = stragglers or StragglerModel()
         self.codec = codec or AdapterCodec("none")
         self.ledger = ledger or BytesLedger()
         self.clock = clock or SimClock()
+        # obs recorder (repro.obs): the round lifecycle records nested spans
+        # (round.collect → client.train → client.uplink → codec/ring) plus
+        # per-round client-count metrics; propagated to the codec so
+        # encode/decode byte counts land in the same stream.
+        self.rec = recorder if recorder is not None else NULL
+        if self.rec.enabled and not self.codec.rec.enabled:
+            self.codec.rec = self.rec
         # optional streaming sink (core/engine.RoundBuffers): uplink payloads
         # are decoded INTO preallocated (C_max, …) device stacks as they
         # arrive — the fused round-close engine reads the stacks instead of
@@ -164,12 +173,15 @@ class RoundCoordinator:
         actually transmitted (quantization included). With a streaming sink
         the decoded leaves additionally go straight into the client's stack
         lane (one decode, shared with the returned host tree)."""
-        payload = self.codec.encode(lora, round_id=round_id,
-                                    client_id=client_id, direction="uplink")
-        self.ledger.record(payload)
-        if self.sink is not None:
-            return self.codec.decode_into(payload, self.sink)
-        return self.codec.decode(payload)
+        with self.rec.span("client.uplink", cat="fedsrv", round=round_id,
+                           client=client_id):
+            payload = self.codec.encode(lora, round_id=round_id,
+                                        client_id=client_id,
+                                        direction="uplink")
+            self.ledger.record(payload)
+            if self.sink is not None:
+                return self.codec.decode_into(payload, self.sink)
+            return self.codec.decode(payload)
 
     def _record_downlink(self, lora: Any, round_id: int, client_id: int) -> None:
         """Downlink is always fp32 and the client trains on the original tree,
@@ -187,15 +199,22 @@ class RoundCoordinator:
         participants = self.registry.sample_round(round_id, pol.participation,
                                                   max(1, pol.min_quorum))
         opened = self.clock.now()
+        self.rec.event("round.open", cat="fedsrv", round=round_id,
+                       sampled=len(participants))
 
         # schedule the event queue: dropout draws + arrival times
         dropped_out: List[int] = []
+        stragglers = 0
         arrivals: List[Tuple[float, ClientInfo]] = []
         for c in participants:
             if self.stragglers.dropped(round_id, c):
                 dropped_out.append(c.client_id)
+                self.rec.event("client.dropout", cat="fedsrv", round=round_id,
+                               client=c.client_id)
                 continue
-            arrivals.append((opened + self.stragglers.latency(round_id, c), c))
+            lat, straggled = self.stragglers.draw(round_id, c)
+            stragglers += int(straggled)
+            arrivals.append((opened + lat, c))
         arrivals.sort(key=lambda tc: (tc[0], tc[1].client_id))
 
         # quorum: deliveries required before the deadline may cut stragglers.
@@ -216,18 +235,25 @@ class RoundCoordinator:
 
         delivered: List[Delivery] = []
         dropped_deadline: List[int] = []
-        for t, c in arrivals:
-            late = pol.deadline > 0 and t > opened + pol.deadline
-            if late and len(delivered) >= quorum:
-                dropped_deadline.append(c.client_id)
-                continue
-            # downlink current global, train, uplink the result (through codec)
-            self._record_downlink(global_lora, round_id, c.client_id)
-            lora_c = train_fn(c, global_lora, round_id)
-            lora_c = self._uplink(lora_c, round_id, c.client_id)
-            delivered.append(Delivery(client=c, lora=lora_c,
-                                      launched_at=opened, arrived_at=t))
-            self.clock.advance_to(t)
+        with self.rec.span("round.collect", cat="fedsrv", round=round_id,
+                           candidates=len(arrivals), quorum=quorum):
+            for t, c in arrivals:
+                late = pol.deadline > 0 and t > opened + pol.deadline
+                if late and len(delivered) >= quorum:
+                    dropped_deadline.append(c.client_id)
+                    self.rec.event("client.deadline_drop", cat="fedsrv",
+                                   round=round_id, client=c.client_id,
+                                   arrived_at=t)
+                    continue
+                # downlink current global, train, uplink the result (codec)
+                self._record_downlink(global_lora, round_id, c.client_id)
+                with self.rec.span("client.train", cat="fedsrv",
+                                   round=round_id, client=c.client_id):
+                    lora_c = train_fn(c, global_lora, round_id)
+                lora_c = self._uplink(lora_c, round_id, c.client_id)
+                delivered.append(Delivery(client=c, lora=lora_c,
+                                          launched_at=opened, arrived_at=t))
+                self.clock.advance_to(t)
 
         closed = self.clock.now()  # arrival of the last delivery this round
         # stable order: aggregation sums in client_id order (bitwise parity
@@ -247,6 +273,14 @@ class RoundCoordinator:
             dropped_deadline=dropped_deadline, weights=weights,
             opened_at=opened, closed_at=closed,
             comm=self.ledger.round_totals(round_id))
+        if self.rec.enabled:
+            self.rec.round_set(round_id, sampled=len(participants),
+                               delivered=len(delivered),
+                               stragglers=stragglers,
+                               dropped_out=len(dropped_out),
+                               deadline_drops=len(dropped_deadline),
+                               opened_at=round(opened, 3),
+                               closed_at=round(closed, 3))
         logger.info(
             "round=%d sampled=%d delivered=%d dropout=%d deadline_drop=%d "
             "open=%.2fs close=%.2fs", round_id, len(participants),
@@ -272,8 +306,10 @@ class AsyncBufferCoordinator(RoundCoordinator):
                  clock: Optional[SimClock] = None,
                  buffer_size: int = 2,
                  staleness_alpha: float = 0.5,
-                 max_version_lag: int = 1):
-        super().__init__(registry, policy, stragglers, codec, ledger, clock)
+                 max_version_lag: int = 1,
+                 recorder: Optional[Any] = None):
+        super().__init__(registry, policy, stragglers, codec, ledger, clock,
+                         recorder=recorder)
         if buffer_size < 1:
             raise ValueError("buffer_size must be ≥ 1")
         if max_version_lag < 1:
@@ -295,6 +331,8 @@ class AsyncBufferCoordinator(RoundCoordinator):
         pol = self.policy
         opened = self.clock.now()
         self._snapshots[self._version] = global_lora
+        self.rec.event("commit.open", cat="fedsrv", round=round_id,
+                       version=self._version, inflight=len(self._inflight))
 
         # launch newly sampled clients at the current version
         participants = self.registry.sample_round(round_id, pol.participation,
@@ -307,6 +345,8 @@ class AsyncBufferCoordinator(RoundCoordinator):
                 continue  # still running an older version's assignment
             if self.stragglers.dropped(round_id, c):
                 dropped_out.append(c.client_id)
+                self.rec.event("client.dropout", cat="fedsrv", round=round_id,
+                               client=c.client_id)
                 continue
             t = opened + self.stragglers.latency(round_id, c)
             self._inflight.append((t, c, self._version))
@@ -335,15 +375,20 @@ class AsyncBufferCoordinator(RoundCoordinator):
                         now=self._version)
 
         delivered: List[Delivery] = []
-        for t, c, v in batch:
-            start = self._snapshots[v]
-            self._record_downlink(start, round_id, c.client_id)
-            lora_c = train_fn(c, start, round_id)
-            lora_c = self._uplink(lora_c, round_id, c.client_id)
-            delivered.append(Delivery(client=c, lora=lora_c, launched_at=t,
-                                      arrived_at=t,
-                                      staleness=self._version - v))
-            self.clock.advance_to(t)
+        with self.rec.span("commit.collect", cat="fedsrv", round=round_id,
+                           version=self._version, take=take):
+            for t, c, v in batch:
+                start = self._snapshots[v]
+                self._record_downlink(start, round_id, c.client_id)
+                with self.rec.span("client.train", cat="fedsrv",
+                                   round=round_id, client=c.client_id,
+                                   launch_version=v):
+                    lora_c = train_fn(c, start, round_id)
+                lora_c = self._uplink(lora_c, round_id, c.client_id)
+                delivered.append(Delivery(client=c, lora=lora_c, launched_at=t,
+                                          arrived_at=t,
+                                          staleness=self._version - v))
+                self.clock.advance_to(t)
         delivered.sort(key=lambda d: d.client.client_id)
 
         # weights: example count × staleness discount, renormalized — the
@@ -368,6 +413,21 @@ class AsyncBufferCoordinator(RoundCoordinator):
             dropped_deadline=[], weights=weights, opened_at=opened,
             closed_at=self.clock.now(),
             comm=self.ledger.round_totals(round_id))
+        stale = [d.staleness for d in delivered]
+        if self.rec.enabled:
+            self.rec.hist("fedsrv.commit_staleness").observe(
+                max(stale, default=0))
+            self.rec.round_set(round_id, sampled=len(participants),
+                               delivered=len(delivered),
+                               dropped_out=len(dropped_out),
+                               launched=len(launched),
+                               inflight=len(self._inflight),
+                               version=self._version,
+                               staleness_max=max(stale, default=0),
+                               staleness_mean=round(
+                                   sum(stale) / max(len(stale), 1), 3),
+                               opened_at=round(opened, 3),
+                               closed_at=round(self.clock.now(), 3))
         logger.info(
             "commit=%d version=%d launched=%d committed=%d inflight=%d "
             "max_staleness=%d", round_id, self._version, len(launched),

@@ -69,13 +69,21 @@ class StragglerModel:
     def _rng(self, round_id: int, client_id: int) -> np.random.Generator:
         return np.random.default_rng([self.seed, round_id, client_id])
 
-    def latency(self, round_id: int, client: ClientInfo) -> float:
+    def draw(self, round_id: int, client: ClientInfo) -> "tuple[float, bool]":
+        """(latency, is_straggler) for one (round, client) — same rng stream
+        as :meth:`latency`, with the straggler coin exposed so the
+        coordinator can count stragglers per round (obs metrics)."""
         rng = self._rng(round_id, client.client_id)
         base = self.mean_latency / max(client.compute_speed, 1e-6)
         lat = base * float(np.exp(rng.normal(0.0, self.jitter)))
-        if self.straggler_prob > 0 and rng.random() < self.straggler_prob:
+        straggled = (self.straggler_prob > 0
+                     and rng.random() < self.straggler_prob)
+        if straggled:
             lat *= self.straggler_factor
-        return lat
+        return lat, straggled
+
+    def latency(self, round_id: int, client: ClientInfo) -> float:
+        return self.draw(round_id, client)[0]
 
     def dropped(self, round_id: int, client: ClientInfo) -> bool:
         if self.dropout_prob <= 0:

@@ -18,6 +18,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import NULL
 from repro.util.tree import flatten_with_paths, unflatten_from_paths
 
 CODECS = ("none", "fp16", "int8")
@@ -65,10 +66,13 @@ class AdapterCodec:
       fp32 scale per tensor).
     """
 
-    def __init__(self, quantize: str = "none"):
+    def __init__(self, quantize: str = "none", recorder=None):
         if quantize not in CODECS:
             raise ValueError(f"quantize must be one of {CODECS}, got {quantize!r}")
         self.quantize = quantize
+        # obs recorder (repro.obs): encode/decode spans + per-direction byte
+        # counters. The coordinator propagates its own recorder here.
+        self.rec = recorder if recorder is not None else NULL
 
     def _encode_leaf(self, x, codec: str) -> EncodedTensor:
         arr = np.asarray(x, dtype=np.float32)
@@ -84,10 +88,16 @@ class AdapterCodec:
     def encode(self, tree: Any, *, round_id: int, client_id: int,
                direction: str = "uplink") -> Payload:
         codec = self.quantize if direction == "uplink" else "none"
-        tensors = {path: self._encode_leaf(leaf, codec)
-                   for path, leaf in flatten_with_paths(tree).items()}
-        return Payload(round_id=round_id, client_id=client_id,
-                       direction=direction, codec=codec, tensors=tensors)
+        with self.rec.span("codec.encode", cat="transport", round=round_id,
+                           client=client_id, codec=codec):
+            tensors = {path: self._encode_leaf(leaf, codec)
+                       for path, leaf in flatten_with_paths(tree).items()}
+        payload = Payload(round_id=round_id, client_id=client_id,
+                          direction=direction, codec=codec, tensors=tensors)
+        if self.rec.enabled:
+            self.rec.counter(f"transport.{direction}_bytes").inc(payload.nbytes)
+            self.rec.counter(f"transport.{direction}_payloads").inc()
+        return payload
 
     def _decode_flat(self, payload: Payload) -> Dict[str, np.ndarray]:
         flat = {}
@@ -115,8 +125,12 @@ class AdapterCodec:
         tree (one decode, shared) so the coordinator's ``Delivery.lora``
         stays inspectable by diagnostics and tests.
         """
-        flat = self._decode_flat(payload)
-        buffers.write_flat(payload.client_id, flat, round_id=payload.round_id)
+        with self.rec.span("codec.decode", cat="transport",
+                           round=payload.round_id, client=payload.client_id,
+                           codec=payload.codec, nbytes=payload.nbytes):
+            flat = self._decode_flat(payload)
+            buffers.write_flat(payload.client_id, flat,
+                               round_id=payload.round_id)
         return unflatten_from_paths(flat)
 
 

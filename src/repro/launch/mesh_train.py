@@ -138,15 +138,17 @@ class MeshRoundCloser:
 
     def __init__(self, mesh, params: Params, lora_template: Params, *,
                  c_max: int, scale: float, method: str = "fedex",
-                 svd_rank: int = 0, donate: bool = False):
+                 svd_rank: int = 0, donate: bool = False, recorder=None):
         if method not in MESH_METHODS:
             raise ValueError(
                 f"mesh mode closes {MESH_METHODS} rounds, got {method!r} "
                 "(the §6 assignment strategies are host-orchestrated — "
                 "see core/federated.py)")
+        from repro.obs import NULL
         self.mesh = mesh
         self.c_max = c_max
         self.method = method
+        self.rec = recorder if recorder is not None else NULL
         self.specs = build_factor_specs(params, lora_template)
         self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
                                     method=method, svd_rank=svd_rank,
@@ -213,15 +215,37 @@ class MeshRoundCloser:
         divergence deferred."""
         w, mask = self.weight_vector(client_ids, weights)
         w0_leaves = collect_w0_leaves(self.specs, params)
-        new_w0, glob, div = self._close(w0_leaves, stacks, jnp.asarray(w),
-                                        jnp.asarray(mask), uniform=False)
+        rec = self.rec
+        if rec.enabled:
+            import time as _time
+            before = self._close._cache_size()
+            t0 = _time.perf_counter_ns()
+            with rec.span("close.dispatch", cat="engine", round=round_id,
+                          method=self.method, mesh=True):
+                new_w0, glob, div = self._close(
+                    w0_leaves, stacks, jnp.asarray(w), jnp.asarray(mask),
+                    uniform=False)
+            dispatch_us = (_time.perf_counter_ns() - t0) / 1e3
+            compiled = self._close._cache_size() > before
+            sig = f"mesh:{self.method}"
+            rec.counter(
+                f"engine.compile_{'miss' if compiled else 'hit'}[{sig}]").inc()
+            rec.hist("engine.close_dispatch_us").observe(dispatch_us)
+            if round_id is not None:
+                rec.round_set(round_id, method=self.method,
+                              close_dispatch_us=round(dispatch_us, 1),
+                              compile_miss=int(compiled))
+        else:
+            new_w0, glob, div = self._close(w0_leaves, stacks, jnp.asarray(w),
+                                            jnp.asarray(mask), uniform=False)
         new_params = fold_back_w0(self.specs, params, new_w0)
         flat = {}
         for s in self.specs:
             flat[s.key + "/a"] = glob[s.key]["a"]
             flat[s.key + "/b"] = glob[s.key]["b"]
         return (unflatten_from_paths(flat), new_params,
-                DeferredDivergence(div, round_id))
+                DeferredDivergence(div, round_id,
+                                   recorder=rec if rec.enabled else None))
 
 
 # --------------------------------------------------------------------------
@@ -248,9 +272,15 @@ class MeshFederatedTrainer:
     eval_batches: List[Dict] = field(default_factory=list)
     seed: int = 0
     mesh: Any = None
+    # obs recorder (repro.obs). None → built from fed_cfg.obs.
+    recorder: Any = None
 
     def __post_init__(self):
         from repro.launch.mesh import make_client_mesh
+
+        if self.recorder is None:
+            from repro.obs import make_recorder
+            self.recorder = make_recorder(self.fed_cfg.obs)
 
         fc = self.fed_cfg
         if fc.method not in MESH_METHODS:
@@ -280,7 +310,7 @@ class MeshFederatedTrainer:
         self.closer = MeshRoundCloser(
             self.mesh, self.params, self.global_lora,
             c_max=fc.num_clients, scale=self.scale, method=method,
-            svd_rank=svd_rank)
+            svd_rank=svd_rank, recorder=self.recorder)
         self.round_fn = make_mesh_round_fn(self.model, self.scale,
                                            self.train_cfg)
         self.eval_fn = make_eval_fn(self.model, self.scale)
@@ -332,7 +362,6 @@ class MeshFederatedTrainer:
         c = fc.num_clients
         step0 = 0
         for rnd in range(fc.rounds):
-            self._resolve_divergences()  # round boundary host sync
             lrs = jnp.asarray([
                 lr_at(step0 + s, base_lr=self.train_cfg.learning_rate,
                       total_steps=self._total_steps,
@@ -347,16 +376,32 @@ class MeshFederatedTrainer:
                 self.global_lora))
             batches = self._shard_client_tree(
                 self._stack_batches(fc.local_steps))
-            new_stack, losses = self.round_fn(self.params, lora_stack,
-                                              batches, lrs)
+            with self.recorder.span("mesh.train_round", cat="trainer",
+                                    round=rnd, lanes=c):
+                new_stack, losses = self.round_fn(self.params, lora_stack,
+                                                  batches, lrs)
+            # round boundary: the PREVIOUS close's divergence resolves only
+            # after this round's training program has been dispatched, so
+            # the in-flight close overlaps lane compute (mesh-mode twin of
+            # the host trainer's resolve-after-uplinks ordering)
+            self._resolve_divergences()
 
             stacks = self.closer.shard_stacks(
                 dict(flatten_with_paths(new_stack)))
-            self.global_lora, self.params, div = self.closer.close(
-                self.params, stacks, ids, weights, round_id=rnd)
+            with self.recorder.span("round.close", cat="trainer", round=rnd,
+                                    mesh=True):
+                self.global_lora, self.params, div = self.closer.close(
+                    self.params, stacks, ids, weights, round_id=rnd)
 
             step0 += fc.local_steps
-            ev_loss, ev_acc = self._evaluate()
+            with self.recorder.span("round.eval", cat="trainer", round=rnd,
+                                    batches=len(self.eval_batches)):
+                ev_loss, ev_acc = self._evaluate()
+            if self.recorder.enabled:
+                self.recorder.round_set(rnd, sampled=len(ids),
+                                        delivered=len(ids),
+                                        eval_loss=round(ev_loss, 6),
+                                        eval_acc=round(ev_acc, 6))
             lane_losses = np.asarray(losses)[:, -1]
             rec = RoundRecord(
                 round=rnd, client_losses=[float(lane_losses[i]) for i in ids],

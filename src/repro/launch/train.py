@@ -127,7 +127,23 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
+    # observability (repro.obs):
+    ap.add_argument("--obs", default="", choices=("", "off", "basic", "trace"),
+                    help="observability mode (default off; --trace/"
+                         "--metrics-out imply trace/basic)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON here (Perfetto-"
+                         "loadable); implies --obs trace")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics/round-record JSONL stream here; "
+                         "implies --obs basic (scripts/obs_report.py reads "
+                         "this)")
     args = ap.parse_args()
+
+    obs_mode = args.obs or ("trace" if args.trace
+                            else ("basic" if args.metrics_out else "off"))
+    if args.trace and obs_mode != "trace":
+        ap.error(f"--trace requires --obs trace (got --obs {obs_mode})")
 
     lora_cfg = LoRAConfig(rank=args.rank, alpha=args.alpha,
                           include_mlp=args.include_mlp)
@@ -149,7 +165,8 @@ def main() -> None:
                         async_buffer=args.async_buffer,
                         quantize_uplink=args.quantize_uplink,
                         engine=args.engine,
-                        ring_depth=args.ring_depth)
+                        ring_depth=args.ring_depth,
+                        obs=obs_mode)
     # fail before any model build: svd_rank beyond the k·r residual bound
     validate_fed_lora(fed_cfg, lora_cfg)
 
@@ -214,6 +231,18 @@ def main() -> None:
         print("comm ledger (measured, fedsrv transport):")
         for line in trainer.ledger.summary_lines():
             print("  " + line)
+    rec = trainer.recorder
+    if rec.enabled:
+        for line in rec.summary_lines():
+            logger.info("%s", line)
+        if args.trace:
+            rec.write_trace(args.trace)
+            logger.info("trace → %s (load in Perfetto / chrome://tracing)",
+                        args.trace)
+        if args.metrics_out:
+            rec.write_metrics(args.metrics_out)
+            logger.info("metrics JSONL → %s (summarize with "
+                        "scripts/obs_report.py)", args.metrics_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump([r.__dict__ for r in history], f, indent=2)

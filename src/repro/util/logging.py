@@ -31,8 +31,22 @@ class MetricLogger:
         self.csv_path = csv_path
         self._writer = None
         self._file = None
+        self._fields: list = []
         self._t0 = time.time()
         self.history = []
+
+    def _reopen(self) -> None:
+        """(Re)write the CSV from scratch with the current field union —
+        heterogeneous records (e.g. a round that adds eval metrics) used to
+        crash DictWriter, whose fieldnames were frozen from the FIRST record."""
+        if self._file:
+            self._file.close()
+        self._file = open(self.csv_path, "w", newline="")
+        self._writer = csv.DictWriter(self._file, fieldnames=self._fields,
+                                      restval="")
+        self._writer.writeheader()
+        for past in self.history:
+            self._writer.writerow(past)
 
     def log(self, step: int, metrics: Dict[str, float]) -> None:
         rec = {"step": step, "wall_s": round(time.time() - self._t0, 3), **metrics}
@@ -40,11 +54,14 @@ class MetricLogger:
         msg = " ".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}" for k, v in rec.items())
         self.logger.info(msg)
         if self.csv_path:
-            if self._writer is None:
-                self._file = open(self.csv_path, "w", newline="")
-                self._writer = csv.DictWriter(self._file, fieldnames=list(rec.keys()))
-                self._writer.writeheader()
-            self._writer.writerow(rec)
+            new_keys = [k for k in rec if k not in self._fields]
+            if new_keys or self._writer is None:
+                # union-of-keys header: rewrite history under the new header
+                # (records missing a column get ""), then stream as before
+                self._fields += new_keys
+                self._reopen()
+            else:
+                self._writer.writerow(rec)
             self._file.flush()
 
     def close(self) -> None:
