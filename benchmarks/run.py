@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     aggregation_bench,
+    chaos_soak,
     fig2_divergence_layers,
     fig3_divergence_rounds,
     kernels_bench,
@@ -35,6 +36,7 @@ SUITES = {
     "aggregation": aggregation_bench,
     "roofline": roofline_report,
     "participation": scenarios_participation,
+    "chaos": chaos_soak,
 }
 
 

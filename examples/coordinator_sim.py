@@ -33,12 +33,22 @@ from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
 from repro.core import FederatedTrainer, apply_residual, fedex_aggregate, product_mean
 from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
 from repro.fedsrv import (AdapterCodec, ClientInfo, ClientRegistry,
-                          RoundCoordinator, RoundPolicy, StragglerModel,
-                          weighted_close)
+                          FaultPlan, RoundCoordinator, RoundPolicy,
+                          StragglerModel, weighted_close)
 from repro.models import build_model
 
 VOCAB = 64
 CLIENTS = 5
+
+# default chaos plan: a NaN-poisoned adapter, a truncated payload and a
+# replayed uplink — every kind the defended ingest path must neutralise,
+# and every one of them crash-twin safe (the faulty client contributes
+# nothing to the close, exactly as if it had crashed)
+DEFAULT_CHAOS_PLAN = "nan@1(clients=1);truncate@1(clients=2);replay@1(clients=3,offset=1)"
+
+# kinds whose faulty uplink is fully excluded from the close (quarantined
+# or dropped), so replacing them with ``crash`` yields a bitwise twin
+_TWIN_SAFE = {"nan", "inf", "truncate", "replay", "crash"}
 
 
 def build_data(seed=0):
@@ -95,6 +105,92 @@ def run_scenario(title: str, fed_cfg: FedConfig, loaders, evals, model,
     print(f"  [{time.time() - t0:.1f}s]")
 
 
+def crash_twin(plan_text: str):
+    """Rewrite a fault plan so every spec crashes the client instead.
+
+    Returns ``None`` when a spec's kind is not twin-safe (e.g. ``scale`` or
+    ``duplicate``, whose faulty bytes may still reach the close).  The fault
+    *activation* coin only depends on (seed, round, client, spec index), so
+    the twin crashes exactly the uplinks the original plan corrupts.
+    """
+    plan = FaultPlan.parse(plan_text)
+    clauses = []
+    for spec in plan.specs:
+        if spec.kind not in _TWIN_SAFE:
+            return None
+        sel = []
+        if spec.clients is not None:
+            sel.append("clients=" + "+".join(str(c) for c in spec.clients))
+        if spec.rounds is not None:
+            sel.append("rounds=" + "+".join(str(r) for r in spec.rounds))
+        clause = f"crash@{spec.prob:g}"
+        if sel:
+            clause += "(" + ",".join(sel) + ")"
+        clauses.append(clause)
+    return ";".join(clauses)
+
+
+def run_chaos(faults: str, model, recorder, rounds: int):
+    """Chaos scenario: run a fault plan through the defended uplink path,
+    then its crash-twin (same seed, faulty clients simply absent), and
+    stamp ``clean_exact`` per round — 1 iff the round's close is bitwise
+    identical between the two runs (clean-lane exactness).  This is the
+    witness ``scripts/obs_report.py --check --chaos`` asserts."""
+    print("\n=== chaos: fault plan vs crash-twin (clean-lane exactness) ===")
+    print(f"  plan: {faults}")
+    t0 = time.time()
+
+    def make(plan, rec_):
+        # fresh loaders per run: both twins must see identical data-cursor
+        # state, untouched by the earlier scenarios
+        loaders, evals = build_data()
+        if rec_ is not None:
+            rec_.set_run("chaos")
+        return FederatedTrainer(
+            model=model, lora_cfg=LoRAConfig(rank=4, alpha=8),
+            fed_cfg=FedConfig(num_clients=CLIENTS, rounds=rounds,
+                              local_steps=3, method="fedex",
+                              weighting="examples", engine="auto",
+                              participation=1.0, faults=plan),
+            train_cfg=TrainConfig(learning_rate=5e-3, schedule="constant",
+                                  total_steps=rounds * 3),
+            client_loaders=loaders, eval_batches=evals, seed=0,
+            recorder=rec_)
+
+    faulty = make(faults, recorder)
+    hist = faulty.run()
+    for rec_, out in zip(hist, faulty.outcomes):
+        print(f"  round {rec_.round}: delivered={out.client_ids} "
+              f"quarantined={out.quarantined} degraded={out.degraded} "
+              f"eval_loss={rec_.eval_loss:.4f}")
+
+    twin_plan = crash_twin(faults)
+    if twin_plan is None:
+        print("  plan has non-twin-safe kinds — skipping exactness stamps")
+        return
+    print(f"  twin: {twin_plan}")
+    twin = make(twin_plan, None)
+    twin_hist = twin.run()
+
+    leaves_f = jax.tree.leaves((faulty.global_lora, faulty.params))
+    leaves_t = jax.tree.leaves((twin.global_lora, twin.params))
+    final_ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(leaves_f, leaves_t))
+    all_ok = final_ok
+    for r in range(rounds):
+        # eval loss is a function of the round's closed global adapter, so
+        # bitwise-equal losses witness bitwise-equal closes round by round
+        ok = final_ok and hist[r].eval_loss == twin_hist[r].eval_loss
+        all_ok = all_ok and ok
+        if recorder is not None:
+            recorder.round_set(r, clean_exact=int(ok))
+        print(f"  round {r}: clean_exact={int(ok)} "
+              f"(eval {hist[r].eval_loss:.6f} vs {twin_hist[r].eval_loss:.6f})")
+    print(f"  final global adapter + params bitwise equal: {final_ok}")
+    print(f"  [{time.time() - t0:.1f}s]")
+    assert all_ok, "faulty-run close diverged from its crash-twin"
+
+
 def exactness_check():
     """Direct coordinator round on synthetic adapters: the folded weighted
     residual reproduces W0 + scale·Σwᵢaᵢbᵢ over the delivered subset."""
@@ -140,6 +236,12 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="scenarios 1 + 3 only, 2 rounds each (the CI obs "
                          "smoke configuration)")
+    ap.add_argument("--faults", nargs="?", const=DEFAULT_CHAOS_PLAN,
+                    default="",
+                    help="also run the chaos scenario under this fault plan "
+                         "(bare flag → the default NaN/truncate/replay plan) "
+                         "and stamp per-round clean_exact witnesses for "
+                         "scripts/obs_report.py --check --chaos")
     args = ap.parse_args()
 
     rec = None
@@ -187,6 +289,8 @@ def main():
                      FedConfig(**{**base, "weighting": "uniform"},
                                assignment="keep_local"), loaders, evals,
                      model, recorder=rec)
+    if args.faults:
+        run_chaos(args.faults, model, rec, rounds=2 if args.quick else 3)
     exactness_check()
     if rec is not None:
         rec.set_run(None)

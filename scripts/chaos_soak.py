@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Chaos soak entry point — fault rate × method × participation sweep.
+
+Thin wrapper so the robustness sweep lives next to the other operational
+scripts; the implementation (and the ``BENCH_robustness.json`` schema) is
+``benchmarks/chaos_soak.py``.
+
+  PYTHONPATH=src python scripts/chaos_soak.py [--quick] [--out F]
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.chaos_soak import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

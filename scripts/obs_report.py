@@ -63,7 +63,8 @@ def split_stream(recs: List[Dict[str, Any]]):
 _COLS = [
     ("round", "round"), ("run", "run"), ("sampled", "smp"),
     ("delivered", "dlv"), ("stragglers", "strg"), ("dropped_out", "drop"),
-    ("deadline_drops", "late"), ("close_dispatch_us", "dispatch_us"),
+    ("deadline_drops", "late"), ("quarantined", "quar"),
+    ("degraded", "degr"), ("close_dispatch_us", "dispatch_us"),
     ("close_block_us", "block_us"), ("ring_occupancy", "occ"),
     ("ring_evictions", "evict"), ("stale_drops", "stale"),
     ("uplink_bytes", "up_B"), ("downlink_bytes", "down_B"),
@@ -185,8 +186,35 @@ _CLOSED_REQUIRED = ("close_block_us", "divergence", "ring_evictions",
                     "stale_drops", "uplink_bytes", "downlink_bytes")
 
 
-def run_checks(meta, counters, rounds, spans, trace_path: Optional[str]
-               ) -> List[str]:
+def run_chaos_checks(rounds: List[Dict[str, Any]]) -> List[str]:
+    """``--chaos`` assertions for a fault-injected stream:
+
+    * ≥ 1 round stamped ``global_finite`` and ALL stamps are 1 — no poisoned
+      uplink leaked a non-finite value into the served global adapter;
+    * ≥ 1 round stamped ``clean_exact`` and ALL stamps are 1 — the chaos
+      scenario's close is bitwise identical to its crash-twin run with the
+      faulty clients absent (clean-lane exactness, stamped by
+      examples/coordinator_sim.py's chaos scenario).
+    """
+    failures: List[str] = []
+    for key, what in (("global_finite",
+                       "a non-finite value reached the global adapter"),
+                      ("clean_exact",
+                       "the quarantined close diverged from its clean twin")):
+        stamped = [r for r in rounds if key in r]
+        if not stamped:
+            failures.append(f"--chaos: no round record carries {key} — the "
+                            "chaos scenario never ran")
+            continue
+        for r in stamped:
+            if r.get(key) != 1:
+                failures.append(f"round {r.get('round')} "
+                                f"(run={r.get('run')}): {key}=0 — {what}")
+    return failures
+
+
+def run_checks(meta, counters, rounds, spans, trace_path: Optional[str],
+               chaos: bool = False) -> List[str]:
     failures: List[str] = []
     if meta is None:
         failures.append("stream has no meta record")
@@ -219,6 +247,8 @@ def run_checks(meta, counters, rounds, spans, trace_path: Optional[str]
     elif trace_path:
         failures.append("--trace given but the metrics stream has no spans "
                         "(was the run obs=basic?)")
+    if chaos:
+        failures += run_chaos_checks(rounds)
     return failures
 
 
@@ -230,6 +260,10 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="assert required fields, comm reconciliation and "
                          "the overlap invariant; exit 1 on any failure")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --check: also assert the fault-injection "
+                         "witnesses (global_finite / clean_exact round "
+                         "stamps all 1)")
     args = ap.parse_args(argv)
 
     recs = load_stream(args.metrics)
@@ -265,7 +299,7 @@ def main(argv=None) -> int:
     if not args.check:
         return 0
     failures = run_checks(meta, counters, rounds, spans,
-                          args.trace or None)
+                          args.trace or None, chaos=args.chaos)
     print()
     if failures:
         print(f"CHECK FAILED ({len(failures)} problem(s)):")
@@ -273,7 +307,8 @@ def main(argv=None) -> int:
             print("  -", f)
         return 1
     print("CHECK OK: round records complete, comm reconciled"
-          + (", overlap invariant proven, trace valid" if spans else ""))
+          + (", overlap invariant proven, trace valid" if spans else "")
+          + (", chaos witnesses hold" if args.chaos else ""))
     return 0
 
 

@@ -1,3 +1,5 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (ROUND_STATE_FILE, load_checkpoint,
+                                         round_state_path, save_checkpoint)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["ROUND_STATE_FILE", "load_checkpoint", "round_state_path",
+           "save_checkpoint"]

@@ -20,6 +20,15 @@ from repro.util.tree import flatten_with_paths, unflatten_from_paths
 
 _META_KEY = "__meta__"
 
+# single rolling round-state file per run directory: each boundary snapshot
+# atomically replaces the previous one (crash mid-save leaves the old file)
+ROUND_STATE_FILE = "round_state.npz"
+
+
+def round_state_path(directory: str) -> str:
+    """Canonical round-boundary snapshot path inside a checkpoint dir."""
+    return os.path.join(directory, ROUND_STATE_FILE)
+
 
 def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
     flat = flatten_with_paths(tree)

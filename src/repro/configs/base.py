@@ -222,6 +222,22 @@ class FedConfig:
     # (Chrome trace-event export). The launcher's --trace/--metrics-out
     # flags imply trace/basic respectively.
     obs: str = "off"
+    # --- fault injection + defended uplink (fedsrv/faults.py) ---
+    # fault plan DSL, e.g. "nan@0.1;truncate@1(clients=2,rounds=0+1)" — ""
+    # disables injection entirely. Seeded from `seed` via per-purpose rng
+    # streams, so a plan replays bitwise regardless of participation.
+    faults: str = ""
+    # validate every decoded uplink against the registered adapter spec
+    # (finite check, per-leaf shape/dtype, optional ∞-norm ceiling). Bad
+    # uplinks are QUARANTINED: lane weight-masked to zero, close exact over
+    # the survivors.
+    uplink_validation: bool = True
+    uplink_max_norm: float = 0.0  # 0 → no norm-outlier rejection
+    uplink_retries: int = 2  # transient decode failures: bounded retries
+    retry_backoff: float = 0.05  # sim-seconds; backoff · 2^attempt
+    # --- crash-safe round state (checkpoint/) ---
+    checkpoint_dir: str = ""  # "" → no round-state snapshots
+    checkpoint_every: int = 1  # snapshot every N round boundaries
 
     def __post_init__(self):
         if self.method not in ("fedex", "fedit", "ffa", "fedex_svd",
@@ -247,6 +263,20 @@ class FedConfig:
         if self.obs not in ("off", "basic", "trace"):
             raise ValueError(f"unknown obs mode {self.obs!r} "
                              "(off | basic | trace)")
+        if self.uplink_retries < 0:
+            raise ValueError(
+                f"uplink_retries must be ≥ 0, got {self.uplink_retries}")
+        if self.uplink_max_norm < 0:
+            raise ValueError(
+                f"uplink_max_norm must be ≥ 0, got {self.uplink_max_norm}")
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be ≥ 1, got {self.checkpoint_every}")
+        if self.faults:
+            # parse up front so a bad plan fails at config time, not round 40
+            # (runtime import: configs must stay importable without fedsrv)
+            from repro.fedsrv.faults import FaultPlan
+            FaultPlan.parse(self.faults, seed=self.seed)
 
 
 def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:

@@ -390,8 +390,14 @@ class RoundBuffers:
         # recently evicted round ids (bounded): late uplinks for them are
         # dropped silently instead of raising as unroutable
         self._evicted: "OrderedDict[Any, Any]" = OrderedDict()
+        # recently CLOSED (taken) round ids (bounded): a replayed uplink for
+        # a round whose close already consumed its set is dropped, not a
+        # KeyError — the ring remembers where the round went
+        self._closed: "OrderedDict[Any, Any]" = OrderedDict()
         self.evictions = 0
         self.stale_drops = 0  # uplinks discarded for already-evicted rounds
+        self.replay_drops = 0  # uplinks replayed for already-closed rounds
+        self.duplicate_drops = 0  # second (client, round) write, same lane
         self._auto = 0
         if not self._host:
             @functools.partial(jax.jit, donate_argnums=(0,))
@@ -444,6 +450,13 @@ class RoundBuffers:
             self._auto += 1
         if round_id in self._open:
             raise ValueError(f"round {round_id!r} is already open")
+        # ring wrap: a caller legitimately reusing an old id (e.g. a round
+        # counter that wrapped) gets a FRESH round — forget the stale
+        # closed/evicted memory so its uplinks route to the new set. A
+        # replayed uplink racing this begin_round is only droppable BEFORE
+        # the id is reopened; afterwards the id names the live round again.
+        self._evicted.pop(round_id, None)
+        self._closed.pop(round_id, None)
         if len(self._open) >= self.depth and now is not None:
             for rid in [r for r, e in self._open.items()
                         if e["deadline"] is not None and e["deadline"] <= now]:
@@ -516,7 +529,29 @@ class RoundBuffers:
             logger.warning("dropping uplink from client %d for evicted "
                            "round %r", client_id, round_id)
             return False
+        if round_id in self._closed and round_id not in self._open:
+            # a replayed uplink for a round whose close already consumed its
+            # set — drop it; it must never scatter into a live round's lanes
+            self.replay_drops += 1
+            if self.rec.enabled:
+                self.rec.counter("ring.replay_drops").inc()
+                self.rec.event("ring.replay_drop", cat="ring", round=round_id,
+                               client=client_id)
+            logger.warning("dropping replayed uplink from client %d for "
+                           "closed round %r", client_id, round_id)
+            return False
         _, e = self._entry(round_id)
+        if client_id in e["written"]:
+            # duplicate (client, round): the lane was already written this
+            # round — the first copy wins, the duplicate is dropped
+            self.duplicate_drops += 1
+            if self.rec.enabled:
+                self.rec.counter("ring.duplicate_drops").inc()
+                self.rec.event("ring.duplicate_drop", cat="ring",
+                               round=round_id, client=client_id)
+            logger.warning("dropping duplicate uplink from client %d for "
+                           "round %r", client_id, round_id)
+            return False
         slot = e["slots"][client_id]
         # obs: the ring.write span is the overlap invariant's witness — round
         # N+1 write intervals must land inside round N's close window
@@ -561,6 +596,9 @@ class RoundBuffers:
         program (donated there — this set is gone for good)."""
         rid, e = self._entry(round_id)
         del self._open[rid]
+        self._closed[rid] = True
+        while len(self._closed) > 64:  # bounded memory of closed ids
+            self._closed.popitem(last=False)
         if self.rec.enabled:
             self.rec.event("ring.take", cat="ring", round=rid,
                            delivered=len(e["written"]), lanes=len(e["slots"]))
@@ -569,6 +607,57 @@ class RoundBuffers:
         if self._host:  # one host→device conversion per round
             stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
         return stacks
+
+    # -- checkpoint/resume (crash-safe round state) -------------------------
+    def state_dict(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(json-able bookkeeping, array leaves) snapshot of the ring.
+
+        Open rounds' partially-written stacks ride along as flat arrays keyed
+        ``ring/{round}/{path}`` so a resumed coordinator can keep streaming
+        into them; at a round boundary the ring is normally empty and the
+        snapshot is just the drop counters + closed/evicted id memories."""
+        meta: Dict[str, Any] = {
+            "open": [{"round": rid, "slots": {str(c): s for c, s
+                                              in e["slots"].items()},
+                      "written": {str(c): s for c, s
+                                  in e["written"].items()},
+                      "deadline": e["deadline"]}
+                     for rid, e in self._open.items()],
+            "evicted": list(self._evicted.items()),
+            "closed": list(self._closed),
+            "evictions": self.evictions,
+            "stale_drops": self.stale_drops,
+            "replay_drops": self.replay_drops,
+            "duplicate_drops": self.duplicate_drops,
+            "auto": self._auto,
+        }
+        arrays: Dict[str, Any] = {}
+        for rid, e in self._open.items():
+            for p, x in e["stacks"].items():
+                arrays[f"ring/{rid}/{p}"] = np.asarray(x)
+        return meta, arrays
+
+    def load_state(self, meta: Dict[str, Any],
+                   arrays: Dict[str, Any]) -> None:
+        self._open = OrderedDict()
+        for entry in meta["open"]:
+            rid = entry["round"]
+            stacks = {p: np.asarray(arrays[f"ring/{rid}/{p}"], np.float32)
+                      for p in self._shapes}
+            if not self._host:
+                stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
+            self._open[rid] = {
+                "slots": {int(c): s for c, s in entry["slots"].items()},
+                "written": {int(c): s for c, s in entry["written"].items()},
+                "stacks": stacks, "deadline": entry["deadline"]}
+        self._evicted = OrderedDict(
+            (rid, reason) for rid, reason in meta["evicted"])
+        self._closed = OrderedDict((rid, True) for rid in meta["closed"])
+        self.evictions = int(meta["evictions"])
+        self.stale_drops = int(meta["stale_drops"])
+        self.replay_drops = int(meta.get("replay_drops", 0))
+        self.duplicate_drops = int(meta.get("duplicate_drops", 0))
+        self._auto = int(meta["auto"])
 
 
 # --------------------------------------------------------------------------
@@ -985,7 +1074,9 @@ class RoundCloseEngine:
                           compile_miss=int(compiled),
                           ring_occupancy=len(self.buffers.open_rounds),
                           ring_evictions=self.buffers.evictions,
-                          stale_drops=self.buffers.stale_drops)
+                          stale_drops=self.buffers.stale_drops,
+                          replay_drops=self.buffers.replay_drops,
+                          duplicate_drops=self.buffers.duplicate_drops)
         return out
 
     # ------------------------------------------------------------------

@@ -164,6 +164,7 @@ class FederatedTrainer:
         self._global_step = 0
         self._total_steps = self.fed_cfg.rounds * self.fed_cfg.local_steps
         self._last_div = 0.0
+        self._start_round = 0  # advanced by load_state (crash-safe resume)
         # heterogeneous ranks (beyond-paper; core/hetero.py): per-client
         # adapters of rank rᵢ + per-client frozen bases for the residual fold.
         self.hetero = bool(self.fed_cfg.client_ranks)
@@ -209,7 +210,8 @@ class FederatedTrainer:
         which reproduces the seed's hard-coded loop bit-for-bit."""
         from repro.fedsrv import (AdapterCodec, AsyncBufferCoordinator,
                                   BytesLedger, ClientInfo, ClientRegistry,
-                                  RoundCoordinator, RoundPolicy, StragglerModel)
+                                  RoundCoordinator, RoundPolicy,
+                                  StragglerModel, ValidationPolicy)
 
         fc = self.fed_cfg
         clients = [
@@ -225,17 +227,35 @@ class FederatedTrainer:
             mean_latency=fc.mean_latency, jitter=fc.latency_jitter,
             dropout_prob=fc.dropout_prob, straggler_prob=fc.straggler_prob,
             straggler_factor=fc.straggler_factor, seed=fc.seed)
-        codec = AdapterCodec(fc.quantize_uplink)
+        codec = AdapterCodec(fc.quantize_uplink,
+                             validation=ValidationPolicy(
+                                 enabled=fc.uplink_validation,
+                                 max_norm=fc.uplink_max_norm))
         self.ledger = BytesLedger()
+        # seeded fault-injection layer (fedsrv/faults.py): exercised only
+        # when a fault plan is configured — the clean path carries a None
+        # injector and is bitwise-unchanged.
+        self._chaos = bool(fc.faults)
+        self.fault_injector = None
+        if self._chaos:
+            from repro.fedsrv.faults import FaultInjector, FaultPlan
+            self.fault_injector = FaultInjector(
+                FaultPlan.parse(fc.faults, seed=fc.seed),
+                recorder=self.recorder)
         if fc.async_buffer > 0:
             return AsyncBufferCoordinator(
                 registry, policy, stragglers, codec, self.ledger,
                 buffer_size=fc.async_buffer,
                 staleness_alpha=fc.staleness_alpha,
                 max_version_lag=fc.ring_max_lag,
-                recorder=self.recorder)
+                recorder=self.recorder, faults=self.fault_injector,
+                uplink_retries=fc.uplink_retries,
+                retry_backoff=fc.retry_backoff)
         return RoundCoordinator(registry, policy, stragglers, codec,
-                                self.ledger, recorder=self.recorder)
+                                self.ledger, recorder=self.recorder,
+                                faults=self.fault_injector,
+                                uplink_retries=fc.uplink_retries,
+                                retry_backoff=fc.retry_backoff)
 
     # ------------------------------------------------------------------
     def _close_round(self, rnd: int, outcome, client_loras: List, weights):
@@ -415,11 +435,17 @@ class FederatedTrainer:
         resolve_divergences(self.history)
 
     # ------------------------------------------------------------------
-    def run(self) -> List[RoundRecord]:
+    def run(self, until: Optional[int] = None) -> List[RoundRecord]:
+        """Run rounds ``[_start_round, until)`` (default: all configured
+        rounds). ``until`` gives tests a deterministic kill point: run part
+        of a checkpointed schedule, then resume a fresh trainer via
+        :meth:`load_state` — the LR schedule and every seeded draw key off
+        absolute round/step indices, so the resumed half replays bitwise."""
         k = self.fed_cfg.num_clients
+        stop = self.fed_cfg.rounds if until is None else until
         from repro.core.engine import DeferredDivergence
 
-        for rnd in range(self.fed_cfg.rounds):
+        for rnd in range(self._start_round, stop):
             lr_now = float(lr_at(self._global_step, base_lr=self.train_cfg.learning_rate,
                                  total_steps=self._total_steps,
                                  kind=self.train_cfg.schedule,
@@ -496,10 +522,16 @@ class FederatedTrainer:
                 client_losses = [round_losses[c] for c in outcome.client_ids]
                 weights = outcome.weights
 
-                if not outcome.delivered:  # every sampled client dropped out
-                    logger.warning("round=%d: no deliveries; global kept", rnd)
+                if not outcome.delivered or outcome.degraded:
+                    # zero deliveries, or quorum failed after quarantine
+                    # (degraded): carry the previous global forward — the
+                    # coordinator already evicted the round's ring set.
+                    logger.warning("round=%d: %s; global carried forward",
+                                   rnd, "degraded" if outcome.degraded
+                                   else "no deliveries")
                     div = 0.0
-                    client_losses = [float("nan")]
+                    if not client_losses:
+                        client_losses = [float("nan")]
                 elif self.engine is not None:
                     # fused close over the streamed stacks; it also computes
                     # the divergence metric inside the same jitted program
@@ -528,6 +560,14 @@ class FederatedTrainer:
             if self.recorder.enabled:
                 self.recorder.round_set(rnd, eval_loss=round(ev_loss, 6),
                                         eval_acc=round(ev_acc, 6))
+            if self.recorder.enabled and self._chaos:
+                # chaos witness: the quarantine wall held — no poisoned
+                # uplink leaked a non-finite value into the served adapter
+                import numpy as _np
+                finite = all(
+                    bool(_np.isfinite(_np.asarray(x, _np.float32)).all())
+                    for x in jax.tree.leaves(eval_lora))
+                self.recorder.round_set(rnd, global_finite=int(finite))
             rec = RoundRecord(round=rnd, client_losses=client_losses,
                               eval_loss=ev_loss, eval_acc=ev_acc,
                               divergence_scaled=div, lr=lr_now)
@@ -539,6 +579,104 @@ class FederatedTrainer:
                 "client_loss=%.4f", rnd, self.method, ev_loss, ev_acc,
                 "deferred" if deferred else f"{float(div):.3e}",
                 sum(client_losses) / len(client_losses))
+            if (self.fed_cfg.checkpoint_dir
+                    and (rnd + 1) % self.fed_cfg.checkpoint_every == 0):
+                from repro.checkpoint import round_state_path
+                self.save_state(
+                    round_state_path(self.fed_cfg.checkpoint_dir))
+            # a completed round never re-runs: run(until=k) then run()
+            # continues in-process exactly where load_state would resume
+            self._start_round = rnd + 1
         # final boundary: no record leaves run() with an unresolved handle
         self._resolve_divergences()
         return self.history
+
+    # ------------------------------------------------------------------
+    # crash-safe round state (checkpoint/): a run killed between rounds
+    # resumes from the last saved boundary and replays the remaining rounds
+    # BITWISE against an uninterrupted run (tests/test_checkpoint_resume.py).
+    def save_state(self, path: str) -> None:
+        """Snapshot the full round boundary: model + adapters, coordinator
+        clock, bytes ledger, loader iterator states, ring contents, and the
+        async buffer (version / in-flight / snapshots). Forces the
+        round-boundary host sync first — no deferred divergence handle
+        survives into the file."""
+        import dataclasses as _dc
+
+        from repro.checkpoint import save_checkpoint
+
+        self._resolve_divergences()
+        tree: Dict[str, Any] = {"params": self.params,
+                                "global": self.global_lora}
+        if self.client_params is not None:
+            tree["cparams"] = {str(i): p
+                               for i, p in enumerate(self.client_params)}
+        if hasattr(self, "_client_lora"):
+            tree["clora"] = {str(i): l
+                             for i, l in enumerate(self._client_lora)}
+        meta: Dict[str, Any] = {
+            "next_round": len(self.history),
+            "global_step": self._global_step,
+            "last_div": float(self._last_div),
+            "clock": self.coordinator.clock.state_dict(),
+            "ledger": self.ledger.state_dict(),
+            "loaders": [ld.state_dict() for ld in self.client_loaders],
+            "history": [_dc.asdict(r) for r in self.history],
+        }
+        if self.engine is not None:
+            ring_meta, ring_arrays = self.engine.buffers.state_dict()
+            meta["ring"] = ring_meta
+            if ring_arrays:
+                tree["ringarr"] = ring_arrays
+        co = self.coordinator
+        if hasattr(co, "_version"):  # FedBuff async buffered coordinator
+            meta["async"] = {
+                "version": co._version,
+                "inflight": [[c.client_id, t, v] for t, c, v in co._inflight],
+                "snapshot_versions": sorted(co._snapshots),
+            }
+            tree["snap"] = {str(v): co._snapshots[v] for v in co._snapshots}
+        save_checkpoint(path, tree, meta)
+        logger.info("round state saved: %s (next_round=%d)", path,
+                    meta["next_round"])
+
+    def load_state(self, path: str) -> None:
+        """Restore a :meth:`save_state` snapshot into a freshly-constructed
+        trainer (same configs). ``run()`` then continues from the saved
+        boundary. RoundOutcome payloads are deliberately not checkpointed —
+        ``outcomes`` restarts empty on a resumed run."""
+        from repro.checkpoint import load_checkpoint
+        from repro.util.tree import flatten_with_paths
+
+        tree, meta = load_checkpoint(path)
+        self.params = tree["params"]
+        self.global_lora = tree["global"]
+        if "cparams" in tree:
+            cp = tree["cparams"]
+            self.client_params = [cp[str(i)] for i in range(len(cp))]
+        if "clora" in tree:
+            cl = tree["clora"]
+            self._client_lora = [cl[str(i)] for i in range(len(cl))]
+        self._start_round = int(meta["next_round"])
+        self._global_step = int(meta["global_step"])
+        self._last_div = float(meta["last_div"])
+        self.coordinator.clock.load_state(meta["clock"])
+        self.ledger.load_state(meta["ledger"])
+        for ld, st in zip(self.client_loaders, meta["loaders"]):
+            ld.load_state(st)
+        self.history = [RoundRecord(**r) for r in meta["history"]]
+        self.outcomes = []
+        if self.engine is not None and "ring" in meta:
+            ring_arrays = (flatten_with_paths(tree["ringarr"])
+                           if "ringarr" in tree else {})
+            self.engine.buffers.load_state(meta["ring"], ring_arrays)
+        if "async" in meta:
+            co, st = self.coordinator, meta["async"]
+            co._version = int(st["version"])
+            co._inflight = [(float(t), co.registry.get(int(cid)), int(v))
+                            for cid, t, v in st["inflight"]]
+            snap = tree.get("snap", {})
+            co._snapshots = {int(v): snap[str(v)]
+                             for v in st["snapshot_versions"]}
+        logger.info("round state loaded: %s (resuming at round %d)", path,
+                    self._start_round)

@@ -43,3 +43,18 @@ class ClientLoader:
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         while True:
             yield self.next_batch()
+
+    # -- checkpoint/resume (crash-safe round state) ------------------------
+    def state_dict(self) -> Dict:
+        """Json-able iterator state: a resumed run must draw the exact same
+        batch sequence as an uninterrupted one (bitwise round parity)."""
+        return {
+            "rng": self.rng.bit_generator.state,
+            "order": self._order.tolist(),
+            "cursor": self._cursor,
+        }
+
+    def load_state(self, state: Dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._order = np.asarray(state["order"], dtype=np.int64)
+        self._cursor = int(state["cursor"])

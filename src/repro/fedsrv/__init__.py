@@ -34,9 +34,17 @@ weights — folding scale·ΔW_res into W0 reproduces the weighted ideal update
 over the delivered subset bit-for-bit in fp32 (tests/test_fedsrv.py).
 
 Determinism contract: all randomness flows through
-``np.random.default_rng([seed, round, client])`` and the simulated clock —
-a scenario replays identically across processes (no PYTHONHASHSEED, no wall
-clock).
+``np.random.default_rng([seed, round, client, purpose…])`` (per-purpose
+streams — see registry.purpose_rng) and the simulated clock — a scenario,
+fault plan included, replays identically across processes (no
+PYTHONHASHSEED, no wall clock).
+
+Fault tolerance (fedsrv/faults.py + the defended transport): a seeded
+``FaultPlan`` corrupts uplinks between encode and delivery; the codec's
+``ValidationPolicy`` quarantines bad content (lane weight-masked to zero —
+the close stays exact over the survivors), addressing faults are dropped,
+transient decode failures retry with bounded backoff, and a round starved
+below quorum degrades gracefully (previous global carried forward).
 """
 
 from repro.fedsrv.coordinator import (
@@ -45,13 +53,21 @@ from repro.fedsrv.coordinator import (
     RoundCoordinator,
     RoundOutcome,
     RoundPolicy,
+    UplinkResult,
     weighted_close,
+)
+from repro.fedsrv.faults import (
+    FAULT_KINDS,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
 )
 from repro.fedsrv.registry import (
     ClientInfo,
     ClientRegistry,
     SimClock,
     StragglerModel,
+    purpose_rng,
 )
 from repro.fedsrv.transport import (
     AdapterCodec,
@@ -59,6 +75,10 @@ from repro.fedsrv.transport import (
     EncodedTensor,
     LedgerEntry,
     Payload,
+    StaleUplinkError,
+    TransientTransportError,
+    TransportError,
+    ValidationPolicy,
 )
 
 __all__ = [
@@ -69,12 +89,22 @@ __all__ = [
     "ClientRegistry",
     "Delivery",
     "EncodedTensor",
+    "FAULT_KINDS",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
     "LedgerEntry",
     "Payload",
     "RoundCoordinator",
     "RoundOutcome",
     "RoundPolicy",
     "SimClock",
+    "StaleUplinkError",
     "StragglerModel",
+    "TransientTransportError",
+    "TransportError",
+    "UplinkResult",
+    "ValidationPolicy",
+    "purpose_rng",
     "weighted_close",
 ]

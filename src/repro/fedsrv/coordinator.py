@@ -31,7 +31,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core import aggregation as agg
 from repro.fedsrv.registry import (ClientInfo, ClientRegistry, SimClock,
                                    StragglerModel)
-from repro.fedsrv.transport import AdapterCodec, BytesLedger
+from repro.fedsrv.transport import (AdapterCodec, BytesLedger,
+                                    StaleUplinkError, TransientTransportError,
+                                    TransportError)
 from repro.obs import NULL
 from repro.util.logging import get_logger
 from repro.util.tree import count_params
@@ -80,10 +82,29 @@ class RoundOutcome:
     opened_at: float
     closed_at: float
     comm: Dict[str, int] = field(default_factory=dict)
+    # --- fault outcomes (fedsrv/faults.py + the defended transport) ---
+    # (client_id, reason) pairs whose uplink was quarantined (bad content)
+    # or dropped (crash / replayed / duplicate address)
+    quarantined: List[Tuple[int, str]] = field(default_factory=list)
+    # quorum failed after quarantine: the trainer must carry forward the
+    # previous global adapter (the round's set was evicted, never closed)
+    degraded: bool = False
+    retries: int = 0  # transient decode retries spent this round
 
     @property
     def client_ids(self) -> List[int]:
         return [d.client.client_id for d in self.delivered]
+
+
+@dataclass
+class UplinkResult:
+    """What became of one client's uplink (see RoundCoordinator._uplink)."""
+
+    ok: bool
+    tree: Any = None        # decoded host tree when ok
+    reason: str = ""        # quarantine/drop reason when not ok
+    status: str = "delivered"  # delivered | quarantined | dropped
+    retries: int = 0
 
 
 def weighted_close(outcome: RoundOutcome, method: str = "fedex",
@@ -125,13 +146,26 @@ class RoundCoordinator:
                  ledger: Optional[BytesLedger] = None,
                  clock: Optional[SimClock] = None,
                  sink: Optional[Any] = None,
-                 recorder: Optional[Any] = None):
+                 recorder: Optional[Any] = None,
+                 faults: Optional[Any] = None,
+                 uplink_retries: int = 2,
+                 retry_backoff: float = 0.05):
         self.registry = registry
         self.policy = policy or RoundPolicy()
         self.stragglers = stragglers or StragglerModel()
         self.codec = codec or AdapterCodec("none")
         self.ledger = ledger or BytesLedger()
         self.clock = clock or SimClock()
+        # fault-injection layer (fedsrv/faults.FaultInjector) — None in
+        # production paths; when set, every encoded uplink passes through
+        # injector.corrupt() before delivery
+        self.faults = faults
+        # transient decode failures: bounded retry with exponential backoff
+        # on the SimClock (retry_backoff · 2^attempt sim-seconds)
+        if uplink_retries < 0:
+            raise ValueError(f"uplink_retries must be ≥ 0, got {uplink_retries}")
+        self.uplink_retries = uplink_retries
+        self.retry_backoff = retry_backoff
         # obs recorder (repro.obs): the round lifecycle records nested spans
         # (round.collect → client.train → client.uplink → codec/ring) plus
         # per-round client-count metrics; propagated to the codec so
@@ -168,20 +202,122 @@ class RoundCoordinator:
                 {cid: i for i, cid in enumerate(sorted(candidates))},
                 round_id=round_id, deadline=deadline, now=now)
 
-    def _uplink(self, lora: Any, round_id: int, client_id: int) -> Any:
+    def _deliver(self, payload: Any) -> Tuple[Any, int]:
+        """Decode one payload (into the sink when present) with bounded
+        retry-with-backoff on transient failures. Returns (host tree,
+        retries spent); raises TransportError/StaleUplinkError when the
+        payload must be quarantined/dropped."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    # a transient decode failure is a property of THIS
+                    # delivery attempt, not of the (frozen) payload
+                    self.faults.check_transient(payload.round_id,
+                                                payload.client_id)
+                if self.sink is not None:
+                    return self.codec.decode_into(payload, self.sink), attempt
+                return self.codec.decode(payload), attempt
+            except TransientTransportError as e:
+                if attempt >= self.uplink_retries:
+                    raise TransportError(
+                        f"retries exhausted after {attempt} backoffs: {e}",
+                        round_id=payload.round_id,
+                        client_id=payload.client_id,
+                        reason="retries_exhausted") from e
+                self.clock.advance(self.retry_backoff * (2 ** attempt))
+                attempt += 1
+                if self.rec.enabled:
+                    self.rec.counter("uplink.retries").inc()
+                    self.rec.event("uplink.retry", cat="fedsrv",
+                                   round=payload.round_id,
+                                   client=payload.client_id, attempt=attempt)
+
+    def _uplink(self, lora: Any, round_id: int, client_id: int
+                ) -> UplinkResult:
         """Client → server through the codec; the server aggregates what was
         actually transmitted (quantization included). With a streaming sink
         the decoded leaves additionally go straight into the client's stack
-        lane (one decode, shared with the returned host tree)."""
+        lane (one decode, shared with the returned host tree).
+
+        The defended path: an active fault injector corrupts the payload
+        here (between encode and delivery — exactly where a real wire sits);
+        validation failures QUARANTINE the uplink (ledger direction
+        ``quarantined``, lane left zero for exact exclusion), addressing
+        failures and mid-uplink crashes DROP it (direction ``dropped``).
+        """
         with self.rec.span("client.uplink", cat="fedsrv", round=round_id,
                            client=client_id):
             payload = self.codec.encode(lora, round_id=round_id,
                                         client_id=client_id,
                                         direction="uplink")
+            kinds: List[str] = []
+            if self.faults is not None:
+                payload, applied = self.faults.corrupt(payload)
+                kinds = [s.kind for s in applied]
+            if "crash" in kinds:
+                # client died mid-uplink: nothing ever reaches the server
+                self.ledger.record(payload, note="fault:crash",
+                                   direction="dropped")
+                self._note_undelivered(round_id, client_id, "crash",
+                                       "dropped")
+                return UplinkResult(ok=False, reason="crash",
+                                    status="dropped")
+            if payload.round_id != round_id and self.sink is None:
+                # replayed/misaddressed uplink with no ring to refuse it —
+                # the coordinator rejects the address itself
+                self.ledger.record(payload, note="drop:replay",
+                                   direction="dropped")
+                self._note_undelivered(round_id, client_id, "replay",
+                                       "dropped")
+                return UplinkResult(ok=False, reason="replay",
+                                    status="dropped")
+            try:
+                tree, retries = self._deliver(payload)
+            except StaleUplinkError as e:
+                self.ledger.record(payload, note=f"drop:{e.reason}",
+                                   direction="dropped")
+                self._note_undelivered(round_id, client_id, e.reason,
+                                       "dropped")
+                return UplinkResult(ok=False, reason=e.reason,
+                                    status="dropped")
+            except TransportError as e:
+                self.ledger.record(payload, note=f"quarantine:{e.reason}",
+                                   direction="quarantined")
+                self._note_undelivered(round_id, client_id, e.reason,
+                                       "quarantined")
+                return UplinkResult(ok=False, reason=e.reason,
+                                    status="quarantined")
             self.ledger.record(payload)
-            if self.sink is not None:
-                return self.codec.decode_into(payload, self.sink)
-            return self.codec.decode(payload)
+            if "duplicate" in kinds:
+                # the duplicate copy consumed wire bytes but the ring drops
+                # its lane write — record it, expect the StaleUplinkError
+                try:
+                    self._deliver(payload)
+                except StaleUplinkError:
+                    pass
+                self.ledger.record(payload, note="fault:duplicate",
+                                   direction="dropped")
+            return UplinkResult(ok=True, tree=tree, retries=retries)
+
+    def _note_undelivered(self, round_id: int, client_id: int, reason: str,
+                          status: str) -> None:
+        """Obs + ledger bookkeeping shared by every not-delivered uplink:
+        the downlink that fed this client never became aggregate input."""
+        self.ledger.reclassify(round_id, client_id, "downlink", "dropped",
+                               note=f"fed a {status} uplink")
+        if self.rec.enabled:
+            self.rec.counter(f"uplink.{status}[{reason}]").inc()
+            self.rec.event("uplink.quarantine" if status == "quarantined"
+                           else "uplink.drop", cat="fedsrv", round=round_id,
+                           client=client_id, reason=reason)
+
+    def _ensure_spec(self, global_lora: Any) -> None:
+        """Register the global adapter's per-leaf (path → shape) spec with the
+        codec on first use — every honest uplink must match it exactly."""
+        v = self.codec.validation
+        if v.enabled and v.check_spec and self.codec.spec is None:
+            self.codec.register_spec(global_lora)
 
     def _record_downlink(self, lora: Any, round_id: int, client_id: int) -> None:
         """Downlink is always fp32 and the client trains on the original tree,
@@ -196,6 +332,7 @@ class RoundCoordinator:
     def run_round(self, round_id: int, train_fn: TrainFn, global_lora: Any
                   ) -> RoundOutcome:
         pol = self.policy
+        self._ensure_spec(global_lora)
         participants = self.registry.sample_round(round_id, pol.participation,
                                                   max(1, pol.min_quorum))
         opened = self.clock.now()
@@ -235,6 +372,8 @@ class RoundCoordinator:
 
         delivered: List[Delivery] = []
         dropped_deadline: List[int] = []
+        quarantined: List[Tuple[int, str]] = []
+        retries = 0
         with self.rec.span("round.collect", cat="fedsrv", round=round_id,
                            candidates=len(arrivals), quorum=quorum):
             for t, c in arrivals:
@@ -250,15 +389,41 @@ class RoundCoordinator:
                 with self.rec.span("client.train", cat="fedsrv",
                                    round=round_id, client=c.client_id):
                     lora_c = train_fn(c, global_lora, round_id)
-                lora_c = self._uplink(lora_c, round_id, c.client_id)
-                delivered.append(Delivery(client=c, lora=lora_c,
-                                          launched_at=opened, arrived_at=t))
+                res = self._uplink(lora_c, round_id, c.client_id)
+                # the arrival consumed sim-time whether or not it delivered
+                # — a quarantined uplink and its crash twin leave the clock
+                # (and thus every later draw) identical
                 self.clock.advance_to(t)
+                retries += res.retries
+                if res.ok:
+                    delivered.append(Delivery(client=c, lora=res.tree,
+                                              launched_at=opened,
+                                              arrived_at=t))
+                else:
+                    quarantined.append((c.client_id, res.reason))
 
         closed = self.clock.now()  # arrival of the last delivery this round
         # stable order: aggregation sums in client_id order (bitwise parity
         # with the seed loop under the trivial policy)
         delivered.sort(key=lambda d: d.client.client_id)
+
+        # graceful degradation: quarantine can starve a round below quorum
+        # (impossible in the clean path — quorum is capped to the arrivals
+        # that all deliver). Carry-forward semantics: the round never
+        # closes, so its sink set is evicted here, never take()n.
+        degraded = bool(arrivals) and len(delivered) < quorum
+        if degraded:
+            self._evict_sink_round(round_id, "degraded: quorum failed "
+                                   "after quarantine")
+            if self.rec.enabled:
+                self.rec.counter("round.degraded").inc()
+            self.rec.event("round.degraded", cat="fedsrv", round=round_id,
+                           delivered=len(delivered), quorum=quorum,
+                           quarantined=len(quarantined))
+            logger.warning(
+                "round=%d DEGRADED: %d/%d deliveries after quarantine "
+                "(quorum %d) — global adapter carried forward", round_id,
+                len(delivered), len(arrivals), quorum)
 
         weights = None
         if pol.weighting == "examples" and delivered:
@@ -272,21 +437,31 @@ class RoundCoordinator:
             delivered=delivered, dropped_out=dropped_out,
             dropped_deadline=dropped_deadline, weights=weights,
             opened_at=opened, closed_at=closed,
-            comm=self.ledger.round_totals(round_id))
+            comm=self.ledger.round_totals(round_id),
+            quarantined=quarantined, degraded=degraded, retries=retries)
         if self.rec.enabled:
             self.rec.round_set(round_id, sampled=len(participants),
                                delivered=len(delivered),
                                stragglers=stragglers,
                                dropped_out=len(dropped_out),
                                deadline_drops=len(dropped_deadline),
+                               quarantined=len(quarantined),
+                               retries=retries, degraded=int(degraded),
                                opened_at=round(opened, 3),
                                closed_at=round(closed, 3))
         logger.info(
             "round=%d sampled=%d delivered=%d dropout=%d deadline_drop=%d "
-            "open=%.2fs close=%.2fs", round_id, len(participants),
-            len(delivered), len(dropped_out), len(dropped_deadline),
-            opened, closed)
+            "quarantined=%d open=%.2fs close=%.2fs", round_id,
+            len(participants), len(delivered), len(dropped_out),
+            len(dropped_deadline), len(quarantined), opened, closed)
         return outcome
+
+    def _evict_sink_round(self, round_id: int, reason: str) -> None:
+        """Evict a degraded round's stack set (if a sink opened one) so the
+        ring never wedges on a round nobody will close."""
+        if self.sink is not None and round_id in getattr(
+                self.sink, "open_rounds", []):
+            self.sink.evict(round_id, reason=reason)
 
 
 class AsyncBufferCoordinator(RoundCoordinator):
@@ -307,9 +482,14 @@ class AsyncBufferCoordinator(RoundCoordinator):
                  buffer_size: int = 2,
                  staleness_alpha: float = 0.5,
                  max_version_lag: int = 1,
-                 recorder: Optional[Any] = None):
+                 recorder: Optional[Any] = None,
+                 faults: Optional[Any] = None,
+                 uplink_retries: int = 2,
+                 retry_backoff: float = 0.05):
         super().__init__(registry, policy, stragglers, codec, ledger, clock,
-                         recorder=recorder)
+                         recorder=recorder, faults=faults,
+                         uplink_retries=uplink_retries,
+                         retry_backoff=retry_backoff)
         if buffer_size < 1:
             raise ValueError("buffer_size must be ≥ 1")
         if max_version_lag < 1:
@@ -329,6 +509,7 @@ class AsyncBufferCoordinator(RoundCoordinator):
     def run_round(self, round_id: int, train_fn: TrainFn, global_lora: Any
                   ) -> RoundOutcome:
         pol = self.policy
+        self._ensure_spec(global_lora)
         opened = self.clock.now()
         self._snapshots[self._version] = global_lora
         self.rec.event("commit.open", cat="fedsrv", round=round_id,
@@ -375,6 +556,8 @@ class AsyncBufferCoordinator(RoundCoordinator):
                         now=self._version)
 
         delivered: List[Delivery] = []
+        quarantined: List[Tuple[int, str]] = []
+        retries = 0
         with self.rec.span("commit.collect", cat="fedsrv", round=round_id,
                            version=self._version, take=take):
             for t, c, v in batch:
@@ -384,12 +567,39 @@ class AsyncBufferCoordinator(RoundCoordinator):
                                    round=round_id, client=c.client_id,
                                    launch_version=v):
                     lora_c = train_fn(c, start, round_id)
-                lora_c = self._uplink(lora_c, round_id, c.client_id)
-                delivered.append(Delivery(client=c, lora=lora_c, launched_at=t,
-                                          arrived_at=t,
-                                          staleness=self._version - v))
-                self.clock.advance_to(t)
+                res = self._uplink(lora_c, round_id, c.client_id)
+                self.clock.advance_to(t)  # sim-time parity (see sync loop)
+                retries += res.retries
+                if res.ok:
+                    delivered.append(Delivery(client=c, lora=res.tree,
+                                              launched_at=t, arrived_at=t,
+                                              staleness=self._version - v))
+                else:
+                    quarantined.append((c.client_id, res.reason))
         delivered.sort(key=lambda d: d.client.client_id)
+
+        # graceful degradation: every buffered delivery was quarantined —
+        # keep the version (nothing committed), evict the opened set, and
+        # let the trainer carry the global forward.
+        degraded = not delivered
+        if degraded:
+            self._evict_sink_round(round_id, "degraded: commit buffer fully "
+                                   "quarantined")
+            if self.rec.enabled:
+                self.rec.counter("round.degraded").inc()
+            self.rec.event("round.degraded", cat="fedsrv", round=round_id,
+                           delivered=0, quorum=take,
+                           quarantined=len(quarantined))
+            logger.warning(
+                "commit=%d DEGRADED: 0/%d deliveries after quarantine — "
+                "version held at %d", round_id, take, self._version)
+            return RoundOutcome(
+                round_id=round_id,
+                sampled=[c.client_id for c in participants],
+                delivered=[], dropped_out=dropped_out, dropped_deadline=[],
+                weights=None, opened_at=opened, closed_at=self.clock.now(),
+                comm=self.ledger.round_totals(round_id),
+                quarantined=quarantined, degraded=True, retries=retries)
 
         # weights: example count × staleness discount, renormalized — the
         # weighted residual identity stays exact for ANY normalized weights.
@@ -412,7 +622,8 @@ class AsyncBufferCoordinator(RoundCoordinator):
             delivered=delivered, dropped_out=dropped_out,
             dropped_deadline=[], weights=weights, opened_at=opened,
             closed_at=self.clock.now(),
-            comm=self.ledger.round_totals(round_id))
+            comm=self.ledger.round_totals(round_id),
+            quarantined=quarantined, retries=retries)
         stale = [d.staleness for d in delivered]
         if self.rec.enabled:
             self.rec.hist("fedsrv.commit_staleness").observe(
@@ -420,6 +631,8 @@ class AsyncBufferCoordinator(RoundCoordinator):
             self.rec.round_set(round_id, sampled=len(participants),
                                delivered=len(delivered),
                                dropped_out=len(dropped_out),
+                               quarantined=len(quarantined),
+                               retries=retries,
                                launched=len(launched),
                                inflight=len(self._inflight),
                                version=self._version,

@@ -1,0 +1,371 @@
+"""Seeded, composable fault injection for the federation stack.
+
+A :class:`FaultPlan` is a list of :class:`FaultSpec` fault models — each one
+names a *kind* of misbehavior, a probability, and the (round, client) scope it
+applies to. The :class:`FaultInjector` evaluates the plan deterministically:
+every (spec, round, client) coin comes from its own
+``np.random.default_rng([seed, round, client, FAULT_STREAM, spec_index])``
+SeedSequence stream (see registry.FAULT_STREAM), so fault draws NEVER share a
+stream with the straggler model's latency/dropout draws — a client drawn as
+dropped cannot shift the fault plan of any other client or round, and the same
+plan replays bit-for-bit across participation settings.
+
+Fault kinds (the coordinator's uplink path applies them between
+``AdapterCodec.encode`` and delivery):
+
+==============  ===========================================================
+``nan``         poison one element of the payload with NaN (int8 payloads
+                poison the dequant scale) — quarantined by the finite check
+``inf``         same, with +inf
+``bitflip``     flip one random bit of one tensor's raw bytes (may or may
+                not survive validation — that is the point)
+``truncate``    chop trailing bytes off one tensor: wire size no longer
+                matches the declared shape → typed ``TransportError`` at
+                the decode boundary (never a deep ``reshape`` crash)
+``scale``       byzantine client: multiply the update by ``factor`` —
+                quarantined only when the codec's norm limit is configured
+``replay``      rewrite the payload's round_id to ``round_id − offset``
+                (a replayed/misrouted uplink; the ring drops or the
+                transport rejects it — it never lands in the live round)
+``duplicate``   deliver the same (client, round) payload twice — the ring
+                drops the second copy
+``crash``       client dies mid-uplink: the payload never arrives
+``decode_error``  transient decode failure: the first ``count`` decode
+                attempts raise ``TransientTransportError`` (the
+                coordinator retries with backoff on the SimClock)
+==============  ===========================================================
+
+Plan DSL (``FedConfig.faults`` / ``launch/train.py --faults``): specs are
+``;``-separated, each ``kind@prob(key=value,...)`` with ``+``-separated id
+lists, e.g.::
+
+    nan@1.0(clients=2,rounds=0);scale@0.5(clients=1+3,factor=1e3);crash@0.1
+
+Omitted ``clients=``/``rounds=`` mean "all"; ``@prob`` defaults to 1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fedsrv.registry import FAULT_STREAM, purpose_rng
+from repro.fedsrv.transport import (Payload, TransientTransportError)
+from repro.obs import NULL
+
+FAULT_KINDS = ("nan", "inf", "bitflip", "truncate", "scale", "replay",
+               "duplicate", "crash", "decode_error")
+# kinds that mutate the payload itself (vs. flags the coordinator acts on)
+PAYLOAD_KINDS = ("nan", "inf", "bitflip", "truncate", "scale", "replay")
+# kinds the defended decode MUST catch whenever validation is on — the soak
+# harness computes quarantine recall over these (scale joins the set only
+# when the codec's norm limit is configured)
+DETECTABLE_KINDS = ("nan", "inf", "truncate")
+# adapter-VALUE kinds applicable to mesh mode's co-scheduled lanes (no wire
+# → no codec/addressing faults there; launch/mesh_train.py screens lanes
+# and weight-masks bad ones out of the close)
+MESH_KINDS = ("nan", "inf", "scale")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One fault model: a kind, a probability, and its (round, client) scope."""
+
+    kind: str
+    prob: float = 1.0
+    clients: Optional[Tuple[int, ...]] = None   # None → every client
+    rounds: Optional[Tuple[int, ...]] = None    # None → every round
+    factor: float = 1e3    # scale: byzantine multiplier
+    count: int = 1         # decode_error: failures before success
+    offset: int = 1        # replay: rounds to rewind the round_id by
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {FAULT_KINDS})")
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"fault prob must be in [0, 1], got {self.prob}")
+        if self.count < 1:
+            raise ValueError(f"fault count must be ≥ 1, got {self.count}")
+        if self.offset < 1:
+            raise ValueError(f"replay offset must be ≥ 1, got {self.offset}")
+
+    def in_scope(self, round_id: int, client_id: int) -> bool:
+        if self.rounds is not None and round_id not in self.rounds:
+            return False
+        if self.clients is not None and client_id not in self.clients:
+            return False
+        return True
+
+    def __str__(self) -> str:
+        args = []
+        if self.clients is not None:
+            args.append("clients=" + "+".join(map(str, self.clients)))
+        if self.rounds is not None:
+            args.append("rounds=" + "+".join(map(str, self.rounds)))
+        if self.kind == "scale":
+            args.append(f"factor={self.factor:g}")
+        if self.kind == "decode_error" and self.count != 1:
+            args.append(f"count={self.count}")
+        if self.kind == "replay" and self.offset != 1:
+            args.append(f"offset={self.offset}")
+        out = f"{self.kind}@{self.prob:g}"
+        return out + (f"({','.join(args)})" if args else "")
+
+
+def _parse_ids(text: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in text.split("+") if x != "")
+
+
+def _parse_spec(text: str) -> FaultSpec:
+    text = text.strip()
+    args: Dict[str, Any] = {}
+    if "(" in text:
+        if not text.endswith(")"):
+            raise ValueError(f"unbalanced parens in fault spec {text!r}")
+        text, arg_text = text[:-1].split("(", 1)
+        for item in arg_text.split(","):
+            if not item.strip():
+                continue
+            if "=" not in item:
+                raise ValueError(f"fault spec arg {item!r} is not key=value")
+            k, v = (s.strip() for s in item.split("=", 1))
+            if k == "clients":
+                args["clients"] = _parse_ids(v)
+            elif k == "rounds":
+                args["rounds"] = _parse_ids(v)
+            elif k == "factor":
+                args["factor"] = float(v)
+            elif k == "count":
+                args["count"] = int(v)
+            elif k == "offset":
+                args["offset"] = int(v)
+            else:
+                raise ValueError(f"unknown fault spec arg {k!r} "
+                                 "(clients|rounds|factor|count|offset)")
+    kind, _, prob = text.partition("@")
+    return FaultSpec(kind=kind.strip(),
+                     prob=float(prob) if prob else 1.0, **args)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """An ordered, seeded collection of fault models."""
+
+    specs: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
+        """Parse the ``;``-separated plan DSL (see module docstring)."""
+        specs = tuple(_parse_spec(s) for s in text.split(";") if s.strip())
+        return cls(specs=specs, seed=seed)
+
+    def __str__(self) -> str:
+        return ";".join(str(s) for s in self.specs)
+
+
+class FaultInjector:
+    """Evaluates a :class:`FaultPlan` against the uplink stream.
+
+    The coordinator calls :meth:`corrupt` on every encoded uplink payload
+    (between ``AdapterCodec.encode`` and delivery) and
+    :meth:`check_transient` on every decode attempt. Every decision is a
+    deterministic function of ``(plan.seed, round, client, spec index)`` —
+    see the module docstring for the rng-stream isolation contract.
+
+    ``injected`` is the ground-truth log (round, client, kind) of every fault
+    actually applied — the soak harness scores quarantine precision/recall
+    against it.
+    """
+
+    def __init__(self, plan: FaultPlan, recorder=None):
+        self.plan = plan
+        self.rec = recorder if recorder is not None else NULL
+        self.injected: List[Dict[str, Any]] = []
+        # (round, client) → remaining transient decode failures
+        self._transient: Dict[Tuple[int, int], int] = {}
+
+    # ------------------------------------------------------------------
+    def _spec_rng(self, round_id: int, client_id: int,
+                  spec_index: int) -> np.random.Generator:
+        return purpose_rng(self.plan.seed, round_id, client_id,
+                           FAULT_STREAM, spec_index)
+
+    def draws(self, round_id: int, client_id: int
+              ) -> List[Tuple[int, FaultSpec]]:
+        """The (index, spec) pairs active for one (round, client) uplink.
+
+        Pure: no injector state is consumed — calling this twice (or never,
+        for a dropped-out client) cannot shift any other draw."""
+        out = []
+        for i, spec in enumerate(self.plan.specs):
+            if not spec.in_scope(round_id, client_id):
+                continue
+            if spec.prob >= 1.0:
+                out.append((i, spec))
+            elif spec.prob > 0.0:
+                if self._spec_rng(round_id, client_id, i).random() < spec.prob:
+                    out.append((i, spec))
+        return out
+
+    # ------------------------------------------------------------------
+    def corrupt(self, payload: Payload) -> Tuple[Payload, List[FaultSpec]]:
+        """Apply the plan to one uplink payload.
+
+        Returns ``(payload', applied)``: payload-level kinds mutate a copy of
+        the payload (frozen dataclasses — never the original), flag kinds
+        (crash/duplicate/decode_error) are returned for the coordinator to
+        act on. Every applied fault lands in :attr:`injected` and emits a
+        ``fault.inject`` event / ``fault.injected[kind]`` counter."""
+        applied: List[FaultSpec] = []
+        for i, spec in self.draws(payload.round_id, payload.client_id):
+            # a fresh stream (offset key) for the corruption's own randomness
+            # so the activation coin above stays untouched
+            rng = purpose_rng(self.plan.seed, payload.round_id,
+                              payload.client_id, FAULT_STREAM, i, 1)
+            if spec.kind == "nan":
+                payload = _poison(payload, np.float32(np.nan), rng)
+            elif spec.kind == "inf":
+                payload = _poison(payload, np.float32(np.inf), rng)
+            elif spec.kind == "bitflip":
+                payload = _bitflip(payload, rng)
+            elif spec.kind == "truncate":
+                payload = _truncate(payload, rng)
+            elif spec.kind == "scale":
+                payload = _scale(payload, spec.factor)
+            elif spec.kind == "replay":
+                payload = replace(payload,
+                                  round_id=payload.round_id - spec.offset)
+            elif spec.kind == "decode_error":
+                key = (payload.round_id, payload.client_id)
+                self._transient[key] = spec.count
+            # crash / duplicate: flags only — the coordinator drops or
+            # re-delivers; nothing in the payload changes
+            applied.append(spec)
+            self.injected.append({"round": payload.round_id
+                                  if spec.kind != "replay" else
+                                  payload.round_id + spec.offset,
+                                  "client": payload.client_id,
+                                  "kind": spec.kind})
+            if self.rec.enabled:
+                self.rec.counter(f"fault.injected[{spec.kind}]").inc()
+                self.rec.event("fault.inject", cat="faults",
+                               round=self.injected[-1]["round"],
+                               client=payload.client_id, kind=spec.kind)
+        return payload, applied
+
+    def corrupt_lane(self, round_id: int, client_id: int,
+                     leaves: Dict[str, np.ndarray]
+                     ) -> Tuple[Dict[str, np.ndarray], List[FaultSpec]]:
+        """Mesh-mode value faults on one lane's host arrays (path → array).
+
+        Same activation coins as :meth:`corrupt` (the per-spec streams are
+        shared), but only :data:`MESH_KINDS` apply — co-scheduled lanes have
+        no wire, so codec/addressing kinds are skipped. Returns fresh arrays
+        for corrupted paths; inputs are never mutated."""
+        applied: List[FaultSpec] = []
+        for i, spec in self.draws(round_id, client_id):
+            if spec.kind not in MESH_KINDS:
+                continue
+            rng = purpose_rng(self.plan.seed, round_id, client_id,
+                              FAULT_STREAM, i, 1)
+            if spec.kind == "scale":
+                leaves = {p: np.asarray(x) * np.float32(spec.factor)
+                          for p, x in leaves.items()}
+            else:
+                value = np.float32(np.nan if spec.kind == "nan" else np.inf)
+                path = sorted(leaves)[0]
+                arr = np.array(leaves[path])
+                if arr.size:
+                    arr.reshape(-1)[int(rng.integers(arr.size))] = value
+                leaves = {**leaves, path: arr}
+            applied.append(spec)
+            self.injected.append({"round": round_id, "client": client_id,
+                                  "kind": spec.kind})
+            if self.rec.enabled:
+                self.rec.counter(f"fault.injected[{spec.kind}]").inc()
+                self.rec.event("fault.inject", cat="faults", round=round_id,
+                               client=client_id, kind=spec.kind)
+        return leaves, applied
+
+    def check_transient(self, round_id: int, client_id: int) -> None:
+        """Raise ``TransientTransportError`` while this (round, client) still
+        owes transient decode failures (consumes one per call)."""
+        key = (round_id, client_id)
+        remaining = self._transient.get(key, 0)
+        if remaining > 0:
+            self._transient[key] = remaining - 1
+            if self._transient[key] == 0:
+                del self._transient[key]
+            raise TransientTransportError(
+                f"transient decode failure ({remaining} remaining)",
+                round_id=round_id, client_id=client_id, reason="transient")
+
+
+# --------------------------------------------------------------------------
+# payload corruption primitives (frozen dataclasses → always copy-on-write)
+# --------------------------------------------------------------------------
+
+def _first_path(payload: Payload) -> str:
+    return sorted(payload.tensors)[0]
+
+
+def _poison(payload: Payload, value: np.floating,
+            rng: np.random.Generator) -> Payload:
+    """Write ``value`` into one element of the first tensor (int8 payloads
+    carry no float storage — poison the dequant scale instead)."""
+    path = _first_path(payload)
+    enc = payload.tensors[path]
+    if enc.data.dtype == np.int8:
+        enc = replace(enc, scale=float(value))
+    else:
+        data = enc.data.copy()
+        if data.size:
+            idx = int(rng.integers(data.size))
+            data.reshape(-1)[idx] = data.dtype.type(value)
+        enc = replace(enc, data=data)
+    return replace(payload, tensors={**payload.tensors, path: enc})
+
+
+def _scale(payload: Payload, factor: float) -> Payload:
+    """Byzantine client: every tensor multiplied by ``factor``."""
+    out = {}
+    for path, enc in payload.tensors.items():
+        if enc.data.dtype == np.int8:
+            out[path] = replace(enc, scale=(enc.scale or 1.0) * factor)
+        else:
+            out[path] = replace(
+                enc, data=(enc.data * enc.data.dtype.type(factor)))
+    return replace(payload, tensors=out)
+
+
+def _bitflip(payload: Payload, rng: np.random.Generator) -> Payload:
+    paths = sorted(payload.tensors)
+    path = paths[int(rng.integers(len(paths)))]
+    enc = payload.tensors[path]
+    raw = bytearray(enc.data.tobytes())
+    if raw:
+        byte = int(rng.integers(len(raw)))
+        raw[byte] ^= 1 << int(rng.integers(8))
+    data = np.frombuffer(bytes(raw),
+                         dtype=enc.data.dtype).reshape(enc.data.shape)
+    return replace(payload,
+                   tensors={**payload.tensors, path: replace(enc, data=data)})
+
+
+def _truncate(payload: Payload, rng: np.random.Generator) -> Payload:
+    """Chop trailing elements off the first tensor's wire data while keeping
+    the declared shape — the decode boundary must reject the length mismatch
+    (transport satellite), never mis-reshape."""
+    path = _first_path(payload)
+    enc = payload.tensors[path]
+    flat = enc.data.reshape(-1)
+    if flat.size < 2:
+        return payload
+    drop = 1 + int(rng.integers(max(1, flat.size // 4)))
+    declared = enc.shape if enc.shape is not None else tuple(enc.data.shape)
+    enc = replace(enc, data=flat[:flat.size - drop].copy(), shape=declared)
+    return replace(payload, tensors={**payload.tensors, path: enc})

@@ -5,6 +5,15 @@ use ``np.random.default_rng([seed, round, client])`` (SeedSequence spawning),
 which is stable across processes and independent of PYTHONHASHSEED. The
 simulated clock is a plain float accumulator — no wall time anywhere, so a
 scenario replays bit-for-bit.
+
+Per-purpose rng streams: every independent decision family gets its OWN
+SeedSequence key suffix (:func:`purpose_rng`), so consuming — or never
+consuming — one family's draw cannot shift another's. Latency/straggler
+draws use the bare ``[seed, round, client]`` stream (historical layout,
+bitwise-preserved), dropout uses suffix :data:`DROPOUT_STREAM`, and the
+fault-injection layer (fedsrv/faults.py) uses :data:`FAULT_STREAM` — a
+client drawn as dropped therefore cannot consume or displace a fault-plan
+draw, keeping fault plans reproducible across participation settings.
 """
 
 from __future__ import annotations
@@ -14,6 +23,23 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 import numpy as np
+
+# SeedSequence key suffixes — one per independent decision family. The
+# latency/straggler stream is the UNSUFFIXED historical key (appending a
+# suffix would change every existing seeded scenario bitwise).
+DROPOUT_STREAM = 1
+FAULT_STREAM = 2
+
+
+def purpose_rng(seed: int, round_id: int, client_id: int,
+                *purpose: int) -> np.random.Generator:
+    """The rng stream for one (seed, round, client, purpose…) decision.
+
+    ``purpose`` suffixes (e.g. ``DROPOUT_STREAM``, or ``FAULT_STREAM, i`` for
+    fault spec *i*) isolate decision families from each other: two streams
+    with different suffixes never alias, so draws in one family cannot bleed
+    into another no matter which draws a scenario actually consumes."""
+    return np.random.default_rng([seed, round_id, client_id, *purpose])
 
 
 @dataclass(frozen=True)
@@ -49,6 +75,15 @@ class SimClock:
         self._t += float(dt)
         return self._t
 
+    # -- checkpoint/resume (crash-safe round state) ------------------------
+    def state_dict(self) -> dict:
+        return {"t": self._t}
+
+    def load_state(self, state: dict) -> None:
+        """Restore the exact float — a resumed run must replay the same
+        arrival timeline bitwise (checkpoint/round_state)."""
+        self._t = float(state["t"])
+
 
 @dataclass(frozen=True)
 class StragglerModel:
@@ -67,7 +102,7 @@ class StragglerModel:
     seed: int = 0
 
     def _rng(self, round_id: int, client_id: int) -> np.random.Generator:
-        return np.random.default_rng([self.seed, round_id, client_id])
+        return purpose_rng(self.seed, round_id, client_id)
 
     def draw(self, round_id: int, client: ClientInfo) -> "tuple[float, bool]":
         """(latency, is_straggler) for one (round, client) — same rng stream
@@ -88,8 +123,10 @@ class StragglerModel:
     def dropped(self, round_id: int, client: ClientInfo) -> bool:
         if self.dropout_prob <= 0:
             return False
-        # independent stream (offset key) so dropout and latency don't alias
-        rng = np.random.default_rng([self.seed, round_id, client.client_id, 1])
+        # independent stream (DROPOUT_STREAM suffix) so dropout and latency
+        # never alias — and neither bleeds into the fault stream
+        rng = purpose_rng(self.seed, round_id, client.client_id,
+                          DROPOUT_STREAM)
         return bool(rng.random() < self.dropout_prob)
 
 

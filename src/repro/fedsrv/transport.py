@@ -8,13 +8,27 @@ are then made about what was *transmitted*, as in a real deployment.
 The :class:`BytesLedger` records every payload (params + bytes, per round and
 direction) and can be reconciled against the analytic per-round parameter
 counts of ``core/comm.py::round_comm_params`` — the ledger is the measured
-twin of that closed-form accounting.
+twin of that closed-form accounting. Uplinks that never reach the close —
+quarantined by validation, or dropped by the ring as stale/replayed/duplicate
+— are recorded under their own ``quarantined``/``dropped`` directions, so
+``reconcile()`` stays honest under faults: only *delivered* bytes count as
+uplink/downlink traffic.
+
+The defended ingest path: :meth:`AdapterCodec.decode_into` (and
+:meth:`~AdapterCodec.decode`) validate every decoded payload against the
+codec's :class:`ValidationPolicy` — declared-shape-vs-wire-length at the
+decode boundary, per-leaf shape check against the registered adapter spec
+(:meth:`AdapterCodec.register_spec`), a finite check, and an optional
+∞-norm outlier limit. Failures raise a typed :class:`TransportError` with
+(round, client) context so the coordinator can QUARANTINE the uplink — the
+lane stays zero and the engine's zero-weight masking excludes it exactly —
+instead of scattering poison into the donated device stacks.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,10 +38,43 @@ from repro.util.tree import flatten_with_paths, unflatten_from_paths
 CODECS = ("none", "fp16", "int8")
 
 
+class TransportError(RuntimeError):
+    """A payload failed decode/validation — quarantine it (round/client
+    context travels with the error; ``reason`` is the short metric label)."""
+
+    def __init__(self, message: str, *, round_id=None, client_id=None,
+                 reason: str = "corrupt"):
+        super().__init__(
+            f"round={round_id} client={client_id} [{reason}]: {message}")
+        self.round_id = round_id
+        self.client_id = client_id
+        self.reason = reason
+
+
+class TransientTransportError(TransportError):
+    """A decode failure worth retrying (the coordinator backs off on its
+    SimClock and re-attempts up to its retry budget)."""
+
+
+class StaleUplinkError(TransportError):
+    """The payload's ADDRESS is bad — replayed/unknown round_id, or a
+    duplicate (client, round) lane — so the ring refused it. Dropped, not
+    quarantined: the bytes never threatened a live lane."""
+
+
 @dataclass(frozen=True)
 class EncodedTensor:
-    data: np.ndarray            # fp32 / fp16 / int8 storage
+    data: np.ndarray            # fp32 / fp16 / int8 wire storage
     scale: Optional[float]      # int8 dequant scale (absmax/127), else None
+    # declared logical shape; None → data.shape. A corrupted/truncated wire
+    # buffer keeps its declared shape, so the decode boundary can detect the
+    # length mismatch instead of mis-reshaping (fedsrv/faults.py exercises
+    # this).
+    shape: Optional[Tuple[int, ...]] = None
+
+    @property
+    def declared_shape(self) -> Tuple[int, ...]:
+        return self.shape if self.shape is not None else tuple(self.data.shape)
 
     @property
     def nbytes(self) -> int:
@@ -57,6 +104,21 @@ class Payload:
         return sum(t.nbytes for t in self.tensors.values())
 
 
+@dataclass(frozen=True)
+class ValidationPolicy:
+    """What the defended decode checks (quarantine on failure).
+
+    ``max_norm`` is the ∞-norm outlier limit per decoded leaf (byzantine-
+    scaled uplinks); 0 disables it. ``check_spec`` only bites once an
+    adapter spec is registered via :meth:`AdapterCodec.register_spec`.
+    """
+
+    enabled: bool = True
+    check_finite: bool = True
+    check_spec: bool = True
+    max_norm: float = 0.0
+
+
 class AdapterCodec:
     """Encode/decode adapter trees with optional uplink factor quantization.
 
@@ -64,15 +126,32 @@ class AdapterCodec:
     * ``fp16`` — half-precision factors (2 B/param), decode upcasts to fp32.
     * ``int8`` — per-tensor symmetric absmax quantization (1 B/param + one
       fp32 scale per tensor).
+
+    Decoding is DEFENDED (see module docstring): wire-length-vs-declared-
+    shape at the decode boundary, then the :class:`ValidationPolicy` checks.
+    All failures raise :class:`TransportError` (or a subclass) carrying the
+    payload's (round, client) identity.
     """
 
-    def __init__(self, quantize: str = "none", recorder=None):
+    def __init__(self, quantize: str = "none", recorder=None,
+                 validation: Optional[ValidationPolicy] = None):
         if quantize not in CODECS:
             raise ValueError(f"quantize must be one of {CODECS}, got {quantize!r}")
         self.quantize = quantize
         # obs recorder (repro.obs): encode/decode spans + per-direction byte
         # counters. The coordinator propagates its own recorder here.
         self.rec = recorder if recorder is not None else NULL
+        self.validation = validation if validation is not None \
+            else ValidationPolicy()
+        # path → expected decoded leaf shape (register_spec)
+        self.spec: Optional[Dict[str, Tuple[int, ...]]] = None
+
+    def register_spec(self, tree: Any) -> None:
+        """Pin the expected adapter structure (path → shape). Decoded uplinks
+        must match it exactly — extra/missing leaves or shape drift are
+        quarantined, never scattered into the ``(C_max, …)`` stacks."""
+        self.spec = {path: tuple(np.shape(leaf))
+                     for path, leaf in flatten_with_paths(tree).items()}
 
     def _encode_leaf(self, x, codec: str) -> EncodedTensor:
         arr = np.asarray(x, dtype=np.float32)
@@ -100,16 +179,81 @@ class AdapterCodec:
         return payload
 
     def _decode_flat(self, payload: Payload) -> Dict[str, np.ndarray]:
+        """Dequantize the wire tensors; the FIRST defense line lives here:
+        a wire buffer whose element count disagrees with its declared shape
+        raises a typed :class:`TransportError` with (round, client) context
+        — never a deep ``np.frombuffer`` crash or a silent mis-reshape."""
         flat = {}
         for path, enc in payload.tensors.items():
+            declared = enc.declared_shape
+            expected = int(np.prod(declared, dtype=np.int64)) if declared \
+                else 1
+            if int(enc.data.size) != expected:
+                raise TransportError(
+                    f"{path}: wire buffer has {enc.data.size} elements "
+                    f"({enc.data.nbytes} B) but declares shape {declared} "
+                    f"({expected} elements)",
+                    round_id=payload.round_id, client_id=payload.client_id,
+                    reason="bytes")
+            arr = enc.data.reshape(declared)
             if enc.scale is not None:
-                flat[path] = enc.data.astype(np.float32) * enc.scale
+                flat[path] = arr.astype(np.float32) * enc.scale
             else:
-                flat[path] = enc.data.astype(np.float32)
+                flat[path] = arr.astype(np.float32)
         return flat
 
+    def _validate_flat(self, payload: Payload,
+                       flat: Dict[str, np.ndarray]) -> None:
+        """The ValidationPolicy stage: spec/shape, finite, ∞-norm limit."""
+        v = self.validation
+        if not v.enabled:
+            return
+        ctx = dict(round_id=payload.round_id, client_id=payload.client_id)
+        spec = self.spec
+        if v.check_spec and spec is not None:
+            # dict-view equality is O(n) key hashing with no allocation; the
+            # sorted diffs are only built to format the failure message
+            if flat.keys() != spec.keys():
+                missing = sorted(set(spec) - set(flat))
+                extra = sorted(set(flat) - set(spec))
+                raise TransportError(
+                    f"adapter tree mismatch vs registered spec "
+                    f"(missing={missing}, extra={extra})",
+                    reason="spec", **ctx)
+            for path, arr in flat.items():
+                if tuple(arr.shape) != spec[path]:
+                    raise TransportError(
+                        f"{path}: shape {tuple(arr.shape)} != registered "
+                        f"{spec[path]}", reason="shape", **ctx)
+        check_finite, max_norm = v.check_finite, v.max_norm
+        total = 0.0
+        for path, arr in flat.items():
+            # one float64 reduction per leaf, one finite check per payload:
+            # any NaN/±Inf propagates into the running sum (cancelling ±Inf
+            # makes NaN), and float64 accumulation of finite fp32/fp16
+            # leaves cannot overflow — no O(size) bool temp, no per-leaf
+            # isfinite dispatch
+            if check_finite:
+                total += float(arr.sum(dtype=np.float64))
+            if max_norm > 0 and arr.size \
+                    and float(np.max(np.abs(arr))) > max_norm:
+                raise TransportError(
+                    f"{path}: ∞-norm {float(np.max(np.abs(arr))):.3g} "
+                    f"exceeds limit {max_norm:g}", reason="norm", **ctx)
+        if check_finite and not np.isfinite(total):
+            # quarantine slow path: re-scan to name the offending leaf
+            for path, arr in flat.items():
+                if not np.all(np.isfinite(arr)):
+                    raise TransportError(
+                        f"{path}: non-finite values in payload",
+                        reason="nonfinite", **ctx)
+            raise TransportError("non-finite values in payload",
+                                 reason="nonfinite", **ctx)
+
     def decode(self, payload: Payload) -> Any:
-        return unflatten_from_paths(self._decode_flat(payload))
+        flat = self._decode_flat(payload)
+        self._validate_flat(payload, flat)
+        return unflatten_from_paths(flat)
 
     def decode_into(self, payload: Payload, buffers: Any) -> Any:
         """Decode straight into a streaming sink (core/engine.RoundBuffers).
@@ -124,13 +268,31 @@ class AdapterCodec:
         (quantization included), like :meth:`decode`. Also returns the host
         tree (one decode, shared) so the coordinator's ``Delivery.lora``
         stays inspectable by diagnostics and tests.
+
+        Defended: validation runs BEFORE the scatter, so a quarantined
+        payload never touches a stack lane (raises
+        :class:`TransportError`). A payload the ring refuses — unknown or
+        already-closed/evicted round_id, duplicate (client, round) lane —
+        raises :class:`StaleUplinkError` (an addressing failure: dropped,
+        not quarantined).
         """
         with self.rec.span("codec.decode", cat="transport",
                            round=payload.round_id, client=payload.client_id,
                            codec=payload.codec, nbytes=payload.nbytes):
             flat = self._decode_flat(payload)
-            buffers.write_flat(payload.client_id, flat,
-                               round_id=payload.round_id)
+            self._validate_flat(payload, flat)
+            try:
+                landed = buffers.write_flat(payload.client_id, flat,
+                                            round_id=payload.round_id)
+            except KeyError as e:
+                raise StaleUplinkError(
+                    f"unroutable round_id: {e}", round_id=payload.round_id,
+                    client_id=payload.client_id, reason="unroutable") from e
+            if not landed:
+                raise StaleUplinkError(
+                    "ring refused the write (stale/evicted round or "
+                    "duplicate lane)", round_id=payload.round_id,
+                    client_id=payload.client_id, reason="stale")
         return unflatten_from_paths(flat)
 
 
@@ -146,16 +308,44 @@ class LedgerEntry:
 
 
 class BytesLedger:
-    """Per-round communication ledger (measured params + bytes)."""
+    """Per-round communication ledger (measured params + bytes).
+
+    Directions are open-ended: besides ``uplink``/``downlink``, faulty
+    payloads are accounted under ``quarantined`` (validation rejected the
+    content) and ``dropped`` (crashed mid-uplink, or the ring refused a
+    replayed/duplicate address; also the downlink that fed a client who
+    never delivered). ``reconcile()`` compares only the delivered
+    uplink/downlink params against the analytic form — which is exactly why
+    the faulty bytes must NOT hide in those buckets.
+    """
 
     def __init__(self):
         self.entries: List[LedgerEntry] = []
 
-    def record(self, payload: Payload, note: str = "") -> None:
+    def record(self, payload: Payload, note: str = "",
+               direction: Optional[str] = None) -> None:
+        """Record one payload; ``direction`` overrides the payload's own
+        (e.g. a quarantined uplink is recorded as ``quarantined`` — the
+        bytes crossed the wire but never became aggregate input)."""
         self.entries.append(LedgerEntry(
-            round_id=payload.round_id, direction=payload.direction,
+            round_id=payload.round_id,
+            direction=direction or payload.direction,
             client_id=payload.client_id, params=payload.num_params,
             nbytes=payload.nbytes, codec=payload.codec, note=note))
+
+    def reclassify(self, round_id: int, client_id: int, direction: str,
+                   new_direction: str, note: str = "") -> bool:
+        """Re-bucket the latest matching entry (e.g. the downlink that fed a
+        client whose uplink was then quarantined → ``dropped``). Returns
+        whether a matching entry was found."""
+        for e in reversed(self.entries):
+            if (e.round_id == round_id and e.client_id == client_id
+                    and e.direction == direction):
+                e.direction = new_direction
+                if note:
+                    e.note = (e.note + "; " + note) if e.note else note
+                return True
+        return False
 
     def record_analytic(self, round_id: int, direction: str, params: int,
                         bytes_per_param: int = 4, client_id: int = -1,
@@ -169,13 +359,18 @@ class BytesLedger:
 
     # -- views -------------------------------------------------------------
     def round_totals(self, round_id: int) -> Dict[str, int]:
+        """Per-direction ``{direction}_params``/``{direction}_bytes`` sums.
+        The four uplink/downlink keys are always present (zero-filled);
+        fault directions (``dropped``/``quarantined``) appear only when a
+        round actually recorded them."""
         tot = {"uplink_params": 0, "uplink_bytes": 0,
                "downlink_params": 0, "downlink_bytes": 0}
         for e in self.entries:
             if e.round_id != round_id:
                 continue
-            tot[f"{e.direction}_params"] += e.params
-            tot[f"{e.direction}_bytes"] += e.nbytes
+            kp, kb = f"{e.direction}_params", f"{e.direction}_bytes"
+            tot[kp] = tot.get(kp, 0) + e.params
+            tot[kb] = tot.get(kb, 0) + e.nbytes
         return tot
 
     def totals(self) -> Dict[str, int]:
@@ -184,7 +379,7 @@ class BytesLedger:
                "downlink_params": 0, "downlink_bytes": 0}
         for r in rounds:
             for key, v in self.round_totals(r).items():
-                out[key] += v
+                out[key] = out.get(key, 0) + v
         return out
 
     def reconcile(self, round_id: int, analytic: Dict[str, int]
@@ -204,6 +399,14 @@ class BytesLedger:
                               "match": measured == expected}
         out["ok"] = all(out[d]["match"] for d in ("uplink", "downlink"))
         return out
+
+    # -- checkpoint/resume (crash-safe round state) ------------------------
+    def state_dict(self) -> List[Dict[str, Any]]:
+        import dataclasses as _dc
+        return [_dc.asdict(e) for e in self.entries]
+
+    def load_state(self, state: List[Dict[str, Any]]) -> None:
+        self.entries = [LedgerEntry(**d) for d in state]
 
     def summary_lines(self) -> List[str]:
         rounds = sorted({e.round_id for e in self.entries})

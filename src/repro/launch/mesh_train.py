@@ -317,6 +317,26 @@ class MeshFederatedTrainer:
         self.history: List[RoundRecord] = []
         self._total_steps = fc.rounds * fc.local_steps
         self._examples = [len(l.sequences) for l in self.client_loaders]
+        # mesh fault injection (fedsrv/faults.py): only the adapter-VALUE
+        # kinds apply — co-scheduled lanes cross no wire, so codec and
+        # addressing faults have nothing to corrupt. Faulty lanes are
+        # quarantined by DROPPING their ids from the close's subset: the
+        # weight vector masks them to exact zero, same program, exact close
+        # over the survivors.
+        self.fault_injector = None
+        if fc.faults:
+            from repro.fedsrv.faults import (MESH_KINDS, FaultInjector,
+                                             FaultPlan)
+            plan = FaultPlan.parse(fc.faults, seed=fc.seed)
+            self.fault_injector = FaultInjector(plan,
+                                                recorder=self.recorder)
+            skipped = sorted({s.kind for s in plan.specs
+                              if s.kind not in MESH_KINDS})
+            if skipped:
+                logger.warning(
+                    "mesh mode applies value faults %s only; plan kind(s) %s "
+                    "need a wire/ring and are skipped", MESH_KINDS,
+                    ", ".join(skipped))
 
     # ------------------------------------------------------------------
     def _sample_round(self, rnd: int) -> Tuple[List[int],
@@ -356,6 +376,53 @@ class MeshFederatedTrainer:
     def _resolve_divergences(self) -> None:
         resolve_divergences(self.history)
 
+    def _screen_lanes(self, rnd: int, stacks: Dict[str, Any],
+                      ids: List[int], weights: Optional[List[float]]):
+        """Apply the round's mesh value faults, then quarantine bad lanes.
+
+        A lane fails the screen when any leaf is non-finite or (with
+        ``uplink_max_norm`` set) its ∞-norm exceeds the limit; failing ids
+        are dropped from the subset so the close's weight vector masks them
+        to exact zero. Returns (stacks', survivors, weights', quarantined)."""
+        fc = self.fed_cfg
+        host = {p: np.array(x) for p, x in stacks.items()}
+        survivors: List[int] = []
+        surv_w: List[float] = []
+        quarantined: List[Tuple[int, str]] = []
+        for j, cid in enumerate(ids):
+            lane = {p: host[p][cid] for p in host}
+            lane2, applied = self.fault_injector.corrupt_lane(rnd, cid, lane)
+            if applied:
+                for p in host:
+                    host[p][cid] = lane2[p]
+            bad = ""
+            for p in host:
+                if not np.isfinite(host[p][cid]).all():
+                    bad = "nonfinite"
+                    break
+                if (fc.uplink_max_norm > 0
+                        and np.abs(host[p][cid]).max() > fc.uplink_max_norm):
+                    bad = "norm"
+                    break
+            if bad:
+                # zero the lane, don't just mask it: 0·NaN = NaN, so a
+                # poisoned lane must never reach the close's weighted sums
+                # (mirrors the streaming sink, where a quarantined uplink
+                # never writes its lane)
+                for p in host:
+                    host[p][cid] = 0
+                quarantined.append((cid, bad))
+                if self.recorder.enabled:
+                    self.recorder.counter(f"uplink.quarantined[{bad}]").inc()
+                self.recorder.event("uplink.quarantine", cat="fedsrv",
+                                    round=rnd, client=cid, reason=bad)
+            else:
+                survivors.append(cid)
+                if weights is not None:
+                    surv_w.append(weights[j])
+        return (host, survivors,
+                surv_w if weights is not None else None, quarantined)
+
     # ------------------------------------------------------------------
     def run(self) -> List[RoundRecord]:
         fc = self.fed_cfg
@@ -369,6 +436,7 @@ class MeshFederatedTrainer:
                       kind=self.train_cfg.schedule)
                 for s in range(fc.local_steps)], jnp.float32)
             ids, weights = self._sample_round(rnd)
+            n_sampled = len(ids)
 
             # downlink broadcast: every lane starts from the global adapter
             lora_stack = self._shard_client_tree(jax.tree.map(
@@ -386,31 +454,56 @@ class MeshFederatedTrainer:
             # the host trainer's resolve-after-uplinks ordering)
             self._resolve_divergences()
 
-            stacks = self.closer.shard_stacks(
-                dict(flatten_with_paths(new_stack)))
-            with self.recorder.span("round.close", cat="trainer", round=rnd,
-                                    mesh=True):
-                self.global_lora, self.params, div = self.closer.close(
-                    self.params, stacks, ids, weights, round_id=rnd)
+            stacks_flat = dict(flatten_with_paths(new_stack))
+            quarantined: List[Tuple[int, str]] = []
+            if self.fault_injector is not None:
+                stacks_flat, ids, weights, quarantined = self._screen_lanes(
+                    rnd, stacks_flat, ids, weights)
+            if not ids:
+                # every sampled lane quarantined: degraded round — the
+                # global adapter and base params carry forward unchanged
+                div: Any = 0.0
+                if self.recorder.enabled:
+                    self.recorder.counter("round.degraded").inc()
+                self.recorder.event("round.degraded", cat="fedsrv",
+                                    round=rnd, delivered=0,
+                                    quarantined=len(quarantined))
+                logger.warning("round=%d DEGRADED: every lane quarantined; "
+                               "global carried forward", rnd)
+            else:
+                stacks = self.closer.shard_stacks(stacks_flat)
+                with self.recorder.span("round.close", cat="trainer",
+                                        round=rnd, mesh=True):
+                    self.global_lora, self.params, div = self.closer.close(
+                        self.params, stacks, ids, weights, round_id=rnd)
 
             step0 += fc.local_steps
             with self.recorder.span("round.eval", cat="trainer", round=rnd,
                                     batches=len(self.eval_batches)):
                 ev_loss, ev_acc = self._evaluate()
             if self.recorder.enabled:
-                self.recorder.round_set(rnd, sampled=len(ids),
+                self.recorder.round_set(rnd, sampled=n_sampled,
                                         delivered=len(ids),
+                                        quarantined=len(quarantined),
+                                        degraded=int(not ids),
                                         eval_loss=round(ev_loss, 6),
                                         eval_acc=round(ev_acc, 6))
+            if self.recorder.enabled and self.fault_injector is not None:
+                finite = all(
+                    bool(np.isfinite(np.asarray(x, np.float32)).all())
+                    for x in jax.tree.leaves(self.global_lora))
+                self.recorder.round_set(rnd, global_finite=int(finite))
             lane_losses = np.asarray(losses)[:, -1]
             rec = RoundRecord(
-                round=rnd, client_losses=[float(lane_losses[i]) for i in ids],
+                round=rnd, client_losses=([float(lane_losses[i]) for i in ids]
+                                          or [float("nan")]),
                 eval_loss=ev_loss, eval_acc=ev_acc, divergence_scaled=div,
                 lr=float(lrs[0]))
             self.history.append(rec)
             logger.info(
-                "round=%d mode=mesh sampled=%d/%d eval_loss=%.4f "
-                "eval_acc=%.4f div=deferred programs=%d", rnd, len(ids), c,
+                "round=%d mode=mesh sampled=%d/%d delivered=%d "
+                "quarantined=%d eval_loss=%.4f eval_acc=%.4f div=deferred "
+                "programs=%d", rnd, n_sampled, c, len(ids), len(quarantined),
                 ev_loss, ev_acc, self.closer.compiled_programs)
         self._resolve_divergences()
         return self.history

@@ -124,6 +124,30 @@ def main() -> None:
                          "stacks may be in flight at once (2 = double "
                          "buffering; >2 pipelines FedBuff commits deeper, "
                          "with deadline eviction of lagging rounds)")
+    # fault injection + defended uplink (fedsrv/faults.py):
+    ap.add_argument("--faults", default="",
+                    help="seeded fault plan DSL, e.g. "
+                         "'nan@0.2;truncate@1(clients=2,rounds=0+1)' — "
+                         "corrupts uplinks between encode and delivery; the "
+                         "validation stage quarantines them (close stays "
+                         "exact over the survivors)")
+    ap.add_argument("--no-uplink-validation", action="store_true",
+                    help="disable the defended ingest path (finite/shape/"
+                         "spec checks on every decoded uplink)")
+    ap.add_argument("--uplink-max-norm", type=float, default=0.0,
+                    help="quarantine uplinks whose ∞-norm exceeds this "
+                         "(byzantine-scale rejection; 0 = off)")
+    ap.add_argument("--uplink-retries", type=int, default=2,
+                    help="bounded retries for transient decode failures")
+    # crash-safe round state (checkpoint/):
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="snapshot coordinator+ring+ledger round state here "
+                         "at round boundaries ('' = off)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="snapshot every N round boundaries")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-dir's round_state.npz "
+                         "(bitwise continuation of the interrupted run)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
@@ -166,9 +190,17 @@ def main() -> None:
                         quantize_uplink=args.quantize_uplink,
                         engine=args.engine,
                         ring_depth=args.ring_depth,
-                        obs=obs_mode)
+                        obs=obs_mode,
+                        faults=args.faults,
+                        uplink_validation=not args.no_uplink_validation,
+                        uplink_max_norm=args.uplink_max_norm,
+                        uplink_retries=args.uplink_retries,
+                        checkpoint_dir=args.checkpoint_dir,
+                        checkpoint_every=args.checkpoint_every)
     # fail before any model build: svd_rank beyond the k·r residual bound
     validate_fed_lora(fed_cfg, lora_cfg)
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     cfg = get_config(args.arch)
     if args.vocab:
@@ -191,7 +223,8 @@ def main() -> None:
         _host_only = ("assignment", "stragglers", "dropout_prob", "deadline",
                       "min_quorum", "async_buffer", "quantize_uplink",
                       "dp_clip", "dp_noise", "client_ranks", "engine",
-                      "ring_depth")
+                      "ring_depth", "uplink_retries", "checkpoint_dir",
+                      "checkpoint_every", "resume")
         ignored = [f"--{k.replace('_', '-')}" for k in _host_only
                    if getattr(args, k) != ap.get_default(k)]
         if ignored:
@@ -219,6 +252,9 @@ def main() -> None:
             eval_batches=eval_batches,
             seed=args.seed,
         )
+        if args.resume:
+            from repro.checkpoint import round_state_path
+            trainer.load_state(round_state_path(args.checkpoint_dir))
         history = trainer.run()
         if trainer.engine is not None:
             logger.info("round closes ran through the fused engine "

@@ -1,0 +1,172 @@
+"""Crash-safe round state: kill a run at a round boundary, resume it, and
+get the uninterrupted run BITWISE — params, global adapter, and history.
+
+Contracts under test (robustness tentpole, part 3):
+
+* ``FedConfig.checkpoint_dir`` makes the trainer snapshot coordinator +
+  ring + BytesLedger + loader + clock state every ``checkpoint_every``
+  round boundaries (``save_state`` / ``round_state_path``);
+* a fresh trainer that ``load_state``s the snapshot and finishes the run
+  matches the uninterrupted run bitwise — sync, FedBuff-async (in-flight
+  uplinks + snapshot versions restored), and faulty (the fault coins key
+  off absolute round indices, so resumed draws line up) — with a cosine LR
+  schedule so the step counter restoring wrong would show up immediately;
+* the component states (loader cursor/rng, SimClock, BytesLedger) round-
+  trip through their ``state_dict``/``load_state`` pairs exactly.
+"""
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import round_state_path
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import FederatedTrainer
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.fedsrv import AdapterCodec, SimClock
+from repro.fedsrv.transport import BytesLedger
+from repro.models import build_model
+
+ROUNDS = 3
+_MODEL_CACHE = {}
+
+
+def _make_trainer(fed_cfg, clients=3, vocab=16, seed=0):
+    if vocab not in _MODEL_CACHE:
+        cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                                  vocab_size=vocab)
+        _MODEL_CACHE[vocab] = build_model(cfg)
+    model = _MODEL_CACHE[vocab]
+    ds = SyntheticLM(vocab=vocab, num_tasks=clients, seed=seed)
+    seqs, labels = [], []
+    for t in range(clients):
+        n = 30 + 20 * t
+        seqs.append(ds.sample(task=t, num_sequences=n, seq_len=32,
+                              seed=seed + t))
+        labels += [t] * n
+    seqs = np.concatenate(seqs)
+    parts = dirichlet_partition(np.array(labels), clients, alpha=0.5,
+                                seed=seed)
+    loaders = [ClientLoader(seqs[p], batch_size=8, seed=seed + i)
+               for i, p in enumerate(parts)]
+    evals = [ds.to_batch(ds.sample(task=t, num_sequences=8, seq_len=32,
+                                   seed=seed + 100 + t))
+             for t in range(clients)]
+    return FederatedTrainer(
+        model=model, lora_cfg=LoRAConfig(rank=4, alpha=8), fed_cfg=fed_cfg,
+        # cosine: the LR at round r depends on the ABSOLUTE step index, so
+        # a resume that miscounts steps diverges immediately
+        train_cfg=TrainConfig(learning_rate=1e-2, schedule="cosine",
+                              total_steps=ROUNDS * fed_cfg.local_steps),
+        client_loaders=loaders, eval_batches=evals, seed=seed)
+
+
+def _assert_bitwise_runs(full, resumed):
+    assert len(full.history) == len(resumed.history) == ROUNDS
+    for a, b in zip(full.history, resumed.history):
+        assert a == b, f"history diverged at round {a.round}"
+    fa = jax.tree.leaves((full.global_lora, full.params))
+    fb = jax.tree.leaves((resumed.global_lora, resumed.params))
+    for a, b in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _kill_and_resume(fed_cfg, tmp_path, kill_after=1):
+    """Run uninterrupted; run a twin killed at ``kill_after`` rounds; resume
+    it in a FRESH trainer from the checkpoint; compare bitwise."""
+    full = _make_trainer(fed_cfg)
+    full.run()
+
+    ck = dataclasses.replace(fed_cfg, checkpoint_dir=str(tmp_path))
+    killed = _make_trainer(ck)
+    killed.run(until=kill_after)
+    assert len(killed.history) == kill_after
+
+    resumed = _make_trainer(ck)
+    resumed.load_state(round_state_path(str(tmp_path)))
+    resumed.run()
+    _assert_bitwise_runs(full, resumed)
+    return full, resumed
+
+
+class TestKillAndResume:
+    def test_sync_round_bitwise(self, tmp_path):
+        self_cfg = FedConfig(num_clients=3, rounds=ROUNDS, local_steps=2,
+                             method="fedex", participation=1.0,
+                             weighting="examples", engine="auto")
+        _kill_and_resume(self_cfg, tmp_path)
+
+    def test_async_inflight_restored_bitwise(self, tmp_path):
+        """FedBuff: the kill point leaves uplinks IN FLIGHT — the resumed
+        run must re-launch them with their original send times/versions."""
+        cfg = FedConfig(num_clients=4, rounds=ROUNDS, local_steps=2,
+                        method="fedex", async_buffer=2, latency_jitter=0.5,
+                        weighting="examples", engine="auto")
+        full, resumed = _kill_and_resume(cfg, tmp_path)
+        assert resumed.coordinator._version == full.coordinator._version
+
+    def test_faulty_run_resumes_bitwise(self, tmp_path):
+        """Fault coins key off absolute (seed, round, client): the resumed
+        half replays the SAME injections, quarantines included."""
+        cfg = FedConfig(num_clients=3, rounds=ROUNDS, local_steps=2,
+                        method="fedex", participation=1.0, engine="auto",
+                        faults="nan@1(clients=1,rounds=1)")
+        full, resumed = _kill_and_resume(cfg, tmp_path)
+        assert (1, "nonfinite") in full.outcomes[1].quarantined
+        # the resumed trainer saw rounds 1..2 only, same quarantine
+        assert (1, "nonfinite") in resumed.outcomes[0].quarantined
+
+    def test_kill_later_boundary(self, tmp_path):
+        cfg = FedConfig(num_clients=3, rounds=ROUNDS, local_steps=2,
+                        method="fedex", participation=1.0, engine="auto")
+        _kill_and_resume(cfg, tmp_path, kill_after=2)
+
+    def test_checkpoint_every_skips_rounds(self, tmp_path):
+        cfg = FedConfig(num_clients=3, rounds=2, local_steps=1,
+                        method="fedex", participation=1.0,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        tr = _make_trainer(cfg)
+        tr.run(until=1)
+        assert not os.path.exists(round_state_path(str(tmp_path)))
+        tr.run()
+        assert os.path.exists(round_state_path(str(tmp_path)))
+
+
+class TestComponentStateRoundTrips:
+    def test_loader_state(self):
+        rng = np.random.default_rng(0)
+        seqs = rng.integers(0, 16, size=(40, 8))
+        a = ClientLoader(seqs, batch_size=8, seed=3)
+        for _ in range(7):  # crosses an epoch reshuffle
+            a.next_batch()
+        state = a.state_dict()
+        want = [np.asarray(a.next_batch()["tokens"]) for _ in range(6)]
+        b = ClientLoader(seqs, batch_size=8, seed=999)  # wrong seed on purpose
+        b.load_state(state)
+        got = [np.asarray(b.next_batch()["tokens"]) for _ in range(6)]
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(w, g)
+
+    def test_clock_state(self):
+        c = SimClock()
+        c.advance_to(3.5)
+        c.advance(1.25)
+        d = SimClock()
+        d.load_state(c.state_dict())
+        assert d.now() == c.now() == 4.75
+
+    def test_ledger_state(self):
+        codec = AdapterCodec("none")
+        ledger = BytesLedger()
+        tree = {"q_proj": {"a": np.zeros((4, 2), np.float32)}}
+        ledger.record(codec.encode(tree, round_id=0, client_id=1))
+        ledger.record(codec.encode(tree, round_id=0, client_id=2),
+                      direction="quarantined")
+        restored = BytesLedger()
+        restored.load_state(ledger.state_dict())
+        assert restored.round_totals(0) == ledger.round_totals(0)
+        assert [dataclasses.asdict(e) for e in restored.entries] \
+            == [dataclasses.asdict(e) for e in ledger.entries]

@@ -1,0 +1,420 @@
+"""Seeded fault injection + the defended uplink path.
+
+Contracts under test (robustness tentpole):
+
+* the fault DSL parses, round-trips, and rejects junk at config time;
+* per-purpose rng streams: latency/dropout/fault draws come from disjoint
+  deterministic streams, so a dropped client never shifts another client's
+  fault coin and a fault plan never perturbs the clean clients;
+* every DETECTABLE payload corruption (NaN, Inf, truncated wire buffer) is
+  quarantined by the validation stage with a typed, context-carrying
+  ``TransportError``; byzantine scaling is caught iff ``max_norm`` is set;
+* transient decode failures retry with bounded backoff and degrade to a
+  quarantine past the limit;
+* the acceptance bar: a C=8 sync round under NaN + truncate + replay faults
+  closes **bitwise identical** to its crash-twin (same seed, faulty clients
+  absent) for fedex, fedex_svd, and the keep_local assignment;
+* all-lanes-quarantined rounds degrade gracefully (sync, async, and mesh —
+  where quarantined lanes must be ZEROED, not just zero-weighted, because
+  ``0·NaN = NaN``);
+* the ring drops replayed/duplicate addresses and survives id reuse after
+  wrap; the BytesLedger buckets faulty bytes under ``quarantined``/
+  ``dropped`` so ``reconcile()`` stays honest.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
+from repro.core import FederatedTrainer
+from repro.core.engine import RoundBuffers
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.fedsrv import (AdapterCodec, FaultInjector, FaultPlan,
+                          StaleUplinkError, TransportError, ValidationPolicy,
+                          purpose_rng)
+from repro.fedsrv.faults import DETECTABLE_KINDS, FAULT_STREAM
+from repro.fedsrv.registry import DROPOUT_STREAM
+from repro.fedsrv.transport import BytesLedger
+from repro.models import build_model
+from repro.util.tree import flatten_with_paths
+
+
+def _tree(seed=0, m=16, r=4, n=12):
+    rng = np.random.default_rng(seed)
+    return {"l": {"q_proj": {
+        "a": jnp.asarray(rng.normal(size=(m, r)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(r, n)), jnp.float32)}}}
+
+
+def _corrupted_payload(plan_text, *, client_id=0, round_id=0, codec=None):
+    codec = codec or AdapterCodec("none")
+    payload = codec.encode(_tree(), round_id=round_id, client_id=client_id)
+    inj = FaultInjector(FaultPlan.parse(plan_text))
+    payload, applied = inj.corrupt(payload)
+    return codec, payload, applied
+
+
+class TestFaultDSL:
+    def test_parse_fields(self):
+        plan = FaultPlan.parse(
+            "nan@0.5(clients=1+3,rounds=0+2);scale@1(factor=100);"
+            "replay@1(offset=2)", seed=7)
+        assert plan.seed == 7
+        nan, scale, replay = plan.specs
+        assert (nan.kind, nan.prob) == ("nan", 0.5)
+        assert nan.clients == (1, 3) and nan.rounds == (0, 2)
+        assert scale.kind == "scale" and scale.factor == 100.0
+        assert scale.clients is None  # every client
+        assert replay.offset == 2
+
+    def test_str_round_trip(self):
+        text = "nan@0.5(clients=1+3);truncate@1(rounds=2);crash@0.25"
+        plan = FaultPlan.parse(text)
+        assert FaultPlan.parse(str(plan)).specs == plan.specs
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultPlan.parse("gremlin@1")
+
+    def test_fedconfig_parses_plan_at_config_time(self):
+        FedConfig(num_clients=2, rounds=1, faults="nan@1(clients=0)")
+        with pytest.raises(ValueError):
+            FedConfig(num_clients=2, rounds=1, faults="gremlin@1")
+
+
+class TestPurposeStreams:
+    def test_streams_deterministic_and_disjoint(self):
+        a = purpose_rng(3, 1, 2, FAULT_STREAM, 0).integers(1 << 30)
+        b = purpose_rng(3, 1, 2, FAULT_STREAM, 0).integers(1 << 30)
+        assert a == b
+        latency = purpose_rng(3, 1, 2).integers(1 << 30)
+        dropout = purpose_rng(3, 1, 2, DROPOUT_STREAM).integers(1 << 30)
+        assert len({int(a), int(latency), int(dropout)}) == 3
+
+    def test_other_clients_do_not_shift_fault_draws(self):
+        """The fault coin for (round, client) is a pure function of the
+        seed — querying (or skipping) other clients cannot move it."""
+        plan = FaultPlan.parse("nan@0.5", seed=11)
+        full, sparse = FaultInjector(plan), FaultInjector(plan)
+        want = {}
+        for cid in range(6):
+            want[cid] = [i for i, _ in full.draws(0, cid)]
+        assert want[5] == [i for i, _ in sparse.draws(0, 5)]
+        assert want[2] == [i for i, _ in sparse.draws(0, 2)]
+
+    def test_prob_one_skips_the_coin(self):
+        """prob ≥ 1 activates without consuming a draw — plans written with
+        @1 stay stable if a probabilistic spec is added alongside."""
+        always = FaultInjector(FaultPlan.parse("nan@1(clients=0)", seed=0))
+        assert [s.kind for _, s in always.draws(0, 0)] == ["nan"]
+
+
+class TestCorruptionDetection:
+    @pytest.mark.parametrize("kind,reason", [
+        ("nan", "nonfinite"), ("inf", "nonfinite"), ("truncate", "bytes")])
+    def test_detectable_kinds_quarantined(self, kind, reason):
+        codec, payload, applied = _corrupted_payload(
+            f"{kind}@1(clients=0)", client_id=0)
+        assert [s.kind for s in applied] == [kind]
+        with pytest.raises(TransportError) as ei:
+            codec.decode(payload)
+        assert ei.value.reason == reason
+        assert ei.value.client_id == 0 and ei.value.round_id == 0
+
+    def test_detectable_kinds_is_exactly_these(self):
+        assert set(DETECTABLE_KINDS) == {"nan", "inf", "truncate"}
+
+    def test_scale_needs_norm_limit(self):
+        codec, payload, _ = _corrupted_payload("scale@1(factor=1e6)")
+        codec.decode(payload)  # max_norm=0: byzantine scaling passes
+        armed = AdapterCodec("none",
+                             validation=ValidationPolicy(max_norm=100.0))
+        with pytest.raises(TransportError) as ei:
+            armed.decode(payload)
+        assert ei.value.reason == "norm"
+
+    def test_replay_rewrites_round_id(self):
+        codec, payload, _ = _corrupted_payload(
+            "replay@1(offset=2)", round_id=5)
+        assert payload.round_id == 3  # rewound; addressing will refuse it
+
+    def test_spec_and_shape_validation(self):
+        codec = AdapterCodec("none")
+        codec.register_spec(_tree())
+        extra = dict(_tree())
+        extra["rogue"] = {"a": jnp.zeros((2, 2))}
+        with pytest.raises(TransportError) as ei:
+            codec.decode(codec.encode(extra, round_id=0, client_id=1))
+        assert ei.value.reason == "spec"
+        with pytest.raises(TransportError) as ei:
+            codec.decode(codec.encode(_tree(m=8), round_id=0, client_id=1))
+        assert ei.value.reason == "shape"
+
+    def test_clean_payload_passes_registered_spec(self):
+        codec = AdapterCodec("none")
+        codec.register_spec(_tree())
+        out = codec.decode(codec.encode(_tree(seed=3), round_id=0,
+                                        client_id=1))
+        for k, v in flatten_with_paths(_tree(seed=3)).items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          flatten_with_paths(out)[k])
+
+
+def _trainer(fed_cfg, clients=4, vocab=16, seed=0, schedule="constant"):
+    cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                              vocab_size=vocab)
+    model = build_model(cfg)
+    ds = SyntheticLM(vocab=vocab, num_tasks=clients, seed=seed)
+    seqs, labels = [], []
+    for t in range(clients):
+        n = 30 + 20 * t  # unequal shards → non-uniform example weights
+        seqs.append(ds.sample(task=t, num_sequences=n, seq_len=32,
+                              seed=seed + t))
+        labels += [t] * n
+    seqs = np.concatenate(seqs)
+    parts = dirichlet_partition(np.array(labels), clients, alpha=0.5,
+                                seed=seed)
+    loaders = [ClientLoader(seqs[p], batch_size=8, seed=seed + i)
+               for i, p in enumerate(parts)]
+    return FederatedTrainer(
+        model=model, lora_cfg=LoRAConfig(rank=4, alpha=8), fed_cfg=fed_cfg,
+        train_cfg=TrainConfig(learning_rate=1e-2, schedule=schedule),
+        client_loaders=loaders, eval_batches=[], seed=seed)
+
+
+def _leaves(tr):
+    return [np.asarray(x) for x in jax.tree.leaves((tr.global_lora,
+                                                    tr.params))]
+
+
+class TestRetryBackoff:
+    def test_transient_decode_retries_then_delivers(self):
+        tr = _trainer(FedConfig(
+            num_clients=3, rounds=1, local_steps=1, method="fedex",
+            participation=1.0, faults="decode_error@1(clients=0,count=1)",
+            uplink_retries=2))
+        tr.run()
+        out = tr.outcomes[0]
+        assert out.retries >= 1
+        assert 0 in out.client_ids  # recovered, not quarantined
+        assert not out.quarantined
+
+    def test_retries_exhausted_quarantines(self):
+        tr = _trainer(FedConfig(
+            num_clients=3, rounds=1, local_steps=1, method="fedex",
+            participation=1.0, faults="decode_error@1(clients=0,count=5)",
+            uplink_retries=1))
+        tr.run()
+        out = tr.outcomes[0]
+        assert (0, "retries_exhausted") in out.quarantined
+        assert 0 not in out.client_ids
+
+
+PLAN = "nan@1(clients=2);truncate@1(clients=5);replay@1(clients=7)"
+TWIN = "crash@1(clients=2+5+7)"
+
+
+class TestCrashTwinExactness:
+    """The acceptance bar: faulty clients contribute NOTHING — the close is
+    bitwise identical to the same-seed run where they simply crashed."""
+
+    @pytest.mark.parametrize("method,extra", [
+        ("fedex", {}),
+        ("fedex_svd", {"svd_rank": 8}),
+        ("fedex", {"assignment": "keep_local"}),
+    ], ids=["fedex", "fedex_svd", "keep_local"])
+    def test_c8_sync_round_bitwise(self, method, extra):
+        def run(plan):
+            tr = _trainer(FedConfig(
+                num_clients=8, rounds=2, local_steps=1, method=method,
+                participation=1.0, weighting="examples", engine="auto",
+                faults=plan, **extra), clients=8)
+            tr.run()
+            return tr
+
+        faulty, twin = run(PLAN), run(TWIN)
+        assert {c for c, _ in faulty.outcomes[0].quarantined} == {2, 5, 7}
+        assert sorted(faulty.outcomes[0].client_ids) \
+            == sorted(twin.outcomes[0].client_ids)
+        for a, b in zip(_leaves(faulty), _leaves(twin)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_faulty_run_is_deterministic(self):
+        runs = [_trainer(FedConfig(
+            num_clients=4, rounds=1, local_steps=1, method="fedex",
+            participation=1.0, faults="nan@0.5;truncate@0.5"))
+            for _ in range(2)]
+        for tr in runs:
+            tr.run()
+        assert runs[0].outcomes[0].quarantined \
+            == runs[1].outcomes[0].quarantined
+        for a, b in zip(_leaves(runs[0]), _leaves(runs[1])):
+            np.testing.assert_array_equal(a, b)
+
+    def test_dropout_does_not_shift_fault_coins(self):
+        """Adding dropout changes WHO uplinks, never which surviving
+        uplinks get faulted — disjoint rng streams."""
+        def quarantined(dropout):
+            tr = _trainer(FedConfig(
+                num_clients=6, rounds=2, local_steps=1, method="fedex",
+                participation=1.0, dropout_prob=dropout,
+                faults="nan@1(clients=1+4)"), clients=6)
+            tr.run()
+            return [{c for c, _ in o.quarantined} - set(o.dropped_out)
+                    for o in tr.outcomes]
+
+        base, dropped = quarantined(0.0), quarantined(0.4)
+        for rnd in range(2):
+            assert dropped[rnd] <= base[rnd]  # only dropouts differ
+
+
+class TestDegradedRounds:
+    def test_sync_all_quarantined_carries_global_forward(self):
+        tr = _trainer(FedConfig(
+            num_clients=3, rounds=2, local_steps=1, method="fedex",
+            participation=1.0, faults="nan@1(rounds=0)"))
+        before = _leaves(tr)
+        hist = tr.run()
+        out = tr.outcomes[0]
+        assert out.degraded and not out.delivered
+        assert {c for c, _ in out.quarantined} == {0, 1, 2}
+        # round 1 recovered: clean uplinks, global moved
+        assert tr.outcomes[1].delivered and not tr.outcomes[1].degraded
+        assert len(hist) == 2
+        for leaf in _leaves(tr):
+            assert np.isfinite(leaf).all()
+        # the degraded round itself changed nothing
+        tr2 = _trainer(FedConfig(
+            num_clients=3, rounds=1, local_steps=1, method="fedex",
+            participation=1.0, faults="nan@1(rounds=0)"))
+        tr2.run()
+        for a, b in zip(before, _leaves(tr2)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_async_all_quarantined_holds_version(self):
+        tr = _trainer(FedConfig(
+            num_clients=3, rounds=2, local_steps=1, method="fedex",
+            async_buffer=2, faults="nan@1(rounds=0)"))
+        tr.run()
+        assert tr.outcomes[0].degraded and not tr.outcomes[0].delivered
+        assert not tr.outcomes[1].degraded
+        for leaf in _leaves(tr):
+            assert np.isfinite(leaf).all()
+
+    def test_mesh_quarantine_zeroes_lane_not_just_weight(self):
+        """Regression: a NaN lane must be ZEROED before the mesh close —
+        zero-weight masking alone leaks NaN (0·NaN = NaN)."""
+        from repro.launch.mesh_train import MeshFederatedTrainer
+
+        cfg = dataclasses.replace(get_config("paper-tiny"), dtype="float32",
+                                  vocab_size=16)
+        model = build_model(cfg)
+        ds = SyntheticLM(vocab=16, num_tasks=3, seed=0)
+        loaders = [ClientLoader(
+            ds.sample(task=t, num_sequences=12, seq_len=16, seed=t),
+            batch_size=4, seed=t) for t in range(3)]
+        evals = [ds.to_batch(ds.sample(task=0, num_sequences=8, seq_len=16,
+                                       seed=100))]
+        tr = MeshFederatedTrainer(
+            model=model, lora_cfg=LoRAConfig(rank=4, alpha=8),
+            fed_cfg=FedConfig(num_clients=3, rounds=2, local_steps=1,
+                              method="fedex", participation=1.0,
+                              weighting="examples",
+                              faults="nan@1(clients=1)"),
+            train_cfg=TrainConfig(learning_rate=1e-2, schedule="constant"),
+            client_loaders=loaders, eval_batches=evals, seed=0)
+        hist = tr.run()
+        assert len(hist) == 2
+        for rec in hist:
+            assert np.isfinite(rec.eval_loss)
+        for leaf in jax.tree.leaves((tr.global_lora, tr.params)):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+
+def _flat(val, m=6, r=2, n=4):
+    return flatten_with_paths(
+        {"blk": {"q_proj": {"a": jnp.full((m, r), float(val)),
+                            "b": jnp.full((r, n), float(val))}}})
+
+
+def _ring_template(m=6, r=2, n=4):
+    return {"blk": {"q_proj": {"a": jnp.zeros((m, r)),
+                               "b": jnp.zeros((r, n))}}}
+
+
+class TestRingFaultEdges:
+    def test_duplicate_lane_write_dropped(self):
+        bufs = RoundBuffers(_ring_template(), c_max=2, depth=2)
+        bufs.begin_round({0: 0, 1: 1}, round_id=0)
+        assert bufs.write_flat(0, _flat(1.0), round_id=0)
+        assert not bufs.write_flat(0, _flat(9.0), round_id=0)
+        assert bufs.duplicate_drops == 1
+        stacks = bufs.take()
+        assert float(stacks["blk/q_proj/a"][0, 0, 0]) == 1.0  # first write won
+
+    def test_write_after_eviction_dropped_not_duplicate(self):
+        bufs = RoundBuffers(_ring_template(), c_max=2, depth=2)
+        bufs.begin_round({0: 0}, round_id=0)
+        bufs.evict(0)
+        assert not bufs.write_flat(0, _flat(1.0), round_id=0)
+        assert not bufs.write_flat(0, _flat(1.0), round_id=0)
+        assert bufs.duplicate_drops == 0  # stale, not a duplicate lane
+
+    def test_replay_races_begin_round_after_wrap(self):
+        """A replayed uplink for a CLOSED round id must be refused even
+        while the ring wraps — and a legitimate id reuse (begin_round with
+        the same id much later) starts clean."""
+        bufs = RoundBuffers(_ring_template(), c_max=1, depth=2)
+        bufs.begin_round({7: 0}, round_id=0)
+        bufs.write_flat(7, _flat(1.0), round_id=0)
+        bufs.take()  # round 0 closed
+        bufs.begin_round({7: 0}, round_id=1)
+        bufs.begin_round({7: 0}, round_id=2)  # ring wrapped past round 0
+        drops = bufs.replay_drops
+        assert not bufs.write_flat(7, _flat(6.0), round_id=0)  # replay
+        assert bufs.replay_drops == drops + 1
+        bufs.take()
+        bufs.take()
+        bufs.begin_round({7: 0}, round_id=0)  # id reuse: fresh round
+        assert bufs.write_flat(7, _flat(3.0), round_id=0)
+        assert float(bufs.take()["blk/q_proj/a"][0, 0, 0]) == 3.0
+
+
+class TestLedgerDirections:
+    def test_fault_directions_bucketed_separately(self):
+        codec = AdapterCodec("none")
+        ledger = BytesLedger()
+        p = codec.encode(_tree(), round_id=0, client_id=1)
+        ledger.record(p, direction="quarantined", note="nonfinite")
+        tot = ledger.round_totals(0)
+        assert tot["quarantined_params"] == p.num_params
+        assert tot["uplink_params"] == 0  # faulty bytes never hide here
+
+    def test_reclassify_downlink_of_quarantined_client(self):
+        codec = AdapterCodec("none")
+        ledger = BytesLedger()
+        down = codec.encode(_tree(), round_id=0, client_id=1,
+                            direction="downlink")
+        ledger.record(down)
+        assert ledger.reclassify(0, 1, "downlink", "dropped", note="q")
+        tot = ledger.round_totals(0)
+        assert tot["downlink_params"] == 0
+        assert tot["dropped_params"] == down.num_params
+        assert not ledger.reclassify(0, 9, "downlink", "dropped")
+
+    def test_trainer_ledger_reconciles_with_quarantine(self):
+        """End-to-end: the faulty round's ledger carries quarantined bytes
+        AND still reconciles delivered params against the analytic form."""
+        tr = _trainer(FedConfig(
+            num_clients=4, rounds=1, local_steps=1, method="fedex",
+            participation=1.0, faults="nan@1(clients=1)"))
+        tr.run()
+        tot = tr.ledger.round_totals(0)
+        assert tot.get("quarantined_params", 0) > 0
+        assert tot["uplink_params"] > 0
+        # per-client uplink params are equal ⇒ delivered = 3 of 4 shares
+        assert tot["uplink_params"] * 1 == tot["quarantined_params"] * 3
