@@ -32,6 +32,12 @@ composition of ``fedex_aggregate + apply_residual`` (it must be — same op
 sequence), plus the max |Δ| against the eager path (≤ a few ulp of FMA
 contraction; ~1e-5 relative for the svd close — Gram squaring).
 
+A third tier, ``close_vs_c``, sweeps client count C with stacked vs CHUNKED
+closes (``FedConfig.close_chunk``): close latency, ingest wall time and the
+engine's analytic peak live-device-bytes per mode, asserting the chunked
+close breaks the C_max memory wall (peak stays within 1.25× of a stacked
+C=chunk close at the largest swept C).
+
 Emits ``BENCH_aggregation.json`` so the perf trajectory is recorded:
 
   PYTHONPATH=src python -m benchmarks.aggregation_bench [--quick] [--out F]
@@ -226,7 +232,100 @@ def run_bench(quick: bool = False) -> Dict:
 
     result["obs_overhead"] = _obs_overhead(params, lora_t, loras, c, scale,
                                            backend, reps)
+    result["close_vs_c"] = _close_vs_c(quick, backend)
     return result
+
+
+def _close_vs_c(quick: bool, backend: str) -> Dict:
+    """Close latency + analytic peak device memory vs client count C,
+    stacked vs chunked (the C_max memory wall sweep).
+
+    For each C the same uplink stream is closed both ways: the classic
+    stacked ``(C, …)`` close, and the chunked engine (``close_chunk``) whose
+    ring folds full chunks eagerly at ingest. ``stream_us`` is the total
+    ingest wall time (the chunked mode pays its partial folds HERE, off the
+    deadline-critical path), ``close_us`` the take-to-divergence-resolved
+    close. Peaks are the engine's analytic live-device-bytes accounting —
+    identical formula on every backend (donation-aware), so the CPU
+    container models accelerator residency.
+
+    The headline assertion (``memory_ok``): the chunked close at the largest
+    swept C stays within 1.25× the peak of a STACKED close at C = chunk —
+    i.e. peak close memory is O(chunk), not O(C). A C below the chunk size
+    takes the stacked path by the auto contract (its row shows mode
+    "stacked(auto)")."""
+    cs = (8, 32) if quick else (8, 32, 128, 512)
+    chunk = 16 if quick else 64
+    layers, m, n, r = 2, 128, 128, 8
+    scale = 2.0
+    reps = 2 if quick else 3
+    cs = tuple(sorted(set(cs) | {chunk}))
+    rng = np.random.default_rng(7)
+    mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    params = {"blocks": {"q_proj": {"kernel": mk((layers, m, n))}}}
+    lora_t = {"blocks": {"q_proj": {"a": mk((layers, m, r)),
+                                    "b": mk((layers, r, n))}}}
+    c_top = max(cs)
+    # ONE host pool of client factors, sliced per C (generation is not the
+    # thing under test)
+    pool = [{"blocks": {"q_proj": {"a": rng.normal(size=(layers, m, r)
+                                                   ).astype(np.float32),
+                                   "b": rng.normal(size=(layers, r, n)
+                                                   ).astype(np.float32)}}}
+            for _ in range(c_top)]
+
+    def _measure(c: int, eng_chunk: int) -> Dict:
+        eng = RoundCloseEngine(params, lora_t, c_max=c, scale=scale,
+                               method="fedex", backend=backend, donate=False,
+                               chunk=eng_chunk)
+        ids = list(range(c))
+        stream_us, close_us, peak = [], [], 0
+        chunked = False
+        for rep in range(reps + 1):  # rep 0 = compile warmup
+            t0 = time.perf_counter()
+            eng.buffers.begin_round({i: i for i in ids}, round_id=rep)
+            for i in ids:
+                eng.buffers.write(i, pool[i], round_id=rep, weight=1.0)
+            t1 = time.perf_counter()
+            chunked = eng.buffers.is_chunked(rep)
+            _, new_params, div = eng.close(params, ids, round_id=rep)
+            jax.block_until_ready(
+                new_params["blocks"]["q_proj"]["kernel"])
+            div.resolve()
+            t2 = time.perf_counter()
+            peak = eng.last_peak_bytes
+            if rep:
+                stream_us.append(1e6 * (t1 - t0))
+                close_us.append(1e6 * (t2 - t1))
+        return {"stream_us": round(min(stream_us), 1),
+                "close_us": round(min(close_us), 1),
+                "peak_bytes": int(peak),
+                "mode": ("chunked" if chunked else
+                         ("stacked(auto)" if eng_chunk else "stacked"))}
+
+    sweep = []
+    for c in cs:
+        stacked = _measure(c, 0)
+        chunked = _measure(c, chunk)
+        sweep.append({"c": c,
+                      "stacked": stacked, "chunked": chunked,
+                      "close_speedup": round(
+                          stacked["close_us"] / chunked["close_us"], 2),
+                      "peak_ratio_vs_stacked": round(
+                          chunked["peak_bytes"] / stacked["peak_bytes"], 3)})
+    baseline = next(s for s in sweep if s["c"] == chunk)["stacked"]
+    top = next(s for s in sweep if s["c"] == c_top)["chunked"]
+    ratio = top["peak_bytes"] / baseline["peak_bytes"]
+    return {"chunk": chunk,
+            "geometry": {"layers": layers, "m": m, "n": n, "rank": r,
+                         "projections": 1},
+            "sweep": sweep,
+            "baseline_stacked_at_chunk_peak_bytes": baseline["peak_bytes"],
+            "top_chunked_peak_bytes": top["peak_bytes"],
+            "memory_ratio_vs_stacked_chunk": round(ratio, 3),
+            "memory_ok": bool(ratio <= 1.25),
+            "claim": (f"chunked close at C={c_top} stays ≤ 1.25× the peak "
+                      f"device bytes of a stacked C={chunk} close")}
 
 
 def _obs_overhead(params, lora_t, loras, c, scale, backend, reps) -> Dict:
@@ -296,6 +395,20 @@ def run(quick: bool = False) -> List[str]:
     rows.append(csv_row("aggregation/obs_overhead", ov["trace_us"],
                         f"off_us={ov['off_us']};"
                         f"overhead_pct={ov['overhead_pct']}"))
+    cv = result["close_vs_c"]
+    for s in cv["sweep"]:
+        rows.append(csv_row(
+            f"aggregation/close_vs_c/{s['c']}", s["chunked"]["close_us"],
+            f"stacked_close_us={s['stacked']['close_us']};"
+            f"stacked_peak_B={s['stacked']['peak_bytes']};"
+            f"chunked_peak_B={s['chunked']['peak_bytes']};"
+            f"mode={s['chunked']['mode']}"))
+    rows.append(csv_row(
+        "aggregation/close_vs_c/memory_wall",
+        cv["top_chunked_peak_bytes"],
+        f"baseline_B={cv['baseline_stacked_at_chunk_peak_bytes']};"
+        f"ratio={cv['memory_ratio_vs_stacked_chunk']};"
+        f"memory_ok={cv['memory_ok']}"))
     return rows
 
 

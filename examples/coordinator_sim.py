@@ -191,6 +191,62 @@ def run_chaos(faults: str, model, recorder, rounds: int):
     assert all_ok, "faulty-run close diverged from its crash-twin"
 
 
+def large_c_smoke():
+    """Large-C chunked close smoke (CI's memory-wall witness): a C=256 round
+    streamed through the CHUNKED engine (close_chunk=32) must (a) keep the
+    analytic peak live device bytes of its close BELOW a stacked C=32 close
+    of the same geometry — peak is O(chunk), not O(C) — and (b) produce the
+    same fold as the eager oracle W0 + scale·(Σwᵢaᵢbᵢ − āb̄)."""
+    print("\n=== large-C chunked close (C=256, chunk=32) ===")
+    from repro.core.engine import RoundCloseEngine
+
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    layers, m, r, n = 2, 64, 4, 64
+    c_big, c_small, chunk = 256, 32, 32
+    params = {"q_proj": {"kernel": jnp.asarray(
+        rng.normal(size=(layers, m, n)), jnp.float32)}}
+    mk = lambda: {"q_proj": {
+        "a": jnp.asarray(rng.normal(size=(layers, m, r)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(layers, r, n)), jnp.float32)}}
+    tmpl = mk()
+    loras = [mk() for _ in range(c_big)]
+    scale = 2.0
+
+    def close_with(c, eng_chunk):
+        eng = RoundCloseEngine(params, tmpl, c_max=c, scale=scale,
+                               method="fedex", backend="jnp", chunk=eng_chunk)
+        eng.buffers.begin_round({i: i for i in range(c)}, round_id=0)
+        for i in range(c):
+            eng.buffers.write(i, loras[i], round_id=0, weight=1.0)
+        chunked = eng.buffers.is_chunked(0)
+        g, new_params, div = eng.close(params, list(range(c)), round_id=0)
+        div.resolve()
+        return eng.last_peak_bytes, chunked, g, new_params
+
+    stacked_peak, _, _, _ = close_with(c_small, 0)
+    chunked_peak, chunked, g, new_params = close_with(c_big, chunk)
+    assert chunked, "C=256 with chunk=32 must take the chunked close"
+    print(f"  peak close bytes: chunked C={c_big} = {chunked_peak:,} "
+          f"vs stacked C={c_small} = {stacked_peak:,} "
+          f"(ratio {chunked_peak / stacked_peak:.3f})")
+    assert chunked_peak < stacked_peak, (
+        f"chunked C={c_big} close peaked at {chunked_peak} B — not below "
+        f"the stacked C={c_small} baseline {stacked_peak} B")
+
+    # eager oracle over the full 256-client list: ā b̄ and the dense residual
+    ga, res = fedex_aggregate(loras)
+    oracle_w0 = params["q_proj"]["kernel"] + scale * res["q_proj"]
+    err_w0 = float(jnp.max(jnp.abs(new_params["q_proj"]["kernel"] - oracle_w0)))
+    err_g = max(float(jnp.max(jnp.abs(g["q_proj"][f] - ga["q_proj"][f])))
+                for f in ("a", "b"))
+    print(f"  max |W0 − eager oracle| = {err_w0:.2e}, "
+          f"max |global factors − fedavg| = {err_g:.2e}")
+    assert err_w0 < 1e-4 and err_g < 1e-5, (
+        f"chunked C={c_big} close diverged from the eager oracle")
+    print(f"  [{time.time() - t0:.1f}s]")
+
+
 def exactness_check():
     """Direct coordinator round on synthetic adapters: the folded weighted
     residual reproduces W0 + scale·Σwᵢaᵢbᵢ over the delivered subset."""
@@ -236,6 +292,10 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="scenarios 1 + 3 only, 2 rounds each (the CI obs "
                          "smoke configuration)")
+    ap.add_argument("--large-c", action="store_true",
+                    help="run the C=256 chunked-close memory-wall smoke "
+                         "(peak bytes below a stacked C=32 close + eager-"
+                         "oracle agreement); CI runs this with --quick")
     ap.add_argument("--faults", nargs="?", const=DEFAULT_CHAOS_PLAN,
                     default="",
                     help="also run the chaos scenario under this fault plan "
@@ -292,6 +352,8 @@ def main():
     if args.faults:
         run_chaos(args.faults, model, rec, rounds=2 if args.quick else 3)
     exactness_check()
+    if args.large_c:
+        large_c_smoke()
     if rec is not None:
         rec.set_run(None)
         print()

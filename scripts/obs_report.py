@@ -4,9 +4,14 @@
 Reads the JSONL written by ``Recorder.write_metrics`` (launch/train.py
 ``--metrics-out``, examples/coordinator_sim.py ``--metrics-out``) and prints
 a per-round table: client counts (sampled / delivered / stragglers /
-dropouts), close latency split into dispatch vs block-until-ready, ring
-occupancy / evictions / stale drops, ledger bytes, divergence, compile-cache
-misses and the measured-vs-analytic comm reconciliation flag.
+dropouts), close latency split into dispatch vs block-until-ready,
+chunked-close stats (chunked flag / eager partial folds / analytic peak
+close bytes), ring occupancy / evictions / stale drops, ledger bytes,
+divergence, compile-cache misses and the measured-vs-analytic comm
+reconciliation flag. Counter/gauge/histogram snapshots (including the
+``uplink.ingest_bytes_per_s`` throughput gauge and the
+``close.partial_folds`` / ``close.chunk_flush_us`` chunked-fold metrics)
+print below the table.
 
 ``--check`` turns the report into an assertion pass (CI's obs smoke step):
 
@@ -17,10 +22,12 @@ misses and the measured-vs-analytic comm reconciliation flag.
   with core/comm.py's closed form);
 * with spans in the stream (obs=trace): the Chrome trace (``--trace``) is
   structurally valid, and the OVERLAP INVARIANT holds — for consecutive
-  closed rounds N, N+1 of the same run, round N+1's ``ring.write`` spans
-  intersect round N's close window [``close.dispatch`` start,
-  ``divergence.resolve`` end]. This is the trace-level proof that the ring
-  streams the next round's uplinks while the previous close is in flight.
+  closed rounds N, N+1 of the same run, round N+1's ``ring.write`` (or, in
+  chunked-close mode, ``close.partial_fold``) spans intersect round N's
+  close window [``close.dispatch`` start, ``divergence.resolve`` end]. This
+  is the trace-level proof that the ring streams the next round's uplinks —
+  and eagerly folds its full chunks — while the previous close is in
+  flight.
 
   PYTHONPATH=src python scripts/obs_report.py metrics.jsonl
   PYTHONPATH=src python scripts/obs_report.py metrics.jsonl --trace trace.json --check
@@ -65,7 +72,9 @@ _COLS = [
     ("delivered", "dlv"), ("stragglers", "strg"), ("dropped_out", "drop"),
     ("deadline_drops", "late"), ("quarantined", "quar"),
     ("degraded", "degr"), ("close_dispatch_us", "dispatch_us"),
-    ("close_block_us", "block_us"), ("ring_occupancy", "occ"),
+    ("close_block_us", "block_us"), ("chunked", "chnk"),
+    ("partial_folds", "pfold"), ("peak_bytes", "peak_B"),
+    ("ring_occupancy", "occ"),
     ("ring_evictions", "evict"), ("stale_drops", "stale"),
     ("uplink_bytes", "up_B"), ("downlink_bytes", "down_B"),
     ("divergence", "divergence"), ("compile_miss", "miss"),
@@ -114,22 +123,29 @@ def _closed_rounds(spans: List[Dict[str, Any]]
             if "start" in w and "end" in w}
 
 
+# witnesses of round N+1 progressing: raw uplink landings AND (chunked-close
+# mode) the eager partial folds they trigger
+_OVERLAP_WITNESSES = ("ring.write", "close.partial_fold")
+
+
 def check_overlap(spans: List[Dict[str, Any]]) -> Tuple[List[str], List[str]]:
     """Verify the overlap invariant; returns (proven lines, failures).
 
     Only consecutive closed-round pairs (N, N+1) of the SAME run where round
-    N+1 actually produced ``ring.write`` spans are checked — a run's last
-    round has no successor and non-engine paths write no ring spans.
+    N+1 actually produced witness spans (``ring.write``, or the chunked
+    ring's eager ``close.partial_fold``) are checked — a run's last round
+    has no successor and non-engine paths write no ring spans.
     """
     windows = _closed_rounds(spans)
-    writes: Dict[Tuple[Any, Any], List[Tuple[float, float]]] = defaultdict(list)
+    writes: Dict[Tuple[Any, Any],
+                 List[Tuple[float, float, str]]] = defaultdict(list)
     for s in spans:
-        if s["name"] != "ring.write":
+        if s["name"] not in _OVERLAP_WITNESSES:
             continue
         rid = s.get("args", {}).get("round")
         if rid is not None:
             writes[(s.get("run"), rid)].append(
-                (s["ts_us"], s["ts_us"] + s["dur_us"]))
+                (s["ts_us"], s["ts_us"] + s["dur_us"], s["name"]))
 
     proven, failures = [], []
     for (run, rid), w in sorted(windows.items(),
@@ -138,17 +154,20 @@ def check_overlap(spans: List[Dict[str, Any]]) -> Tuple[List[str], List[str]]:
         if nxt not in windows or nxt not in writes:
             continue
         lo, hi = w["start"], w["end"]
-        hits = sum(1 for (a, b) in writes[nxt] if a < hi and b > lo)
+        hit_names = sorted({name for (a, b, name) in writes[nxt]
+                            if a < hi and b > lo})
+        hits = sum(1 for (a, b, _) in writes[nxt] if a < hi and b > lo)
         tag = f"run={run} round={rid}→{rid + 1}"
         if hits:
-            proven.append(f"  {tag}: {hits}/{len(writes[nxt])} ring.write "
-                          f"span(s) overlap the close window "
-                          f"[{lo:.0f}, {hi:.0f}]us")
+            proven.append(f"  {tag}: {hits}/{len(writes[nxt])} "
+                          f"{'/'.join(hit_names)} span(s) overlap the close "
+                          f"window [{lo:.0f}, {hi:.0f}]us")
         else:
             failures.append(
                 f"{tag}: none of round {rid + 1}'s {len(writes[nxt])} "
-                f"ring.write spans intersect round {rid}'s close window "
-                f"[{lo:.0f}, {hi:.0f}]us — the ring did not overlap the close")
+                f"{'/'.join(_OVERLAP_WITNESSES)} spans intersect round "
+                f"{rid}'s close window [{lo:.0f}, {hi:.0f}]us — the ring "
+                "did not overlap the close")
     return proven, failures
 
 
@@ -282,6 +301,8 @@ def main(argv=None) -> int:
         print()
         for name in sorted(counters.get("counters", {})):
             print(f"counter {name} = {counters['counters'][name]}")
+        for name in sorted(counters.get("gauges", {})):
+            print(f"gauge   {name} = {counters['gauges'][name]}")
         for name, s in sorted(counters.get("histograms", {}).items()):
             if s.get("count"):
                 print(f"hist    {name}: n={s['count']} mean={s['mean']:.1f} "

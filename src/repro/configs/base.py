@@ -217,6 +217,14 @@ class FedConfig:
     # it (stale uplinks for them are dropped).
     ring_depth: int = 2
     ring_max_lag: int = 1
+    # chunked streaming round closes (core/engine.py chunked ring mode):
+    # 0 → the classic stacked (C_max, …) close; N ≥ 1 → uplinks accumulate
+    # in fixed-size N-client chunks, each full chunk folding eagerly on the
+    # device while later uplinks keep streaming, so peak close memory is
+    # O(chunk) instead of O(C). Auto semantics: a round whose candidate set
+    # fits in one chunk still takes the stacked close, preserving the
+    # stacked path's bitwise contract for small rounds.
+    close_chunk: int = 0
     # observability mode (repro.obs): "off" → shared zero-overhead no-op
     # recorder, "basic" → metrics + per-round records, "trace" → spans too
     # (Chrome trace-event export). The launcher's --trace/--metrics-out
@@ -260,6 +268,10 @@ class FedConfig:
             raise ValueError(
                 f"ring_max_lag must be ≥ 1, got {self.ring_max_lag} "
                 "(a commit may always lag up to its own version)")
+        if self.close_chunk < 0:
+            raise ValueError(
+                f"close_chunk must be ≥ 0, got {self.close_chunk} "
+                "(0 → stacked closes, N ≥ 1 → N-client streaming chunks)")
         if self.obs not in ("off", "basic", "trace"):
             raise ValueError(f"unknown obs mode {self.obs!r} "
                              "(off | basic | trace)")

@@ -227,6 +227,58 @@ def _resolve_backend(backend: str) -> str:
     return backend
 
 
+def _tree_bytes(tree: Any) -> int:
+    """Total array bytes of a (nested) container of array leaves."""
+    return sum(int(getattr(x, "nbytes", 0)) for x in jax.tree.leaves(tree))
+
+
+class _ProgramCache:
+    """Bounded LRU of the engine's jitted close/fold programs.
+
+    The stacked engine held exactly one program; the chunked mode multiplies
+    signatures (partial fold, per-method finalize, keep_local per-chunk fold,
+    the svd Gram/core/projection programs) and long-lived processes that
+    rebuild engines would otherwise grow the population without bound.
+    Eviction drops the least-recently-used program — it recompiles on next
+    use, so correctness is unaffected — and is observable: the
+    ``engine.compile_cache_size`` gauge tracks the population and the
+    ``close.compile_evicted`` counter every eviction.
+    """
+
+    def __init__(self, cap: int = 16):
+        if cap < 1:
+            raise ValueError(f"program cache cap must be ≥ 1, got {cap}")
+        self.cap = cap
+        self.evictions = 0
+        self._programs: "OrderedDict[Any, Any]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def __contains__(self, key) -> bool:
+        return key in self._programs
+
+    def get(self, key, build, rec=NULL):
+        """Return the cached program for ``key``, building (and possibly
+        evicting the LRU entry) on a miss."""
+        prog = self._programs.get(key)
+        if prog is None:
+            prog = build()
+            self._programs[key] = prog
+            while len(self._programs) > self.cap:
+                old, _ = self._programs.popitem(last=False)
+                self.evictions += 1
+                if rec.enabled:
+                    rec.counter("close.compile_evicted").inc()
+                logger.info("evicted close program %r (cache cap %d)",
+                            old, self.cap)
+        else:
+            self._programs.move_to_end(key)
+        if rec.enabled:
+            rec.gauge("engine.compile_cache_size").set(len(self._programs))
+        return prog
+
+
 # --------------------------------------------------------------------------
 # factor specs: pair every lora {a, b} node with its W0 leaf in params
 # --------------------------------------------------------------------------
@@ -373,13 +425,34 @@ class RoundBuffers:
     """
 
     def __init__(self, lora_template: Params, c_max: int, depth: int = 2,
-                 recorder=None):
+                 recorder=None, *, chunk: int = 0, on_chunk=None,
+                 retain_chunks: bool = False):
         if c_max < 1:
             raise ValueError("c_max must be ≥ 1")
         if depth < 1:
             raise ValueError("depth must be ≥ 1")
+        if chunk < 0:
+            raise ValueError(f"chunk must be ≥ 0, got {chunk}")
+        if chunk > 0 and on_chunk is None:
+            raise ValueError("a chunked ring needs an on_chunk fold callback")
         self.c_max = c_max
         self.depth = depth
+        # chunked streaming mode: rounds with more than ``chunk`` candidate
+        # lanes stage uplinks in (chunk, …) host buffers; each chunk that
+        # fills (and is next in SLOT order) is eagerly folded into a running
+        # accumulator via ``on_chunk(acc, chunk_stacks, raw_weights, rid, k)``
+        # while later uplinks keep streaming. Determinism rule: chunk k never
+        # folds before chunks < k, so the fold sequence is a pure function of
+        # the slot assignment — never of uplink arrival order — and two runs
+        # (or a crash twin) produce bitwise-identical accumulators.
+        # ``retain_chunks`` keeps folded chunks' host buffers (keep_local and
+        # fedex_svd closes re-stream them); rounds that fit in one chunk take
+        # the classic stacked path so small rounds keep the stacked bitwise
+        # contract ("auto" semantics of FedConfig.close_chunk).
+        self.chunk = chunk
+        self.on_chunk = on_chunk
+        self.retain_chunks = retain_chunks
+        self.partial_folds = 0  # eager (mid-round) chunk folds, all rounds
         self.rec = recorder if recorder is not None else NULL
         flat = flatten_with_paths(lora_template)
         self._shapes = {p: tuple(x.shape) for p, x in flat.items()}
@@ -416,6 +489,14 @@ class RoundBuffers:
             return {p: np.zeros((self.c_max,) + s, np.float32)
                     for p, s in self._shapes.items()}
         return {p: jnp.zeros((self.c_max,) + s, jnp.float32)
+                for p, s in self._shapes.items()}
+
+    def _alloc_chunk(self):
+        # chunk staging is ALWAYS host numpy (every backend): the eager fold
+        # pays one host→device conversion per chunk, and partially written
+        # chunks stay cheaply checkpointable (state_dict slices them out
+        # without a device sync)
+        return {p: np.zeros((self.chunk,) + s, np.float32)
                 for p, s in self._shapes.items()}
 
     def _entry(self, round_id=None) -> Tuple[Any, Dict[str, Any]]:
@@ -468,11 +549,29 @@ class RoundBuffers:
                 f"{list(self._open)}) — take() the oldest before opening "
                 "another, or give open rounds a deadline so a full ring can "
                 "evict them")
-        self._open[round_id] = {"slots": dict(slots), "written": {},
-                                "stacks": self._alloc(), "deadline": deadline}
+        # "auto" chunking contract: a round whose candidate set fits in one
+        # chunk takes the classic stacked path (same program, same bitwise
+        # behaviour as a chunk=0 ring); larger rounds stream in chunks
+        chunked = 0 < self.chunk < len(slots)
+        entry: Dict[str, Any] = {"slots": dict(slots), "written": {},
+                                 "deadline": deadline, "chunked": chunked}
+        if chunked:
+            num_chunks = max(slots.values()) // self.chunk + 1
+            expected = [0] * num_chunks
+            for s in slots.values():
+                expected[s // self.chunk] += 1
+            entry.update(
+                stacks=None, chunks={}, retained={}, acc=None,
+                w=np.zeros(num_chunks * self.chunk, np.float32),
+                next_chunk=0, num_chunks=num_chunks, expected=expected,
+                filled=[0] * num_chunks, eager_folds=0)
+        else:
+            entry["stacks"] = self._alloc()
+        self._open[round_id] = entry
         if self.rec.enabled:
             self.rec.event("ring.begin", cat="ring", round=round_id,
-                           lanes=len(slots), deadline=deadline)
+                           lanes=len(slots), deadline=deadline,
+                           chunked=chunked)
             self.rec.gauge("ring.occupancy").set(len(self._open))
         return round_id
 
@@ -497,7 +596,7 @@ class RoundBuffers:
         return dict(e["written"])
 
     def write_flat(self, client_id: int, flat: Dict[str, Any],
-                   round_id=None) -> bool:
+                   round_id=None, *, weight: Optional[float] = None) -> bool:
         """Scatter one client's decoded adapter leaves into its lane.
 
         ``round_id=None`` routes to the oldest open round that has a lane for
@@ -509,7 +608,13 @@ class RoundBuffers:
         ``None`` there is no payload identity to check against the evicted
         set, so a late uplink could land in a newer open round that also has
         a lane for this client. Any caller that evicts (the coordinators, via
-        ``decode_into``) must route by the payload's round_id — they do."""
+        ``decode_into``) must route by the payload's round_id — they do.
+
+        ``weight`` is this uplink's RAW (unnormalised) aggregation weight —
+        chunked rounds fold it into the running accumulators at ingest, so
+        the caller must stream the same weighting it will close with (the
+        close cross-checks and raises on a mismatch). Defaults to 1.0
+        (uniform); stacked rounds ignore it (they weight at close time)."""
         if round_id is None:
             for rid, e in self._open.items():
                 if client_id in e["slots"]:
@@ -557,7 +662,16 @@ class RoundBuffers:
         # N+1 write intervals must land inside round N's close window
         with self.rec.span("ring.write", cat="ring", round=round_id,
                            client=client_id):
-            if self._host:
+            if e["chunked"]:
+                k, row = divmod(slot, self.chunk)
+                buf = e["chunks"].get(k)
+                if buf is None:
+                    buf = e["chunks"].setdefault(k, self._alloc_chunk())
+                for p in self._shapes:
+                    buf[p][row] = np.asarray(flat[p], np.float32)
+                e["w"][slot] = np.float32(1.0 if weight is None else weight)
+                e["filled"][k] += 1
+            elif self._host:
                 for p in self._shapes:
                     e["stacks"][p][slot] = np.asarray(flat[p], np.float32)
             else:
@@ -565,11 +679,58 @@ class RoundBuffers:
                 e["stacks"] = self._scatter(e["stacks"], jnp.int32(slot),
                                             leaves)
         e["written"][client_id] = slot
+        if e["chunked"]:
+            self._cascade(round_id, e)
         return True
 
-    def write(self, client_id: int, lora_tree: Params, round_id=None) -> bool:
+    def write(self, client_id: int, lora_tree: Params, round_id=None, *,
+              weight: Optional[float] = None) -> bool:
         return self.write_flat(client_id, flatten_with_paths(lora_tree),
-                               round_id)
+                               round_id, weight=weight)
+
+    # -- chunked fold cascade ----------------------------------------------
+    def _cascade(self, rid, e) -> None:
+        """Eagerly fold every complete chunk that is NEXT IN SLOT ORDER.
+
+        A full chunk k only folds once chunks < k have folded — the fold
+        sequence (and therefore the accumulator value) is a pure function of
+        the slot assignment and the delivered payloads, never of arrival
+        order. A full out-of-order chunk simply waits its turn."""
+        while (e["next_chunk"] < e["num_chunks"]
+               and e["filled"][e["next_chunk"]]
+               == e["expected"][e["next_chunk"]]):
+            self._fold_next(rid, e, eager=True)
+
+    def _fold_next(self, rid, e, *, eager: bool) -> None:
+        k = e["next_chunk"]
+        buf = e["chunks"].pop(k, None)
+        if buf is None:
+            # nothing of this chunk was delivered: zero rows with zero
+            # weights fold as an exact no-op, keeping every fold the same
+            # (chunk, …) program signature
+            buf = self._alloc_chunk()
+        w = np.asarray(e["w"][k * self.chunk:(k + 1) * self.chunk])
+        t0 = time.perf_counter_ns()
+        # eager folds are the chunked path's overlap witnesses (the obs
+        # report joins them with ring.write spans); close-time flushes of
+        # trailing partial chunks use their own span name
+        span = "close.partial_fold" if eager else "close.chunk_flush"
+        with self.rec.span(span, cat="engine", round=rid, chunk=k):
+            e["acc"] = self.on_chunk(e["acc"], buf, w, rid, k)
+        if self.retain_chunks:
+            e["retained"][k] = buf
+        e["next_chunk"] = k + 1
+        if eager:
+            e["eager_folds"] += 1
+            self.partial_folds += 1
+        if self.rec.enabled:
+            self.rec.hist("close.chunk_flush_us").observe(
+                (time.perf_counter_ns() - t0) / 1e3)
+            if eager:
+                self.rec.counter("close.partial_folds").inc()
+
+    def is_chunked(self, round_id=None) -> bool:
+        return bool(self._entry(round_id)[1]["chunked"])
 
     # -- views --------------------------------------------------------------
     @property
@@ -595,6 +756,9 @@ class RoundBuffers:
         """Pop the oldest (or named) open round; hand its stacks to the close
         program (donated there — this set is gone for good)."""
         rid, e = self._entry(round_id)
+        if e["chunked"]:
+            raise RuntimeError(f"round {rid!r} streams in chunks — close it "
+                               "via take_chunked()")
         del self._open[rid]
         self._closed[rid] = True
         while len(self._closed) > 64:  # bounded memory of closed ids
@@ -608,6 +772,32 @@ class RoundBuffers:
             stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
         return stacks
 
+    def take_chunked(self, round_id=None) -> Tuple[Any, Dict[str, Any]]:
+        """Flush the remaining chunks IN SLOT ORDER, pop the round and return
+        ``(round_id, entry)`` — the entry carries the folded accumulators
+        (``acc``), the raw ingest weights (``w``), retained chunk buffers
+        when the method re-streams them, and the delivery bookkeeping.
+
+        Trailing chunks that never filled flush here: unwritten lanes hold
+        zero factors AND zero weight, so the padded fold is exact — every
+        fold in the round's life shares one (chunk, …) program signature."""
+        rid, e = self._entry(round_id)
+        if not e["chunked"]:
+            raise RuntimeError(f"round {rid!r} is stacked — close it via "
+                               "take()")
+        while e["next_chunk"] < e["num_chunks"]:
+            self._fold_next(rid, e, eager=False)
+        del self._open[rid]
+        self._closed[rid] = True
+        while len(self._closed) > 64:
+            self._closed.popitem(last=False)
+        if self.rec.enabled:
+            self.rec.event("ring.take", cat="ring", round=rid,
+                           delivered=len(e["written"]), lanes=len(e["slots"]),
+                           chunked=True, partial_folds=e["eager_folds"])
+            self.rec.gauge("ring.occupancy").set(len(self._open))
+        return rid, e
+
     # -- checkpoint/resume (crash-safe round state) -------------------------
     def state_dict(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """(json-able bookkeeping, array leaves) snapshot of the ring.
@@ -617,24 +807,52 @@ class RoundBuffers:
         into them; at a round boundary the ring is normally empty and the
         snapshot is just the drop counters + closed/evicted id memories."""
         meta: Dict[str, Any] = {
-            "open": [{"round": rid, "slots": {str(c): s for c, s
-                                              in e["slots"].items()},
-                      "written": {str(c): s for c, s
-                                  in e["written"].items()},
-                      "deadline": e["deadline"]}
-                     for rid, e in self._open.items()],
+            "open": [],
             "evicted": list(self._evicted.items()),
             "closed": list(self._closed),
             "evictions": self.evictions,
             "stale_drops": self.stale_drops,
             "replay_drops": self.replay_drops,
             "duplicate_drops": self.duplicate_drops,
+            "partial_folds": self.partial_folds,
             "auto": self._auto,
         }
         arrays: Dict[str, Any] = {}
         for rid, e in self._open.items():
-            for p, x in e["stacks"].items():
-                arrays[f"ring/{rid}/{p}"] = np.asarray(x)
+            entry: Dict[str, Any] = {
+                "round": rid,
+                "slots": {str(c): s for c, s in e["slots"].items()},
+                "written": {str(c): s for c, s in e["written"].items()},
+                "deadline": e["deadline"],
+                "chunked": e["chunked"],
+            }
+            if e["chunked"]:
+                # a mid-round chunked entry is its accumulators + the not-yet
+                # -folded chunk buffers + the slot-indexed raw weights; the
+                # fold cascade's position (next_chunk/filled) rides in meta
+                # so a resumed twin replays the exact remaining fold sequence
+                entry.update(next_chunk=e["next_chunk"],
+                             num_chunks=e["num_chunks"],
+                             expected=list(e["expected"]),
+                             filled=list(e["filled"]),
+                             eager_folds=e["eager_folds"],
+                             pending_chunks=sorted(e["chunks"]),
+                             retained_chunks=sorted(e["retained"]),
+                             acc_keys=sorted(e["acc"]) if e["acc"] else [])
+                arrays[f"ring/{rid}/_w"] = np.asarray(e["w"])
+                for k, buf in e["chunks"].items():
+                    for p, x in buf.items():
+                        arrays[f"ring/{rid}/_chunk{k}/{p}"] = np.asarray(x)
+                for k, buf in e["retained"].items():
+                    for p, x in buf.items():
+                        arrays[f"ring/{rid}/_ret{k}/{p}"] = np.asarray(x)
+                if e["acc"]:
+                    for name, x in e["acc"].items():
+                        arrays[f"ring/{rid}/_acc/{name}"] = np.asarray(x)
+            else:
+                for p, x in e["stacks"].items():
+                    arrays[f"ring/{rid}/{p}"] = np.asarray(x)
+            meta["open"].append(entry)
         return meta, arrays
 
     def load_state(self, meta: Dict[str, Any],
@@ -642,14 +860,38 @@ class RoundBuffers:
         self._open = OrderedDict()
         for entry in meta["open"]:
             rid = entry["round"]
-            stacks = {p: np.asarray(arrays[f"ring/{rid}/{p}"], np.float32)
-                      for p in self._shapes}
-            if not self._host:
-                stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
-            self._open[rid] = {
+            e: Dict[str, Any] = {
                 "slots": {int(c): s for c, s in entry["slots"].items()},
                 "written": {int(c): s for c, s in entry["written"].items()},
-                "stacks": stacks, "deadline": entry["deadline"]}
+                "deadline": entry["deadline"],
+                "chunked": bool(entry.get("chunked", False))}
+            if e["chunked"]:
+                def _bufs(prefix, ks):
+                    return {int(k): {p: np.asarray(
+                        arrays[f"ring/{rid}/_{prefix}{k}/{p}"], np.float32)
+                        for p in self._shapes} for k in ks}
+                acc = None
+                if entry["acc_keys"]:
+                    acc = {name: jnp.asarray(
+                        arrays[f"ring/{rid}/_acc/{name}"])
+                        for name in entry["acc_keys"]}
+                e.update(stacks=None,
+                         chunks=_bufs("chunk", entry["pending_chunks"]),
+                         retained=_bufs("ret", entry["retained_chunks"]),
+                         acc=acc,
+                         w=np.asarray(arrays[f"ring/{rid}/_w"], np.float32),
+                         next_chunk=int(entry["next_chunk"]),
+                         num_chunks=int(entry["num_chunks"]),
+                         expected=[int(x) for x in entry["expected"]],
+                         filled=[int(x) for x in entry["filled"]],
+                         eager_folds=int(entry["eager_folds"]))
+            else:
+                stacks = {p: np.asarray(arrays[f"ring/{rid}/{p}"], np.float32)
+                          for p in self._shapes}
+                if not self._host:
+                    stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
+                e["stacks"] = stacks
+            self._open[rid] = e
         self._evicted = OrderedDict(
             (rid, reason) for rid, reason in meta["evicted"])
         self._closed = OrderedDict((rid, True) for rid in meta["closed"])
@@ -657,6 +899,7 @@ class RoundBuffers:
         self.stale_drops = int(meta["stale_drops"])
         self.replay_drops = int(meta.get("replay_drops", 0))
         self.duplicate_drops = int(meta.get("duplicate_drops", 0))
+        self.partial_folds = int(meta.get("partial_folds", 0))
         self._auto = int(meta["auto"])
 
 
@@ -744,6 +987,26 @@ def factored_truncated_residual(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
     aprime = L @ ((vl * il[..., None, :]) @ u_r) * s_r[..., None, :]
     bprime = (vt_r @ jnp.swapaxes(vr * ir[..., None, :], -1, -2)) @ R
     return aprime, bprime
+
+
+def _l_block(a_chunk: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(chunk, …, m, r) → (…, m, chunk·r): one chunk's weighted L columns,
+    lane-major — exactly the columns the stacked ``_stacked_residual_factors``
+    concatenation would give these lanes, so chunk-pair Gram blocks tile the
+    full (C·r)² Gram."""
+    a = a_chunk.astype(jnp.float32)
+    la = w.reshape((-1,) + (1,) * (a.ndim - 1)) * a
+    la = jnp.moveaxis(la, 0, -2)  # (…, m, chunk, r)
+    return la.reshape(la.shape[:-2] + (la.shape[-2] * la.shape[-1],))
+
+
+def _r_block(b_chunk: jnp.ndarray, bbar: jnp.ndarray) -> jnp.ndarray:
+    """(chunk, …, r, n) → (…, chunk·r, n): one chunk's centred R rows,
+    lane-major (the stacked concatenation's row blocks)."""
+    rb = b_chunk.astype(jnp.float32) - bbar[None]
+    rb = jnp.moveaxis(rb, 0, -3)  # (…, chunk, r, n)
+    return rb.reshape(rb.shape[:-3] + (rb.shape[-3] * rb.shape[-2],
+                                       rb.shape[-1]))
 
 
 # --------------------------------------------------------------------------
@@ -1029,7 +1292,8 @@ class RoundCloseEngine:
                  c_max: int, scale: float, method: str = "fedex",
                  svd_rank: int = 0, backend: str = "auto",
                  interpret: Optional[bool] = None, donate: bool = True,
-                 depth: int = 2, recorder=None):
+                 depth: int = 2, recorder=None, chunk: int = 0,
+                 program_cache_cap: int = 16):
         self.specs = build_factor_specs(params, lora_template)
         self.c_max = c_max
         self.scale = scale
@@ -1037,13 +1301,35 @@ class RoundCloseEngine:
         self.svd_rank = svd_rank
         self.backend = _resolve_backend(backend)
         self.rec = recorder if recorder is not None else NULL
-        self.buffers = RoundBuffers(lora_template, c_max, depth=depth,
-                                    recorder=self.rec)
+        self.chunk = int(chunk)
+        self._interpret = interpret
+        self._donate = donate
+        # LRU'd jitted programs: the stacked close plus, in chunked mode, the
+        # partial fold / finalize / keep_local per-chunk / svd Gram-core-
+        # projection family — bounded so long-lived engines can't grow the
+        # compile cache without limit (satellite fix; see _ProgramCache)
+        self._programs = _ProgramCache(cap=program_cache_cap)
+        # analytic peak-live-device-bytes accounting per in-flight close (see
+        # the "Memory model" docs section): inputs + outputs + materialised
+        # intermediates, with a donated input/output pair counted once;
+        # identical formula on every backend so CPU runs model accelerator
+        # residency rather than host RAM
+        self._peak: Dict[Any, int] = {}
+        self.last_peak_bytes = 0
+        self.buffers = RoundBuffers(
+            lora_template, c_max, depth=depth, recorder=self.rec,
+            chunk=self.chunk,
+            on_chunk=self._fold_chunk if self.chunk else None,
+            # keep_local folds each lane's OWN base and fedex_svd re-streams
+            # the L/R blocks for the projection pass — both need the chunk
+            # factor buffers back at close time
+            retain_chunks=method in ("keep_local", "fedex_svd"))
         self._lora_template = lora_template
         self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
                                     method=method, svd_rank=svd_rank,
                                     backend=self.backend, interpret=interpret,
                                     donate=donate)
+        self._programs.get(("stacked", method), lambda: self._close)
 
     # ------------------------------------------------------------------
     def _dispatch(self, w0_leaves, stacks, w, mask, uniform: bool, round_id):
@@ -1053,6 +1339,8 @@ class RoundCloseEngine:
         and the compile-cache delta distinguishes a compile (miss) from a
         cache hit per (method, uniform) signature."""
         rec = self.rec
+        self._note_peak(round_id, _tree_bytes(w0_leaves) + _tree_bytes(stacks)
+                        + self._div_temp_bytes(self.c_max))
         if not rec.enabled:
             return self._close(w0_leaves, stacks, jnp.asarray(w),
                                jnp.asarray(mask), uniform=uniform)
@@ -1114,6 +1402,513 @@ class RoundCloseEngine:
                    new_w0: Dict[str, jnp.ndarray]) -> Params:
         return fold_back_w0(self.specs, params, new_w0)
 
+    # -- analytic peak-memory accounting -------------------------------
+    def _note_peak(self, round_id, nbytes: int) -> None:
+        cur = self._peak.get(round_id, 0)
+        if nbytes > cur:
+            self._peak[round_id] = nbytes
+            while len(self._peak) > 64:  # bounded (abandoned rounds)
+                self._peak.pop(next(iter(self._peak)))
+
+    def _finish_peak(self, round_id) -> int:
+        peak = self._peak.pop(round_id, 0)
+        self.last_peak_bytes = peak
+        if self.rec.enabled:
+            self.rec.gauge("close.peak_bytes").set(peak)
+            if round_id is not None:
+                self.rec.round_set(round_id, peak_bytes=peak)
+        return peak
+
+    def peak_close_bytes(self, round_id) -> int:
+        """Recorded peak live device bytes of a still-accumulating round."""
+        return self._peak.get(round_id, 0)
+
+    def _div_temp_bytes(self, c: int) -> int:
+        """Device bytes of the divergence intermediates a stacked close
+        materialises: per spec the L (…, m, C·r) and R (…, C·r, n) factors
+        plus two (C·r)² Grams — the terms that make stacked closes O(C) and
+        O((C·r)²) in memory."""
+        total = 0
+        for s in self.specs:
+            lead = int(np.prod(s.a_shape[:-2], dtype=np.int64))
+            m, r = s.a_shape[-2], s.a_shape[-1]
+            n = s.b_shape[-1]
+            p = c * r
+            total += 4 * lead * (m * p + p * n + 2 * p * p)
+        return total
+
+    def _prod_temp_bytes(self) -> int:
+        """Bytes of one dense (…, m, n) residual temp per spec (the chunked
+        finalize's only dense intermediate)."""
+        return sum(
+            4 * int(np.prod(s.a_shape[:-1], dtype=np.int64))
+            * s.b_shape[-1] for s in self.specs)
+
+    # -- chunked accumulators + fold ------------------------------------
+    def _init_acc(self) -> Dict[str, jnp.ndarray]:
+        """Fresh float32 accumulators: weighted factor sums Σŵa / Σŵb for
+        every method, plus the weighted product fold target Σŵ·a b for the
+        methods whose close needs the dense ideal/residual (fedex / reinit /
+        keep_local; fedex_svd stays factored — its close works off Gram
+        blocks of the retained chunks)."""
+        acc: Dict[str, jnp.ndarray] = {}
+        need_prod = self.method != "fedex_svd"
+        for s in self.specs:
+            acc["ga/" + s.key] = jnp.zeros(s.a_shape, jnp.float32)
+            acc["gb/" + s.key] = jnp.zeros(s.b_shape, jnp.float32)
+            if need_prod:
+                acc["prod/" + s.key] = jnp.zeros(
+                    s.a_shape[:-1] + (s.b_shape[-1],), jnp.float32)
+        return acc
+
+    def _build_fold(self):
+        """One jitted partial fold shared by EVERY chunk of every round:
+        acc += Σ_lanes ŵ·(a, b, a@b). Zero-weight lanes (unwritten rows of a
+        padded trailing chunk) are exact no-ops, so partial chunks reuse the
+        same (chunk, …) program signature — the compile cache stays O(1) in
+        round count and chunk fill."""
+        specs, backend, interpret = self.specs, self.backend, self._interpret
+        need_prod = self.method != "fedex_svd"
+
+        def _fold(acc, stacks, w):
+            out = dict(acc)
+            for s in specs:
+                a = stacks[s.key + "/a"].astype(jnp.float32)
+                b = stacks[s.key + "/b"].astype(jnp.float32)
+                if backend == "pallas":
+                    from repro.kernels import factor_mean, product_accum
+                    out["ga/" + s.key] = (acc["ga/" + s.key]
+                                          + factor_mean(a, w,
+                                                        interpret=interpret))
+                    out["gb/" + s.key] = (acc["gb/" + s.key]
+                                          + factor_mean(b, w,
+                                                        interpret=interpret))
+                    if need_prod:
+                        out["prod/" + s.key] = product_accum(
+                            acc["prod/" + s.key], jnp.moveaxis(a, 0, -3),
+                            jnp.moveaxis(b, 0, -3), w, 1.0,
+                            interpret=interpret)
+                else:
+                    out["ga/" + s.key] = acc["ga/" + s.key] + jnp.einsum(
+                        "c,c...mr->...mr", w, a)
+                    out["gb/" + s.key] = acc["gb/" + s.key] + jnp.einsum(
+                        "c,c...rn->...rn", w, b)
+                    if need_prod:
+                        out["prod/" + s.key] = acc["prod/" + s.key] + \
+                            jnp.einsum("c,c...mr,c...rn->...mn", w, a, b)
+            return out
+
+        donate = (0,) if self._donate and not _CPU else ()
+        return jax.jit(_fold, donate_argnums=donate)
+
+    def _fold_chunk(self, acc, chunk_bufs, w, round_id, chunk_index):
+        """RoundBuffers' on_chunk callback: one H2D conversion + one fold
+        dispatch per chunk. The accumulator is donated to the fold program,
+        so the partial fold is a true read-modify-write."""
+        if acc is None:
+            acc = self._init_acc()
+        stacks = {p: jnp.asarray(x) for p, x in chunk_bufs.items()}
+        wd = jnp.asarray(w, jnp.float32)
+        prog = self._programs.get(("fold",), self._build_fold, self.rec)
+        new_acc = prog(acc, stacks, wd)
+        self._note_peak(round_id, _tree_bytes(stacks) + _tree_bytes(new_acc)
+                        + int(wd.nbytes))
+        return new_acc
+
+    def _check_ingest_weights(self, entry, w: np.ndarray, round_id) -> float:
+        """Chunked closes weight at INGEST — verify the streamed raw weights
+        normalise to the close-time weight vector, and return their sum W.
+        A mismatch means chunks were folded under one weighting and the close
+        was asked for another: the accumulators are already wrong, so this
+        raises instead of silently corrupting the fold."""
+        raw = np.asarray(entry["w"], np.float64)
+        wsum = float(raw.sum())
+        if wsum <= 0.0:
+            raise ValueError("chunked close: total ingest weight is 0")
+        for cid, slot in entry["written"].items():
+            want = float(w[slot]) if slot < len(w) else 0.0
+            got = raw[slot] / wsum
+            if not np.isclose(got, want, rtol=1e-4, atol=1e-6):
+                raise ValueError(
+                    f"chunked close of round {round_id!r}: client {cid}'s "
+                    f"ingest weight normalises to {got:.6g} but the close "
+                    f"was given {want:.6g} — stream and close must use the "
+                    "same weighting (and the same delivered set)")
+        return wsum
+
+    # -- chunked finalize programs --------------------------------------
+    def _build_finalize(self):
+        """fedex/reinit chunked finalize: normalise the accumulators, form
+        the residual (fedex) or ideal (reinit) and fold into W0. Divergence
+        comes free from the dense residual: ‖Σŵ·ab − (Σŵa)(Σŵb)‖_F/√(mn) —
+        the INGEST-weighted convention (equal to the stacked close's
+        uniform-over-delivered metric whenever ingest weights are uniform)."""
+        specs, scale, method = self.specs, self.scale, self.method
+
+        def _fin(w0_leaves, acc, winv):
+            new_w0, glob, parts = {}, {}, []
+            for s in specs:
+                ga = acc["ga/" + s.key] * winv
+                gb = acc["gb/" + s.key] * winv
+                mean_prod = acc["prod/" + s.key] * winv
+                res = mean_prod - jnp.matmul(ga, gb)
+                upd = mean_prod if method == "reinit" else res
+                new_w0[s.key] = (w0_leaves[s.key].astype(jnp.float32)
+                                 + scale * upd).astype(s.w0_dtype)
+                if method == "fedex":
+                    glob[s.key] = {"a": ga, "b": gb}
+                m, n = s.a_shape[-2], s.b_shape[-1]
+                fro = jnp.sqrt(jnp.maximum(
+                    jnp.sum(res * res, axis=(-2, -1)), 0.0)) / np.sqrt(m * n)
+                parts.append(fro.ravel())
+            div = jnp.concatenate(parts).mean() if parts else jnp.float32(0)
+            return new_w0, glob, div
+
+        donate = (0, 1) if self._donate and not _CPU else ()
+        return jax.jit(_fin, donate_argnums=donate)
+
+    def _build_kl_finalize(self):
+        """keep_local chunked finalize, part 1: the shared ideal update
+        Σŵ·ab / W plus the divergence (same residual identity as above)."""
+        specs = self.specs
+
+        def _fin(acc, winv):
+            ideal, parts = {}, []
+            for s in specs:
+                ga = acc["ga/" + s.key] * winv
+                gb = acc["gb/" + s.key] * winv
+                mp_ = acc["prod/" + s.key] * winv
+                ideal[s.key] = mp_
+                res = mp_ - jnp.matmul(ga, gb)
+                m, n = s.a_shape[-2], s.b_shape[-1]
+                parts.append((jnp.sqrt(jnp.maximum(
+                    jnp.sum(res * res, axis=(-2, -1)), 0.0))
+                    / np.sqrt(m * n)).ravel())
+            div = jnp.concatenate(parts).mean() if parts else jnp.float32(0)
+            return ideal, div
+
+        return jax.jit(_fin)
+
+    def _build_kl_chunk(self):
+        """keep_local chunked finalize, part 2 — one chunk of lanes: every
+        lane's own base gets W0_c + scale·(ideal − a_c b_c). Op-for-op the
+        stacked jnp branch restricted to this chunk's lanes, so chunked
+        keep_local closes stay bitwise twins on exactly-representable data."""
+        specs, scale = self.specs, self.scale
+
+        def _klc(w0c, stacks, ideal):
+            out = {}
+            for s in specs:
+                a = stacks[s.key + "/a"].astype(jnp.float32)
+                b = stacks[s.key + "/b"].astype(jnp.float32)
+                own = jnp.matmul(a, b)
+                out[s.key] = (w0c[s.key].astype(jnp.float32)
+                              + scale * (ideal[s.key][None] - own)
+                              ).astype(s.w0_dtype)
+            return out
+
+        donate = (0,) if self._donate and not _CPU else ()
+        return jax.jit(_klc, donate_argnums=donate)
+
+    def _build_svd_gram(self):
+        """fedex_svd chunked, stage 1: the (i, j) chunk-pair Gram blocks
+        G_L[i,j] = L_iᵀ L_j and G_R[i,j] = R_i R_jᵀ — tiles of the exact
+        stacked (C·r)² Grams, accumulated pair-wise so no more than two
+        chunks' factors are ever resident at once. The dense m×n residual
+        still never exists."""
+        specs = self.specs
+
+        def _gram(ci, cj, wi, wj, bbar):
+            gl, gr = {}, {}
+            for s in specs:
+                li = _l_block(ci[s.key + "/a"], wi)
+                lj = _l_block(cj[s.key + "/a"], wj)
+                ri = _r_block(ci[s.key + "/b"], bbar[s.key])
+                rj = _r_block(cj[s.key + "/b"], bbar[s.key])
+                gl[s.key] = jnp.einsum("...mi,...mj->...ij", li, lj)
+                gr[s.key] = jnp.einsum("...in,...jn->...ij", ri, rj)
+            return gl, gr
+
+        return jax.jit(_gram)
+
+    def _build_svd_core(self):
+        """fedex_svd chunked, stage 2: the eigh/eigh/svd core on the
+        assembled Grams — identical math to factored_truncated_residual, but
+        returning the UNSCALED projection operators (and the top singular
+        values separately) so stage 3 can stream chunks through them."""
+        specs, rank = self.specs, self.svd_rank
+
+        def _core(gl, gr):
+            out = {}
+            for s in specs:
+                el, vl = jnp.linalg.eigh(gl[s.key])
+                er, vr = jnp.linalg.eigh(gr[s.key])
+                il, sl = _safe_inv_sqrt(el)
+                ir, sr = _safe_inv_sqrt(er)
+                core = sl[..., :, None] * (jnp.swapaxes(vl, -1, -2) @ vr) \
+                    * sr[..., None, :]
+                u, sv, vt = jnp.linalg.svd(core, full_matrices=False)
+                projl = (vl * il[..., None, :]) @ u[..., :, :rank]
+                projr = vt[..., :rank, :] @ jnp.swapaxes(
+                    vr * ir[..., None, :], -1, -2)
+                out[s.key] = (projl, sv[..., :rank], projr)
+            return out
+
+        return jax.jit(_core)
+
+    def _build_svd_proj(self):
+        """fedex_svd chunked, stage 3 — one chunk: accumulate its block of
+        A' = Σ_k L_k projL_k and B' = Σ_k projR_k R_k (slot order again)."""
+        specs = self.specs
+
+        def _proj(stacks, w, projl_i, projr_i, bbar, ap, bp):
+            new_ap, new_bp = {}, {}
+            for s in specs:
+                li = _l_block(stacks[s.key + "/a"], w)
+                ri = _r_block(stacks[s.key + "/b"], bbar[s.key])
+                new_ap[s.key] = ap[s.key] + li @ projl_i[s.key]
+                new_bp[s.key] = bp[s.key] + projr_i[s.key] @ ri
+            return new_ap, new_bp
+
+        donate = (5, 6) if self._donate and not _CPU else ()
+        return jax.jit(_proj, donate_argnums=donate)
+
+    def _build_svd_fin(self):
+        """fedex_svd chunked, stage 4: scale A' by the singular values (the
+        stacked close's op order), fold the rank-r' product into W0, and read
+        the divergence off the Grams: ‖ΔW‖²_F = Σ_ij G_L∘G_R."""
+        specs, scale = self.specs, self.scale
+
+        def _fin(w0_leaves, ap, sr, bp, acc, winv, gl, gr):
+            new_w0, glob, parts = {}, {}, []
+            for s in specs:
+                apr = ap[s.key] * sr[s.key][..., None, :]
+                new_w0[s.key] = (w0_leaves[s.key].astype(jnp.float32)
+                                 + scale * jnp.matmul(apr, bp[s.key])
+                                 ).astype(s.w0_dtype)
+                glob[s.key] = {"a": acc["ga/" + s.key] * winv,
+                               "b": acc["gb/" + s.key] * winv}
+                fro_sq = jnp.maximum(jnp.einsum(
+                    "...ij,...ij->...", gl[s.key], gr[s.key]), 0.0)
+                m, n = s.a_shape[-2], s.b_shape[-1]
+                parts.append((jnp.sqrt(fro_sq) / np.sqrt(m * n)).ravel())
+            div = jnp.concatenate(parts).mean() if parts else jnp.float32(0)
+            return new_w0, glob, div
+
+        donate = (0,) if self._donate and not _CPU else ()
+        return jax.jit(_fin, donate_argnums=donate)
+
+    # -- chunked closes --------------------------------------------------
+    def _svd_chunked(self, w0_leaves, entry, w, winv, round_id):
+        """Orchestrate the four svd stages over the retained chunks. Memory:
+        at most two chunks' factors + the (C·r)² Grams are live — the Grams
+        dominate exactly as in the stacked close (they ARE the method), but
+        the full (C, …) factor stacks never materialise on device."""
+        chunk, nk = self.buffers.chunk, entry["num_chunks"]
+        acc = entry["acc"]
+        bbar = {s.key: acc["gb/" + s.key] * winv for s in self.specs}
+        # slot-indexed NORMALISED weights (the cross-check already proved
+        # they match the close-time vector; use the close-time values so the
+        # L blocks equal the stacked close's columns)
+        wn = np.zeros(nk * chunk, np.float32)
+        ncopy = min(len(w), nk * chunk)
+        wn[:ncopy] = np.asarray(w, np.float32)[:ncopy]
+        dev = {}
+
+        def _chunk_dev(k):
+            if k not in dev:
+                dev.clear()  # at most ONE cached chunk besides the current
+                dev[k] = {p: jnp.asarray(x)
+                          for p, x in entry["retained"][k].items()}
+            return dev[k]
+
+        gram = self._programs.get(("svdgram",), self._build_svd_gram,
+                                  self.rec)
+        blocks = [[None] * nk for _ in range(nk)]
+        for i in range(nk):
+            ci = {p: jnp.asarray(x) for p, x in entry["retained"][i].items()}
+            wi = jnp.asarray(wn[i * chunk:(i + 1) * chunk])
+            for j in range(i + 1):
+                cj = ci if j == i else _chunk_dev(j)
+                wj = wi if j == i else jnp.asarray(
+                    wn[j * chunk:(j + 1) * chunk])
+                blocks[i][j] = gram(ci, cj, wi, wj, bbar)
+        # assemble the full Grams from the block tiles (Gram symmetry gives
+        # the upper triangle as transposes)
+        gl_full, gr_full = {}, {}
+        for s in self.specs:
+            rows_l, rows_r = [], []
+            for i in range(nk):
+                row_l, row_r = [], []
+                for j in range(nk):
+                    if j <= i:  # computed pair: blocks[i][j] IS G(i, j)
+                        bl, br = blocks[i][j]
+                        row_l.append(bl[s.key])
+                        row_r.append(br[s.key])
+                    else:  # mirror: G(i, j) = G(j, i)ᵀ (Gram symmetry)
+                        bl, br = blocks[j][i]
+                        row_l.append(jnp.swapaxes(bl[s.key], -1, -2))
+                        row_r.append(jnp.swapaxes(br[s.key], -1, -2))
+                rows_l.append(jnp.concatenate(row_l, axis=-1))
+                rows_r.append(jnp.concatenate(row_r, axis=-1))
+            gl_full[s.key] = jnp.concatenate(rows_l, axis=-2)
+            gr_full[s.key] = jnp.concatenate(rows_r, axis=-2)
+        gram_bytes = _tree_bytes(gl_full) + _tree_bytes(gr_full)
+        self._note_peak(round_id, 2 * gram_bytes + _tree_bytes(acc))
+        core = self._programs.get(("svdcore",), self._build_svd_core,
+                                  self.rec)
+        proj_ops = core(gl_full, gr_full)
+        proj = self._programs.get(("svdproj",), self._build_svd_proj,
+                                  self.rec)
+        rank = self.svd_rank
+        ap = {s.key: jnp.zeros(s.a_shape[:-1] + (rank,), jnp.float32)
+              for s in self.specs}
+        bp = {s.key: jnp.zeros(s.b_shape[:-2] + (rank, s.b_shape[-1]),
+                               jnp.float32) for s in self.specs}
+        for i in range(nk):
+            ci = {p: jnp.asarray(x) for p, x in entry["retained"][i].items()}
+            wi = jnp.asarray(wn[i * chunk:(i + 1) * chunk])
+            projl_i, projr_i = {}, {}
+            for s in self.specs:
+                projl, _sv, projr = proj_ops[s.key]
+                cr = chunk * s.a_shape[-1]
+                projl_i[s.key] = projl[..., i * cr:(i + 1) * cr, :]
+                projr_i[s.key] = projr[..., :, i * cr:(i + 1) * cr]
+            ap, bp = proj(ci, wi, projl_i, projr_i, bbar, ap, bp)
+        self._note_peak(round_id, gram_bytes + _tree_bytes(ap)
+                        + _tree_bytes(bp) + _tree_bytes(w0_leaves)
+                        + _tree_bytes(acc))
+        sr = {s.key: proj_ops[s.key][1] for s in self.specs}
+        fin = self._programs.get(("svdfin",), self._build_svd_fin, self.rec)
+        return fin(w0_leaves, ap, sr, bp, acc, jnp.float32(winv),
+                   gl_full, gr_full)
+
+    def _chunked_obs(self, round_id, entry, t0) -> None:
+        """Mirror _dispatch's per-close metrics for the chunked path."""
+        rec = self.rec
+        if not rec.enabled:
+            return
+        dispatch_us = (time.perf_counter_ns() - t0) / 1e3
+        rec.hist("engine.close_dispatch_us").observe(dispatch_us)
+        if round_id is not None:
+            rec.round_set(round_id, method=self.method, chunked=1,
+                          close_dispatch_us=round(dispatch_us, 1),
+                          partial_folds=entry["eager_folds"],
+                          ring_occupancy=len(self.buffers.open_rounds),
+                          ring_evictions=self.buffers.evictions,
+                          stale_drops=self.buffers.stale_drops,
+                          replay_drops=self.buffers.replay_drops,
+                          duplicate_drops=self.buffers.duplicate_drops)
+
+    def _close_chunked(self, params: Params, client_ids: Sequence[int],
+                       weights: Optional[Sequence[float]], *,
+                       round_id, rng: Optional[jax.Array]
+                       ) -> Tuple[Params, Params, DeferredDivergence]:
+        """Chunked fedex / fedex_svd / reinit close: flush the trailing
+        chunks in slot order, normalise the streamed accumulators by the
+        total ingest weight, and finalize — the full (C, …) stacks never
+        exist on device, so peak close memory is O(chunk) + accumulators
+        (+ the (C·r)² Grams for fedex_svd, which needs them regardless)."""
+        w, _mask, _uniform = self.weight_vector(client_ids, weights, round_id)
+        rid, entry = self.buffers.take_chunked(round_id)
+        wsum = self._check_ingest_weights(entry, w, rid)
+        winv = jnp.float32(1.0 / np.float32(wsum))
+        w0_leaves = self._w0_leaves(params)
+        t0 = time.perf_counter_ns()
+        with self.rec.span("close.dispatch", cat="engine", round=rid,
+                           method=self.method, uniform=False, chunked=True):
+            if self.method == "fedex_svd":
+                new_w0, glob, div = self._svd_chunked(w0_leaves, entry, w,
+                                                      winv, rid)
+            else:
+                self._note_peak(rid, _tree_bytes(w0_leaves)
+                                + _tree_bytes(entry["acc"])
+                                + self._prod_temp_bytes())
+                fin = self._programs.get(("cfin", self.method),
+                                         self._build_finalize, self.rec)
+                new_w0, glob, div = fin(w0_leaves, entry["acc"], winv)
+        self._chunked_obs(rid, entry, t0)
+        self._finish_peak(rid)
+        new_params = self._fold_back(params, new_w0)
+        if self.method == "reinit":
+            global_lora = agg.reinit_adapters(self._lora_template, rng)
+        else:
+            flat = {}
+            for s in self.specs:
+                flat[s.key + "/a"] = glob[s.key]["a"]
+                flat[s.key + "/b"] = glob[s.key]["b"]
+            global_lora = unflatten_from_paths(flat)
+        return global_lora, new_params, DeferredDivergence(
+            div, rid, recorder=self.rec if self.rec.enabled else None)
+
+    def _close_keep_local_chunked(self, client_params: Sequence[Params],
+                                  client_ids: Sequence[int],
+                                  weights: Optional[Sequence[float]], *,
+                                  round_id
+                                  ) -> Tuple[Dict[int, Params],
+                                             DeferredDivergence]:
+        """Chunked keep_local close: one shared ideal from the accumulators,
+        then each retained chunk's lanes fold their OWN bases chunk-by-chunk
+        in slot order — peak memory holds one chunk of per-lane W0s instead
+        of all C_max of them."""
+        w, _mask, _uniform = self.weight_vector(client_ids, weights, round_id)
+        lanes = self.buffers.lanes(round_id)
+        lane_to_cid = {lane: cid for cid, lane in lanes.items()}
+        delivered = set(client_ids)
+        rid, entry = self.buffers.take_chunked(round_id)
+        self._check_ingest_weights(entry, w, rid)
+        wsum = float(np.asarray(entry["w"], np.float64).sum())
+        winv = jnp.float32(1.0 / np.float32(wsum))
+        chunk = self.buffers.chunk
+        t0 = time.perf_counter_ns()
+        out: Dict[int, Params] = {}
+        with self.rec.span("close.dispatch", cat="engine", round=rid,
+                           method=self.method, uniform=False, chunked=True):
+            fin = self._programs.get(("klfin",), self._build_kl_finalize,
+                                     self.rec)
+            ideal, div = fin(entry["acc"], winv)
+            klc = self._programs.get(("klchunk",), self._build_kl_chunk,
+                                     self.rec)
+            for k in range(entry["num_chunks"]):
+                rows = [lane_to_cid.get(k * chunk + row)
+                        for row in range(chunk)]
+                if not any(cid in delivered for cid in rows
+                           if cid is not None):
+                    continue
+                w0c = {}
+                for s in self.specs:
+                    leaves = []
+                    for cid in rows:
+                        p = (client_params[cid] if cid is not None
+                             else client_params[0])
+                        node = _get_path(p, s.key)
+                        leaves.append(node["kernel"] if s.has_kernel
+                                      else node)
+                    w0c[s.key] = jnp.stack(leaves)
+                stacks = {p: jnp.asarray(x)
+                          for p, x in entry["retained"][k].items()}
+                self._note_peak(rid, _tree_bytes(ideal) + _tree_bytes(w0c)
+                                + _tree_bytes(stacks)
+                                + _tree_bytes(entry["acc"]))
+                new_chunk = klc(w0c, stacks, ideal)
+                for row, cid in enumerate(rows):
+                    if cid is None or cid not in delivered:
+                        continue
+                    newp = client_params[cid]
+                    for s in self.specs:
+                        leaf = new_chunk[s.key][row]
+                        if s.has_kernel:
+                            node = dict(_get_path(client_params[cid], s.key),
+                                        kernel=leaf)
+                            newp = _set_path(newp, s.key, node)
+                        else:
+                            newp = _set_path(newp, s.key, leaf)
+                    out[cid] = newp
+        self._chunked_obs(rid, entry, t0)
+        self._finish_peak(rid)
+        return out, DeferredDivergence(
+            div, rid, recorder=self.rec if self.rec.enabled else None)
+
     # ------------------------------------------------------------------
     def close(self, params: Params, client_ids: Sequence[int],
               weights: Optional[Sequence[float]] = None, *,
@@ -1136,12 +1931,18 @@ class RoundCloseEngine:
                              "use close_keep_local()")
         if self.method == "reinit" and rng is None:
             raise ValueError("reinit close needs the round's rng")
+        if round_id is None and self.buffers.open_rounds:
+            round_id = self.buffers.open_rounds[0]  # oldest — same as take()
         self._validate_delivered(client_ids, round_id)
+        if self.buffers.is_chunked(round_id):
+            return self._close_chunked(params, client_ids, weights,
+                                       round_id=round_id, rng=rng)
         w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
         w0_leaves = self._w0_leaves(params)
         stacks = self.buffers.take(round_id)
         new_w0, glob, div = self._dispatch(w0_leaves, stacks, w, mask,
                                            uniform, round_id)
+        self._finish_peak(round_id)
         new_params = self._fold_back(params, new_w0)
         if self.method == "reinit":
             global_lora = agg.reinit_adapters(self._lora_template, rng)
@@ -1171,7 +1972,12 @@ class RoundCloseEngine:
         if self.method != "keep_local":
             raise ValueError(f"engine method is {self.method!r}, "
                              "not keep_local")
+        if round_id is None and self.buffers.open_rounds:
+            round_id = self.buffers.open_rounds[0]  # oldest — same as take()
         self._validate_delivered(client_ids, round_id)
+        if self.buffers.is_chunked(round_id):
+            return self._close_keep_local_chunked(client_params, client_ids,
+                                                  weights, round_id=round_id)
         w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
         lanes = self.buffers.lanes(round_id)
         lane_to_cid = {lane: cid for cid, lane in lanes.items()}
@@ -1187,6 +1993,7 @@ class RoundCloseEngine:
         stacks = self.buffers.take(round_id)
         new_stacks, _, div = self._dispatch(w0_stacks, stacks, w, mask,
                                             uniform, round_id)
+        self._finish_peak(round_id)
         out: Dict[int, Params] = {}
         for cid in client_ids:
             lane = lanes[cid]

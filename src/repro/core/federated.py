@@ -201,7 +201,8 @@ class FederatedTrainer:
                 method=eng_method, svd_rank=self.fed_cfg.svd_rank,
                 backend=self.fed_cfg.engine,
                 depth=self.fed_cfg.ring_depth,
-                recorder=self.recorder)
+                recorder=self.recorder,
+                chunk=self.fed_cfg.close_chunk)
             self.coordinator.sink = self.engine.buffers
 
     def _build_coordinator(self):

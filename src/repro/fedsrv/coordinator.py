@@ -202,11 +202,13 @@ class RoundCoordinator:
                 {cid: i for i, cid in enumerate(sorted(candidates))},
                 round_id=round_id, deadline=deadline, now=now)
 
-    def _deliver(self, payload: Any) -> Tuple[Any, int]:
+    def _deliver(self, payload: Any, weight: float = 1.0) -> Tuple[Any, int]:
         """Decode one payload (into the sink when present) with bounded
-        retry-with-backoff on transient failures. Returns (host tree,
-        retries spent); raises TransportError/StaleUplinkError when the
-        payload must be quarantined/dropped."""
+        retry-with-backoff on transient failures. ``weight`` is the client's
+        RAW aggregation weight, folded into a chunked sink's accumulators at
+        ingest. Returns (host tree, retries spent); raises
+        TransportError/StaleUplinkError when the payload must be
+        quarantined/dropped."""
         attempt = 0
         while True:
             try:
@@ -216,7 +218,8 @@ class RoundCoordinator:
                     self.faults.check_transient(payload.round_id,
                                                 payload.client_id)
                 if self.sink is not None:
-                    return self.codec.decode_into(payload, self.sink), attempt
+                    return self.codec.decode_into(payload, self.sink,
+                                                  weight=weight), attempt
                 return self.codec.decode(payload), attempt
             except TransientTransportError as e:
                 if attempt >= self.uplink_retries:
@@ -233,12 +236,17 @@ class RoundCoordinator:
                                    round=payload.round_id,
                                    client=payload.client_id, attempt=attempt)
 
-    def _uplink(self, lora: Any, round_id: int, client_id: int
-                ) -> UplinkResult:
+    def _uplink(self, lora: Any, round_id: int, client_id: int, *,
+                weight: float = 1.0) -> UplinkResult:
         """Client → server through the codec; the server aggregates what was
         actually transmitted (quantization included). With a streaming sink
         the decoded leaves additionally go straight into the client's stack
-        lane (one decode, shared with the returned host tree).
+        lane (one decode, shared with the returned host tree). ``weight`` is
+        the client's raw aggregation weight at delivery time — a chunked
+        sink folds it in at ingest, so it must normalise to the close-time
+        weighting (sync: example counts; async: the staleness discount,
+        known here because commits drain AFTER the version they discount
+        against).
 
         The defended path: an active fault injector corrupts the payload
         here (between encode and delivery — exactly where a real wire sits);
@@ -273,7 +281,7 @@ class RoundCoordinator:
                 return UplinkResult(ok=False, reason="replay",
                                     status="dropped")
             try:
-                tree, retries = self._deliver(payload)
+                tree, retries = self._deliver(payload, weight)
             except StaleUplinkError as e:
                 self.ledger.record(payload, note=f"drop:{e.reason}",
                                    direction="dropped")
@@ -389,7 +397,10 @@ class RoundCoordinator:
                 with self.rec.span("client.train", cat="fedsrv",
                                    round=round_id, client=c.client_id):
                     lora_c = train_fn(c, global_lora, round_id)
-                res = self._uplink(lora_c, round_id, c.client_id)
+                res = self._uplink(
+                    lora_c, round_id, c.client_id,
+                    weight=(float(c.num_examples)
+                            if pol.weighting == "examples" else 1.0))
                 # the arrival consumed sim-time whether or not it delivered
                 # — a quarantined uplink and its crash twin leave the clock
                 # (and thus every later draw) identical
@@ -567,7 +578,12 @@ class AsyncBufferCoordinator(RoundCoordinator):
                                    round=round_id, client=c.client_id,
                                    launch_version=v):
                     lora_c = train_fn(c, start, round_id)
-                res = self._uplink(lora_c, round_id, c.client_id)
+                n = (float(c.num_examples) if pol.weighting == "examples"
+                     else 1.0)
+                res = self._uplink(
+                    lora_c, round_id, c.client_id,
+                    weight=n * (1.0 + (self._version - v))
+                    ** (-self.staleness_alpha))
                 self.clock.advance_to(t)  # sim-time parity (see sync loop)
                 retries += res.retries
                 if res.ok:

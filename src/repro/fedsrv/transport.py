@@ -27,6 +27,7 @@ instead of scattering poison into the donated device stacks.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -145,6 +146,11 @@ class AdapterCodec:
             else ValidationPolicy()
         # path → expected decoded leaf shape (register_spec)
         self.spec: Optional[Dict[str, Tuple[int, ...]]] = None
+        # cumulative ingest throughput (decode_into only): wire bytes landed
+        # in the sink over wall time since the first ingest, surfaced as the
+        # uplink.ingest_bytes_per_s gauge
+        self._ingest_bytes = 0
+        self._ingest_t0: Optional[int] = None
 
     def register_spec(self, tree: Any) -> None:
         """Pin the expected adapter structure (path → shape). Decoded uplinks
@@ -255,7 +261,8 @@ class AdapterCodec:
         self._validate_flat(payload, flat)
         return unflatten_from_paths(flat)
 
-    def decode_into(self, payload: Payload, buffers: Any) -> Any:
+    def decode_into(self, payload: Payload, buffers: Any, *,
+                    weight: Optional[float] = None) -> Any:
         """Decode straight into a streaming sink (core/engine.RoundBuffers).
 
         The dequantized leaves are scattered into the sink's preallocated
@@ -275,6 +282,11 @@ class AdapterCodec:
         already-closed/evicted round_id, duplicate (client, round) lane —
         raises :class:`StaleUplinkError` (an addressing failure: dropped,
         not quarantined).
+
+        ``weight`` is the client's RAW aggregation weight, forwarded to the
+        sink — a chunked sink folds it into the running accumulators at
+        ingest (the close later normalises by the total), so stream-time and
+        close-time weighting must agree (the chunked close cross-checks).
         """
         with self.rec.span("codec.decode", cat="transport",
                            round=payload.round_id, client=payload.client_id,
@@ -283,7 +295,8 @@ class AdapterCodec:
             self._validate_flat(payload, flat)
             try:
                 landed = buffers.write_flat(payload.client_id, flat,
-                                            round_id=payload.round_id)
+                                            round_id=payload.round_id,
+                                            weight=weight)
             except KeyError as e:
                 raise StaleUplinkError(
                     f"unroutable round_id: {e}", round_id=payload.round_id,
@@ -293,6 +306,14 @@ class AdapterCodec:
                     "ring refused the write (stale/evicted round or "
                     "duplicate lane)", round_id=payload.round_id,
                     client_id=payload.client_id, reason="stale")
+        now = time.perf_counter_ns()
+        if self._ingest_t0 is None:
+            self._ingest_t0 = now
+        self._ingest_bytes += payload.nbytes
+        if self.rec.enabled:
+            elapsed_s = max((now - self._ingest_t0) / 1e9, 1e-9)
+            self.rec.gauge("uplink.ingest_bytes_per_s").set(
+                round(self._ingest_bytes / elapsed_s, 1))
         return unflatten_from_paths(flat)
 
 

@@ -24,7 +24,8 @@ where XLA contracts mul+add to FMA inside fused programs).
 """
 
 from repro.kernels.ops import (factor_mean, fedex_fold, lora_dense,
-                               perclient_fold, product_fold, swa_attention)
+                               perclient_fold, product_accum, product_fold,
+                               swa_attention)
 
 __all__ = ["factor_mean", "fedex_fold", "lora_dense", "perclient_fold",
-           "product_fold", "swa_attention"]
+           "product_accum", "product_fold", "swa_attention"]

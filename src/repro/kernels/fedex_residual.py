@@ -206,6 +206,49 @@ def product_fold_apply(w0: jnp.ndarray, a_stack: jnp.ndarray,
     )(signs.astype(jnp.float32), w0p, ap, bp)[:m, :n]
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def product_accum_apply(acc: jnp.ndarray, a_stack: jnp.ndarray,
+                        b_stack: jnp.ndarray, signs: jnp.ndarray, *,
+                        scale: float = 1.0, bm: int = 256, bn: int = 256,
+                        interpret: bool = False) -> jnp.ndarray:
+    """acc: (m, n) f32, a_stack: (C, m, r), b_stack: (C, r, n), signs: (C,)
+    f32 → (m, n) f32 = acc + scale·Σ_c s_c·a_c b_c.
+
+    The read-modify-write twin of :func:`product_fold_apply` for chunked
+    streaming closes (core/engine.py chunked ring mode): the running
+    accumulator plays W0's role in the same ``_kernel_product`` body, and
+    ``input_output_aliases`` hands the accumulator buffer to the output so
+    folding chunk k updates it IN PLACE — no second dense m×n allocation per
+    partial fold, which is the whole point of chunking.
+    """
+    m, n = acc.shape
+    c, _, r = a_stack.shape
+    bm, bn = min(bm, m), min(bn, n)
+    accp = _pad_axis(_pad_axis(acc, bm, 0), bn, 1)
+    ap = _pad_axis(a_stack, bm, 1)
+    bp = _pad_axis(b_stack, bn, 2)
+    mp, np_ = accp.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j, *_: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j, *_: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_product, scale=scale, num_clients=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        # operand 1 = the padded accumulator (0 is the scalar-prefetch sign
+        # vector): alias it to the output for the in-place update
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(signs.astype(jnp.float32), accp, ap, bp)[:m, :n]
+
+
 # --------------------------------------------------------------------------
 # per-client fold: the keep_local close, all lanes in one pass
 # --------------------------------------------------------------------------

@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.factor_mean import lora_factor_mean
 from repro.kernels.fedex_residual import (fedex_residual_apply,
                                           perclient_fold_apply,
+                                          product_accum_apply,
                                           product_fold_apply)
 from repro.kernels.flash_swa import flash_swa
 from repro.kernels.lora_matmul import lora_matmul
@@ -97,6 +98,25 @@ def product_fold(w0: jnp.ndarray, a_stack: jnp.ndarray, b_stack: jnp.ndarray,
     out = product_fold_apply(w0, a_stack, b_stack, signs, scale=scale,
                              bm=bm, bn=bn, interpret=interpret)
     return out.astype(w0.dtype)
+
+
+def product_accum(acc: jnp.ndarray, a_stack: jnp.ndarray,
+                  b_stack: jnp.ndarray, signs: jnp.ndarray, scale: float, *,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """acc + scale·Σ_c s_c·a_c b_c with the accumulator ALIASED to the output
+    (read-modify-write). The chunked close's partial-fold primitive: same
+    layout contract as ``product_fold`` (stacked-layer axes lead, client axis
+    immediately before (m, r)/(r, n)), but folding into a running dense
+    accumulator instead of W0 — each chunk pays one pass, never a fresh m×n.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if acc.ndim > 2:  # stacked layers: vmap over the leading axes
+        return jax.vmap(lambda w, a, b: product_accum(w, a, b, signs, scale,
+                                                      interpret=interpret)
+                        )(acc, a_stack, b_stack)
+    bm, bn = _fold_tiles(*acc.shape)
+    return product_accum_apply(acc, a_stack, b_stack, signs, scale=scale,
+                               bm=bm, bn=bn, interpret=interpret)
 
 
 def perclient_fold(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,

@@ -124,6 +124,12 @@ def main() -> None:
                          "stacks may be in flight at once (2 = double "
                          "buffering; >2 pipelines FedBuff commits deeper, "
                          "with deadline eviction of lagging rounds)")
+    ap.add_argument("--close-chunk", type=int, default=0,
+                    help="streaming chunked round closes: uplinks accumulate "
+                         "in N-client chunks that fold eagerly as they fill, "
+                         "so peak close memory is O(chunk) instead of O(C) "
+                         "(0 = classic stacked close; rounds that fit in one "
+                         "chunk always take the stacked close)")
     # fault injection + defended uplink (fedsrv/faults.py):
     ap.add_argument("--faults", default="",
                     help="seeded fault plan DSL, e.g. "
@@ -190,6 +196,7 @@ def main() -> None:
                         quantize_uplink=args.quantize_uplink,
                         engine=args.engine,
                         ring_depth=args.ring_depth,
+                        close_chunk=args.close_chunk,
                         obs=obs_mode,
                         faults=args.faults,
                         uplink_validation=not args.no_uplink_validation,
@@ -223,8 +230,8 @@ def main() -> None:
         _host_only = ("assignment", "stragglers", "dropout_prob", "deadline",
                       "min_quorum", "async_buffer", "quantize_uplink",
                       "dp_clip", "dp_noise", "client_ranks", "engine",
-                      "ring_depth", "uplink_retries", "checkpoint_dir",
-                      "checkpoint_every", "resume")
+                      "ring_depth", "close_chunk", "uplink_retries",
+                      "checkpoint_dir", "checkpoint_every", "resume")
         ignored = [f"--{k.replace('_', '-')}" for k in _host_only
                    if getattr(args, k) != ap.get_default(k)]
         if ignored:

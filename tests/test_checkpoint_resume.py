@@ -12,19 +12,25 @@ Contracts under test (robustness tentpole, part 3):
   off absolute round indices, so resumed draws line up) — with a cosine LR
   schedule so the step counter restoring wrong would show up immediately;
 * the component states (loader cursor/rng, SimClock, BytesLedger) round-
-  trip through their ``state_dict``/``load_state`` pairs exactly.
+  trip through their ``state_dict``/``load_state`` pairs exactly;
+* chunked rounds (``close_chunk``) are crash-safe MID-CHUNK: a ring
+  snapshot taken with partial-fold accumulators live and a chunk half
+  written restores the exact fold-cascade position, so the resumed close
+  is bitwise identical to the uninterrupted one.
 """
 
 import dataclasses
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import round_state_path
 from repro.configs import FedConfig, LoRAConfig, TrainConfig, get_config
 from repro.core import FederatedTrainer
+from repro.core.engine import RoundCloseEngine
 from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
 from repro.fedsrv import AdapterCodec, SimClock
 from repro.fedsrv.transport import BytesLedger
@@ -74,18 +80,18 @@ def _assert_bitwise_runs(full, resumed):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def _kill_and_resume(fed_cfg, tmp_path, kill_after=1):
+def _kill_and_resume(fed_cfg, tmp_path, kill_after=1, clients=3):
     """Run uninterrupted; run a twin killed at ``kill_after`` rounds; resume
     it in a FRESH trainer from the checkpoint; compare bitwise."""
-    full = _make_trainer(fed_cfg)
+    full = _make_trainer(fed_cfg, clients=clients)
     full.run()
 
     ck = dataclasses.replace(fed_cfg, checkpoint_dir=str(tmp_path))
-    killed = _make_trainer(ck)
+    killed = _make_trainer(ck, clients=clients)
     killed.run(until=kill_after)
     assert len(killed.history) == kill_after
 
-    resumed = _make_trainer(ck)
+    resumed = _make_trainer(ck, clients=clients)
     resumed.load_state(round_state_path(str(tmp_path)))
     resumed.run()
     _assert_bitwise_runs(full, resumed)
@@ -124,6 +130,15 @@ class TestKillAndResume:
                         method="fedex", participation=1.0, engine="auto")
         _kill_and_resume(cfg, tmp_path, kill_after=2)
 
+    def test_sync_chunked_round_bitwise(self, tmp_path):
+        """close_chunk=2 at 5 clients: every round closes through the
+        CHUNKED path (partial folds + raw ingest weights in the ring), and
+        the resumed run must still be bitwise."""
+        cfg = FedConfig(num_clients=5, rounds=ROUNDS, local_steps=2,
+                        method="fedex", participation=1.0,
+                        weighting="examples", engine="auto", close_chunk=2)
+        _kill_and_resume(cfg, tmp_path, clients=5)
+
     def test_checkpoint_every_skips_rounds(self, tmp_path):
         cfg = FedConfig(num_clients=3, rounds=2, local_steps=1,
                         method="fedex", participation=1.0,
@@ -157,6 +172,53 @@ class TestComponentStateRoundTrips:
         d = SimClock()
         d.load_state(c.state_dict())
         assert d.now() == c.now() == 4.75
+
+    def test_ring_midchunk_state(self):
+        """Snapshot a chunked round MID-CHUNK — accumulators live (chunk 0
+        already eagerly folded) and chunk 1 half written — restore into a
+        fresh engine, finish streaming in both, and the closes must be
+        bitwise identical (the snapshot restores the exact fold-cascade
+        position, not just the raw buffers)."""
+        c, chunk = 6, 2
+        rng = np.random.default_rng(21)
+        mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+        params = {"q_proj": {"kernel": mk((16, 12))}}
+        lora_t = {"q_proj": {"a": mk((16, 2)), "b": mk((2, 12))}}
+        loras = [{"q_proj": {"a": mk((16, 2)), "b": mk((2, 12))}}
+                 for _ in range(c)]
+        raw_w = [30.0, 50.0, 70.0, 90.0, 110.0, 130.0]
+
+        def make():
+            return RoundCloseEngine(params, lora_t, c_max=c, scale=0.5,
+                                    method="fedex", backend="jnp",
+                                    chunk=chunk)
+
+        def close(eng):
+            g, p, div = eng.close(params, list(range(c)), raw_w)
+            div.resolve()
+            return g, p
+
+        uninterrupted = make()
+        uninterrupted.buffers.begin_round({i: i for i in range(c)})
+        crashed = make()
+        crashed.buffers.begin_round({i: i for i in range(c)})
+        for i in range(c):
+            uninterrupted.buffers.write(i, loras[i], weight=raw_w[i])
+            if i < 3:  # crash after chunk 0 folded + chunk 1 half full
+                crashed.buffers.write(i, loras[i], weight=raw_w[i])
+        meta, arrays = crashed.buffers.state_dict()
+        assert meta["open"][0]["chunked"]
+        assert meta["open"][0]["acc_keys"], "no partial fold before the crash"
+
+        resumed = make()
+        resumed.buffers.load_state(meta, arrays)
+        for i in range(3, c):
+            resumed.buffers.write(i, loras[i], weight=raw_w[i])
+        g_r, p_r = close(resumed)
+        g_f, p_f = close(uninterrupted)
+        for a, b in zip(jax.tree.leaves((g_f, p_f)),
+                        jax.tree.leaves((g_r, p_r))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def test_ledger_state(self):
         codec = AdapterCodec("none")

@@ -1,0 +1,325 @@
+"""Chunked streaming round closes (FedConfig.close_chunk) vs the stacked path.
+
+Contracts under test (core/engine.py, docs/architecture.md "Memory model &
+chunking contract"):
+
+* **Slot-ordered fold determinism** — chunks fold in client-slot order, not
+  arrival order, so any arrival permutation of the same deliveries closes
+  bitwise identical.
+* **Bitwise vs stacked on dyadic data** — fedex / reinit / keep_local
+  chunked closes equal the stacked close bit-for-bit when every intermediate
+  is a small dyadic rational (integer/4 factors, power-of-two client counts
+  and weight sums): chunk-boundary sum association is then exact, so the
+  only legal difference vanishes.
+* **fedex_svd ≤ 2 ulp** — the Gram m-reduction is never chunk-split (the
+  assembled Gram is bitwise); only the final projection matmuls re-associate,
+  landing within 2 ulp of the stacked program on W0 entries that dominate
+  the update.
+* **Auto contract** — a round is chunked iff 0 < chunk < len(slots); small
+  rounds take the stacked path unchanged.
+* **Raw ingest weights** — the close cross-checks normalized ingest weights
+  against its weight vector and raises ValueError on disagreement.
+* **Memory wall** — the chunked close's analytic peak live device bytes
+  (last_peak_bytes) undercut the stacked close at the same C.
+* **_ProgramCache LRU** — the compile cache is bounded: inserts past the cap
+  evict least-recently-used programs (counted), and an engine with a tiny
+  cap still closes correctly through recompiles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.engine import RoundCloseEngine, _ProgramCache
+from repro.util.tree import flatten_with_paths
+
+M, N, R = 16, 12, 2
+SCALE = 0.5  # dyadic
+
+
+def _assert_bitwise(a, b, msg=""):
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_array_equal(np.asarray(fa[k]), np.asarray(fb[k]),
+                                      err_msg=f"{msg} at {k}")
+
+
+def _assert_close(a, b, tol=1e-5, msg=""):
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_allclose(np.asarray(fa[k], np.float32),
+                                   np.asarray(fb[k], np.float32),
+                                   rtol=tol, atol=tol, err_msg=f"{msg} at {k}")
+
+
+def _dy(rng, sh):
+    """Dyadic-rational tensor: integers/4 — f32 sums/products stay exact."""
+    return jnp.asarray(rng.integers(-8, 9, size=sh).astype(np.float32) / 4.0)
+
+
+def _dyadic_setting(seed, c):
+    rng = np.random.default_rng(seed)
+    params = {"q_proj": {"kernel": _dy(rng, (M, N))}}
+    lora_t = {"q_proj": {"a": _dy(rng, (M, R)), "b": _dy(rng, (R, N))}}
+    loras = [{"q_proj": {"a": _dy(rng, (M, R)), "b": _dy(rng, (R, N))}}
+             for _ in range(c)]
+    return params, lora_t, loras
+
+
+def _random_setting(seed, c):
+    rng = np.random.default_rng(seed)
+    mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    params = {"q_proj": {"kernel": mk((M, N))}}
+    lora_t = {"q_proj": {"a": mk((M, R)), "b": mk((R, N))}}
+    loras = [{"q_proj": {"a": mk((M, R)), "b": mk((R, N))}}
+             for _ in range(c)]
+    return params, lora_t, loras
+
+
+def _make(params, lora_t, c_max, chunk, **kw):
+    return RoundCloseEngine(params, lora_t, c_max=c_max, scale=SCALE,
+                            backend="jnp", chunk=chunk, **kw)
+
+
+def _stream(eng, loras, *, raw_w=None, delivered=None, round_id=0, order=None):
+    c = len(loras)
+    eng.buffers.begin_round({i: i for i in range(c)}, round_id=round_id)
+    ids = list(range(c)) if delivered is None else list(delivered)
+    for cid in (order if order is not None else ids):
+        eng.buffers.write(cid, loras[cid], round_id=round_id,
+                          weight=1.0 if raw_w is None else raw_w[cid])
+    return ids
+
+
+def _close_pair(method, c, chunk, *, raw_w=None, delivered=None, seed=0,
+                setting=_dyadic_setting, rng_key=None, svd_rank=0):
+    """Close the same round through a chunked and a stacked engine."""
+    params, lora_t, loras = setting(seed, c)
+    out = []
+    for eng_chunk in (chunk, 0):
+        eng = _make(params, lora_t, c, eng_chunk, method=method,
+                    svd_rank=svd_rank)
+        ids = _stream(eng, loras, raw_w=raw_w, delivered=delivered)
+        w = None if raw_w is None else [raw_w[i] for i in ids]
+        g, p, div = eng.close(params, ids, w, rng=rng_key)
+        out.append((g, p, float(div.resolve()), eng))
+    (chunked, stacked) = out
+    return chunked, stacked
+
+
+# --------------------------------------------------------------------------
+# bitwise vs stacked on dyadic data
+# --------------------------------------------------------------------------
+
+class TestChunkedBitwise:
+    def test_fedex_uniform(self):
+        chunked, stacked = _close_pair("fedex", c=8, chunk=4)
+        _assert_bitwise(chunked[1], stacked[1], "params")
+        _assert_bitwise(chunked[0], stacked[0], "global")
+
+    def test_fedex_weighted_dyadic(self):
+        # raw weights sum to 16 → normalized weights exactly dyadic
+        raw_w = [1.0, 1.0, 2.0, 4.0, 1.0, 1.0, 2.0, 4.0]
+        chunked, stacked = _close_pair("fedex", c=8, chunk=4, raw_w=raw_w,
+                                       seed=1)
+        _assert_bitwise(chunked[1], stacked[1], "params")
+        _assert_bitwise(chunked[0], stacked[0], "global")
+
+    def test_fedex_partial_participation(self):
+        # 4 of 8 slots delivered (power-of-two count → 1/4 weights exact);
+        # chunk 2 of the delivered set spans both chunks of the slot range
+        chunked, stacked = _close_pair("fedex", c=8, chunk=4,
+                                       delivered=[0, 2, 5, 7], seed=2)
+        _assert_bitwise(chunked[1], stacked[1], "params")
+        _assert_bitwise(chunked[0], stacked[0], "global")
+
+    def test_reinit(self):
+        key = jax.random.PRNGKey(7)
+        chunked, stacked = _close_pair("reinit", c=8, chunk=4, seed=3,
+                                       rng_key=key)
+        _assert_bitwise(chunked[1], stacked[1], "params")
+        _assert_bitwise(chunked[0], stacked[0], "redrawn adapters")
+
+    def test_keep_local(self):
+        c, chunk = 8, 4
+        params, lora_t, loras = _dyadic_setting(4, c)
+        client_params = [_dyadic_setting(40 + i, 1)[0] for i in range(c)]
+        out = []
+        for eng_chunk in (chunk, 0):
+            eng = _make(params, lora_t, c, eng_chunk, method="keep_local")
+            ids = _stream(eng, loras)
+            new_cp, div = eng.close_keep_local(client_params, ids)
+            div.resolve()
+            out.append(new_cp)
+        for i in range(c):
+            _assert_bitwise(out[0][i], out[1][i], f"client {i}")
+
+    def test_arrival_order_determinism(self):
+        """Slot-ordered folds: shuffled arrival orders of the same round
+        close bitwise identical — random (non-dyadic) data, so this would
+        fail if folds followed arrival order."""
+        c, chunk = 8, 3
+        params, lora_t, loras = _random_setting(5, c)
+        orders = [list(range(c)), list(range(c))[::-1],
+                  [3, 7, 0, 5, 1, 6, 2, 4]]
+        results = []
+        for order in orders:
+            eng = _make(params, lora_t, c, chunk, method="fedex")
+            _stream(eng, loras, order=order)
+            g, p, div = eng.close(params, list(range(c)))
+            div.resolve()
+            results.append((g, p))
+        for g, p in results[1:]:
+            _assert_bitwise(p, results[0][1], "params")
+            _assert_bitwise(g, results[0][0], "global")
+
+
+# --------------------------------------------------------------------------
+# fedex_svd: assembled Gram bitwise ⇒ ≤ 2 ulp on dominating W0 entries
+# --------------------------------------------------------------------------
+
+def _ulp_dist(x, y):
+    def lex(f):
+        i = np.asarray(f, np.float32).view(np.int32).astype(np.int64)
+        return np.where(i >= 0, i, np.int64(0x80000000) - i)
+    return np.abs(lex(x) - lex(y))
+
+
+class TestChunkedSvd:
+    @pytest.mark.parametrize("trial", range(3))
+    def test_new_w0_within_2_ulp_of_stacked(self, trial):
+        c, chunk = 8, 4
+        rng = np.random.default_rng(60 + trial)
+        # W0 entries bounded away from 0 and ≥ the update magnitude, so an
+        # absolute chunk-association error of ~1 ulp of the update stays
+        # ~1 ulp of W0 (ulp distance scales with per-entry exponent)
+        w0 = (rng.choice([-1.0, 1.0], size=(M, N))
+              * rng.integers(4, 9, size=(M, N))).astype(np.float32)
+        params = {"q_proj": {"kernel": jnp.asarray(w0)}}
+        lora_t = {"q_proj": {"a": _dy(rng, (M, R)), "b": _dy(rng, (R, N))}}
+        loras = [{"q_proj": {"a": _dy(rng, (M, R)), "b": _dy(rng, (R, N))}}
+                 for _ in range(c)]
+        raw_w = [1.0, 2.0, 1.0, 4.0, 2.0, 2.0, 2.0, 2.0]  # sum 16
+        outs = []
+        for eng_chunk in (chunk, 0):
+            eng = _make(params, lora_t, c, eng_chunk, method="fedex_svd",
+                        svd_rank=2)
+            ids = _stream(eng, loras, raw_w=raw_w)
+            _, p, div = eng.close(params, ids, raw_w)
+            div.resolve()
+            outs.append(np.asarray(p["q_proj"]["kernel"]))
+        worst = int(_ulp_dist(outs[0], outs[1]).max())
+        assert worst <= 2, f"chunked svd W0 is {worst} ulp from stacked"
+
+
+# --------------------------------------------------------------------------
+# auto contract + oracle agreement on arbitrary data
+# --------------------------------------------------------------------------
+
+class TestChunkedContract:
+    def test_auto_small_round_takes_stacked_path(self):
+        c = 6
+        params, lora_t, loras = _random_setting(8, c)
+        for chunk in (0, c, c + 3):  # disabled / equal / larger than slots
+            eng = _make(params, lora_t, c, chunk, method="fedex")
+            _stream(eng, loras)
+            assert eng.buffers.is_chunked(0) is False
+        eng = _make(params, lora_t, c, c - 1, method="fedex")
+        _stream(eng, loras)
+        assert eng.buffers.is_chunked(0) is True
+
+    def test_random_weighted_matches_eager_oracle(self):
+        c, chunk = 6, 4
+        params, lora_t, loras = _random_setting(9, c)
+        raw_w = [40.0, 65.0, 90.0, 115.0, 140.0, 165.0]  # "examples"
+        eng = _make(params, lora_t, c, chunk, method="fedex")
+        ids = _stream(eng, loras, raw_w=raw_w)
+        g, p, div = eng.close(params, ids, raw_w)
+        div.resolve()
+        g_l, res = agg.fedex_aggregate(loras, raw_w)
+        p_l = agg.apply_residual(params, res, SCALE)
+        _assert_close(p, p_l, tol=1e-5, msg="params")
+        _assert_close(g, g_l, tol=1e-5, msg="global")
+
+    def test_weighted_divergence_convention(self):
+        """Chunked divergence = ‖Σwᵢaᵢbᵢ − āb̄‖_F/√(mn) under the SAME
+        (ingest-normalized) weights the fold used."""
+        c, chunk = 6, 4
+        params, lora_t, loras = _random_setting(10, c)
+        raw_w = [40.0, 65.0, 90.0, 115.0, 140.0, 165.0]
+        eng = _make(params, lora_t, c, chunk, method="fedex")
+        ids = _stream(eng, loras, raw_w=raw_w)
+        _, _, div = eng.close(params, ids, raw_w)
+        w = np.asarray(raw_w, np.float64) / np.sum(raw_w)
+        a = np.stack([np.asarray(l["q_proj"]["a"], np.float64) for l in loras])
+        b = np.stack([np.asarray(l["q_proj"]["b"], np.float64) for l in loras])
+        res = (np.einsum("c,cmr,crn->mn", w, a, b)
+               - np.einsum("c,cmr->mr", w, a) @ np.einsum("c,crn->rn", w, b))
+        oracle = np.linalg.norm(res) / np.sqrt(M * N)
+        np.testing.assert_allclose(float(div.resolve()), oracle, rtol=1e-4)
+
+    def test_ingest_close_weight_mismatch_raises(self):
+        c, chunk = 6, 4
+        params, lora_t, loras = _random_setting(11, c)
+        eng = _make(params, lora_t, c, chunk, method="fedex")
+        ids = _stream(eng, loras)  # raw ingest weight 1.0 each
+        with pytest.raises(ValueError, match="weight"):
+            eng.close(params, ids, [1.0, 1.0, 1.0, 1.0, 1.0, 9.0])
+
+    def test_chunked_peak_bytes_below_stacked(self):
+        c, chunk = 16, 4
+        params, lora_t, loras = _random_setting(12, c)
+        peaks = {}
+        for eng_chunk in (chunk, 0):
+            eng = _make(params, lora_t, c, eng_chunk, method="fedex")
+            ids = _stream(eng, loras)
+            _, _, div = eng.close(params, ids)
+            div.resolve()
+            peaks[eng_chunk] = eng.last_peak_bytes
+        assert 0 < peaks[chunk] < peaks[0], peaks
+
+
+# --------------------------------------------------------------------------
+# compile-cache LRU bound (satellite fix regression)
+# --------------------------------------------------------------------------
+
+class TestProgramCacheLRU:
+    def test_evicts_least_recently_used(self):
+        cache = _ProgramCache(cap=3)
+        for k in "abcde":
+            cache.get(k, lambda k=k: f"prog-{k}")
+        assert len(cache) == 3 and cache.evictions == 2
+        assert "a" not in cache and "b" not in cache
+        # touching an entry protects it from the next eviction
+        cache.get("c", lambda: "rebuilt-c")
+        cache.get("f", lambda: "prog-f")
+        assert "c" in cache and "d" not in cache
+
+    def test_cap_validation(self):
+        with pytest.raises(ValueError):
+            _ProgramCache(cap=0)
+
+    def test_engine_survives_evictions(self):
+        """A chunked fedex close needs ≥ 3 programs (stacked ctor warm-up,
+        partial fold, finalize); cap=2 forces evictions mid-close, which
+        must only cost a recompile — never correctness."""
+        c, chunk = 8, 4
+        params, lora_t, loras = _dyadic_setting(13, c)
+        eng = _make(params, lora_t, c, chunk, method="fedex",
+                    program_cache_cap=2)
+        ref_eng = _make(params, lora_t, c, 0, method="fedex")
+        for rid in range(2):  # second round re-misses the evicted programs
+            ids = _stream(eng, loras, round_id=rid)
+            g, p, div = eng.close(params, ids, round_id=rid)
+            div.resolve()
+        _stream(ref_eng, loras)
+        g_r, p_r, div_r = ref_eng.close(params, list(range(c)))
+        div_r.resolve()
+        assert eng._programs.evictions > 0
+        assert len(eng._programs) <= 2
+        _assert_bitwise(p, p_r, "params after evictions")
+        _assert_bitwise(g, g_r, "global after evictions")
