@@ -1,0 +1,409 @@
+#!/usr/bin/env python
+"""Load-generator benchmark for the HTTP federation service.
+
+Hammers a ``train.py --mode serve`` server with threaded simulated clients
+POSTing wire-framed adapter deltas, then verifies the rounds closed EXACTLY:
+a clean in-process twin (same arch/rank/seed → same ``init_global_state``,
+same ``RoundCloseEngine``) replays the identical deltas and the merged
+global adapter pulled over HTTP must match it bitwise — and the server's
+W0 digest must match the twin's folded base weights, which is the residual
+fold's witness (avg-of-adapters alone cannot distinguish exact FedEx from
+naive FedAvg; the folded W0 can).
+
+Emits ``BENCH_serving.json``: per-round close dispatch/block latency under
+concurrent ingest, POST latency percentiles, ingest-bytes/s, HTTP framing
+overhead vs payload bytes (ledger reconciliation), rejection counts, parity
+verdicts.
+
+Usage (spawns its own server subprocess):
+
+  PYTHONPATH=src python scripts/loadgen.py --quick --spawn
+  PYTHONPATH=src python scripts/loadgen.py --spawn --clients 96 --threads 32
+
+or against an already-running server started with MATCHING flags
+(--arch/--vocab/--rank/--alpha/--seed/--clients/--rounds/--quantize):
+
+  PYTHONPATH=src python -m repro.launch.train --mode serve --arch paper-tiny \\
+      --vocab 64 --clients 8 --rounds 2 &
+  PYTHONPATH=src python scripts/loadgen.py --quick --server http://127.0.0.1:8077
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import queue
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+# repo-root invocation: scripts/ is not a package, src/ may not be on path;
+# benchmarks.common (env_metadata) lives at the repo root
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.fedsrv.client import FedClient  # noqa: E402
+from repro.fedsrv.transport import (AdapterCodec, StaleUplinkError,  # noqa: E402
+                                    TransportError)
+from repro.util.tree import flatten_with_paths  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+def synthetic_delta(template_shapes: Dict[str, tuple], seed: int, rnd: int,
+                    cid: int) -> Dict[str, np.ndarray]:
+    """Deterministic per-(seed, round, client) adapter delta — both the HTTP
+    clients and the clean twin derive the same trees from the key alone, so
+    parity needs no cross-process traffic beyond (seed, shapes)."""
+    rng = np.random.default_rng([seed, rnd, cid, 17])
+    return {p: (0.05 * rng.standard_normal(s)).astype(np.float32)
+            for p, s in template_shapes.items()}
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _spawn_server(args, port: int, trace: str, metrics: str):
+    cmd = [sys.executable, "-m", "repro.launch.train", "--mode", "serve",
+           "--arch", args.arch, "--vocab", str(args.vocab),
+           "--rank", str(args.rank), "--alpha", str(args.alpha),
+           "--clients", str(args.clients), "--rounds", str(args.rounds),
+           "--seed", str(args.seed), "--method", args.method,
+           "--svd-rank", str(args.svd_rank),
+           "--quantize-uplink", args.quantize,
+           "--close-chunk", str(args.close_chunk),
+           "--max-concurrent", str(args.max_concurrent),
+           "--quota", str(args.quota),
+           "--port", str(port), "--host", "127.0.0.1",
+           "--obs", "trace", "--trace", trace, "--metrics-out", metrics]
+    if args.token:
+        cmd += ["--serve-token", args.token]
+    if args.deadline:
+        cmd += ["--deadline", str(args.deadline),
+                "--min-quorum", str(args.min_quorum)]
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", "")] if p)
+    print(f"[loadgen] spawning server on :{port} …", flush=True)
+    return subprocess.Popen(cmd, env=env)
+
+
+def _wait_healthy(client: FedClient, proc, timeout_s: float = 180.0) -> None:
+    t0 = time.monotonic()
+    while True:
+        if proc is not None and proc.poll() is not None:
+            raise RuntimeError(
+                f"server exited early (rc={proc.returncode})")
+        try:
+            h = client.health()
+            print(f"[loadgen] server healthy: {h}", flush=True)
+            return
+        except Exception:
+            if time.monotonic() - t0 > timeout_s:
+                raise RuntimeError(
+                    f"server not healthy after {timeout_s:.0f}s")
+            time.sleep(0.25)
+
+
+# ---------------------------------------------------------------------------
+def drive_round(url: str, args, shapes: Dict[str, tuple], rnd: int
+                ) -> Dict[str, Any]:
+    """Fan one round's POSTs across a worker pool; returns latency + outcome
+    counts. ``--duplicates`` re-POSTs a fraction of accepted deltas so the
+    409 replay/duplicate path is exercised under the same pressure."""
+    jobs: "queue.Queue[int]" = queue.Queue()
+    for cid in range(args.clients):
+        jobs.put(cid)
+    lat_ms: List[float] = []
+    outcomes = {"accepted": 0, "stale": 0, "rejected": 0, "failed": 0,
+                "dup_409": 0}
+    lock = threading.Lock()
+    t_first = [None]
+    t_closed = [None]
+
+    def worker(wid: int) -> None:
+        client = FedClient(url, 0, token=args.token, quantize=args.quantize,
+                           retries=6, backoff=0.05)
+        while True:
+            try:
+                cid = jobs.get_nowait()
+            except queue.Empty:
+                return
+            client.client_id = cid  # one pooled connection, many identities
+            tree = synthetic_delta(shapes, args.seed, rnd, cid)
+            t0 = time.perf_counter()
+            try:
+                resp = client.submit_delta(tree, round_id=rnd)
+                dt = (time.perf_counter() - t0) * 1e3
+                with lock:
+                    lat_ms.append(dt)
+                    outcomes["accepted"] += 1
+                    if t_first[0] is None:
+                        t_first[0] = t0
+                    if resp.get("closed"):
+                        t_closed[0] = time.perf_counter()
+                if args.duplicates > 0 \
+                        and cid % max(1, int(1 / args.duplicates)) == 0:
+                    try:
+                        client.submit_delta(tree, round_id=rnd)
+                    except StaleUplinkError:
+                        with lock:
+                            outcomes["dup_409"] += 1
+            except StaleUplinkError:
+                with lock:
+                    outcomes["stale"] += 1
+            except TransportError:
+                with lock:
+                    outcomes["rejected"] += 1
+            except Exception as e:  # noqa: BLE001 — survey, don't crash
+                print(f"[loadgen] client {cid} failed: {e}", flush=True)
+                with lock:
+                    outcomes["failed"] += 1
+
+    threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+               for i in range(min(args.threads, args.clients))]
+    t_round0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_s = time.perf_counter() - t_round0
+    lat = np.asarray(sorted(lat_ms)) if lat_ms else np.asarray([0.0])
+    return {
+        "round": rnd,
+        "wall_s": round(wall_s, 4),
+        "posts": outcomes,
+        "post_latency_ms": {
+            "p50": round(float(np.percentile(lat, 50)), 3),
+            "p95": round(float(np.percentile(lat, 95)), 3),
+            "max": round(float(lat.max()), 3),
+        },
+        # the accepted POST that tripped the close carries the dispatch
+        # inline — first-post→close-ack is the round's ingest+close wall time
+        "ingest_to_close_ms": None if t_closed[0] is None or t_first[0] is None
+        else round((t_closed[0] - t_first[0]) * 1e3, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+def run_twin(args, model, lora_cfg, shapes: Dict[str, tuple]):
+    """Clean in-process twin: same init, same engine, same deltas fed through
+    an encode→decode codec round-trip (so a quantized uplink aggregates
+    as-transmitted on both sides). Returns (final_global, final_params,
+    engine) after replaying every round."""
+    import jax
+
+    from repro.core.engine import RoundCloseEngine
+    from repro.fedsrv.server import init_global_state
+
+    params, global_lora = init_global_state(model, lora_cfg, seed=args.seed)
+    eng_method = "fedex_svd" if (args.method == "fedex_svd"
+                                 and args.svd_rank) else "fedex"
+    engine = RoundCloseEngine(
+        params, global_lora, c_max=args.clients, scale=lora_cfg.scale,
+        method=eng_method, svd_rank=args.svd_rank, backend="auto",
+        depth=2, chunk=args.close_chunk)
+    codec = AdapterCodec(args.quantize)
+    codec.register_spec(global_lora)
+    for rnd in range(args.rounds):
+        engine.buffers.begin_round({c: c for c in range(args.clients)},
+                                   round_id=rnd)
+        for cid in range(args.clients):
+            payload = codec.encode(
+                synthetic_delta(shapes, args.seed, rnd, cid),
+                round_id=rnd, client_id=cid)
+            codec.decode_into(payload, engine.buffers)
+        global_lora, params, div = engine.close(
+            params, list(range(args.clients)), round_id=rnd)
+        div.resolve()
+    return global_lora, params, engine
+
+
+def _bitwise(a, b) -> bool:
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    return set(fa) == set(fb) and all(
+        np.array_equal(np.asarray(fa[k]), np.asarray(fb[k])) for k in fa)
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--server", default="",
+                    help="URL of a running server (omit with --spawn)")
+    ap.add_argument("--spawn", action="store_true",
+                    help="boot a train.py --mode serve subprocess, drive it, "
+                         "reap it")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI shape: 8 clients × 2 rounds, 8 threads")
+    ap.add_argument("--clients", type=int, default=96)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--threads", type=int, default=32)
+    ap.add_argument("--arch", default="paper-tiny")
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--method", default="fedex",
+                    choices=("fedex", "fedex_svd"))
+    ap.add_argument("--svd-rank", type=int, default=0)
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "fp16", "int8"))
+    ap.add_argument("--close-chunk", type=int, default=0)
+    ap.add_argument("--max-concurrent", type=int, default=16)
+    ap.add_argument("--quota", type=int, default=4)
+    ap.add_argument("--token", default="")
+    ap.add_argument("--deadline", type=float, default=0.0)
+    ap.add_argument("--min-quorum", type=int, default=0)
+    ap.add_argument("--duplicates", type=float, default=0.0,
+                    help="fraction of clients that re-POST their delta "
+                         "(exercises the 409 duplicate path under load)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the clean-twin parity replay")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--trace", default="serve_trace.json",
+                    help="(--spawn) server trace output path")
+    ap.add_argument("--metrics-out", default="serve_metrics.jsonl",
+                    help="(--spawn) server metrics JSONL output path")
+    args = ap.parse_args()
+
+    if args.quick:
+        args.clients, args.rounds, args.threads = 8, 2, 8
+        if args.duplicates == 0.0:
+            args.duplicates = 0.25
+    if not args.spawn and not args.server:
+        ap.error("need --server URL or --spawn")
+
+    # model/template build (shared with the twin; cheap for paper-tiny)
+    from dataclasses import replace as dc_replace
+
+    from repro.configs import LoRAConfig, get_config
+    from repro.fedsrv.server import init_global_state, w0_digest
+    from repro.models import build_model
+
+    cfg = dc_replace(get_config(args.arch), vocab_size=args.vocab,
+                     dtype="float32")
+    model = build_model(cfg)
+    lora_cfg = LoRAConfig(rank=args.rank, alpha=args.alpha)
+    _, template = init_global_state(model, lora_cfg, seed=args.seed)
+    shapes = {p: tuple(np.shape(x))
+              for p, x in flatten_with_paths(template).items()}
+
+    proc = None
+    if args.spawn:
+        port = _free_port()
+        url = f"http://127.0.0.1:{port}"
+        proc = _spawn_server(args, port, args.trace, args.metrics_out)
+    else:
+        url = args.server.rstrip("/")
+
+    probe = FedClient(url, client_id=-1, token=args.token)
+    try:
+        _wait_healthy(probe, proc)
+        t_bench0 = time.perf_counter()
+        rounds_out = []
+        total_payload_bytes = 0
+        for rnd in range(args.rounds):
+            # wait for the server to be ON this round (previous close done)
+            while True:
+                h = probe.health()
+                if h["round"] >= rnd or h["status"] == "done":
+                    break
+                time.sleep(0.02)
+            r = drive_round(url, args, shapes, rnd)
+            rounds_out.append(r)
+            print(f"[loadgen] round {rnd}: {r['posts']} "
+                  f"p95={r['post_latency_ms']['p95']}ms", flush=True)
+        bench_wall_s = time.perf_counter() - t_bench0
+
+        # pull the final merged adapter + server-side metrics
+        pull = probe.pull_latest()
+        server_metrics = probe.metrics()
+        pull_ok = pull.version == args.rounds
+        print(f"[loadgen] pull_latest ok: version={pull.version} "
+              f"digest={pull.w0_digest[:12]}…", flush=True)
+
+        parity: Dict[str, Any] = {"checked": not args.no_verify}
+        if not args.no_verify:
+            twin_global, twin_params, twin_engine = run_twin(
+                args, model, lora_cfg, shapes)
+            parity["adapter_bitwise"] = _bitwise(pull.lora, twin_global)
+            parity["w0_digest_match"] = (
+                w0_digest(twin_engine.specs, twin_params) == pull.w0_digest)
+            print(f"[loadgen] clean-twin parity: {parity}", flush=True)
+    finally:
+        if proc is not None:
+            # the server exits on its own after serving all rounds; give it
+            # a moment to flush trace/metrics, then make sure it is gone
+            try:
+                proc.wait(timeout=60)
+            except subprocess.TimeoutExpired:
+                proc.terminate()
+                proc.wait(timeout=10)
+
+    ledger = server_metrics.get("ledger", {})
+    counters = server_metrics.get("counters", {})
+    gauges = server_metrics.get("gauges", {})
+    payload_dirs = ("uplink", "quarantined", "dropped")
+    payload_bytes = sum(ledger.get(f"{d}_bytes", 0) for d in payload_dirs)
+    total_payload_bytes = payload_bytes
+    # per-round engine latencies from the server's own round records
+    close_lat = [
+        {"round": r.get("round"),
+         "close_dispatch_us": r.get("close_dispatch_us"),
+         "close_block_us": r.get("close_block_us"),
+         "divergence": r.get("divergence")}
+        for r in server_metrics.get("rounds", [])
+        if r.get("close_dispatch_us") is not None]
+
+    from benchmarks.common import env_metadata
+
+    bench = {
+        "bench": "serving",
+        "env": env_metadata(clients=args.clients, rounds=args.rounds,
+                            threads=args.threads, quantize=args.quantize,
+                            close_chunk=args.close_chunk,
+                            max_concurrent=args.max_concurrent),
+        "wall_s": round(bench_wall_s, 3),
+        "rounds": rounds_out,
+        "close_latency": close_lat,
+        "ingest_bytes_per_s": gauges.get("uplink.ingest_bytes_per_s"),
+        "http": {
+            "requests": counters.get("uplink.http_requests"),
+            "bytes_total": counters.get("uplink.http_bytes"),
+            "payload_bytes": payload_bytes,
+            "overhead_bytes": counters.get("uplink.http_overhead_bytes"),
+            "rejected": {k.split("[")[1].rstrip("]"): v
+                         for k, v in counters.items()
+                         if k.startswith("uplink.http_rejected[")},
+        },
+        "ledger": ledger,
+        "pull_latest_ok": pull_ok,
+        "parity": parity,
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"[loadgen] wrote {args.out}")
+
+    ok = pull_ok and (args.no_verify or (parity.get("adapter_bitwise")
+                                         and parity.get("w0_digest_match")))
+    if not ok:
+        print("[loadgen] FAILED: parity or pull_latest check did not hold",
+              file=sys.stderr)
+        sys.exit(1)
+    print(f"[loadgen] OK: {args.rounds} round(s) closed exactly over HTTP "
+          f"({total_payload_bytes} payload B, "
+          f"{bench['http']['overhead_bytes']} overhead B)")
+
+
+if __name__ == "__main__":
+    main()

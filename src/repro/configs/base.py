@@ -291,6 +291,40 @@ class FedConfig:
             FaultPlan.parse(self.faults, seed=self.seed)
 
 
+@dataclass(frozen=True)
+class ServeConfig:
+    """HTTP federation service surface (fedsrv/server.py).
+
+    Only the SOCKET-facing knobs live here — everything federation-semantic
+    (clients, rounds, quorum, deadline, weighting, codec, engine backend)
+    stays in :class:`FedConfig`, so a served deployment and an in-process
+    simulation are configured by the same dataclass and close identically.
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 8077  # 0 → ephemeral (the bound port is reported at startup)
+    # bounded concurrent-uplink admission (backpressure): POSTs beyond this
+    # many in-flight decodes get 429 + Retry-After instead of piling decoded
+    # payloads into memory
+    max_concurrent: int = 16
+    # per-(client, round) POST budget — a client re-POSTing past this gets
+    # 429 (quota); ≥ 2 leaves room for one honest retry after a 5xx
+    quota_per_round: int = 4
+    # shared bearer-token auth stub: "" disables auth; otherwise every POST
+    # must carry "Authorization: Bearer <token>"
+    token: str = ""
+
+    def __post_init__(self):
+        if not 0 <= self.port <= 65535:
+            raise ValueError(f"port must be in [0, 65535], got {self.port}")
+        if self.max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent must be ≥ 1, got {self.max_concurrent}")
+        if self.quota_per_round < 1:
+            raise ValueError(
+                f"quota_per_round must be ≥ 1, got {self.quota_per_round}")
+
+
 def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:
     """Cross-config validation needing both dataclasses (call at launch).
 

@@ -81,6 +81,7 @@ cares about).
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -379,6 +380,22 @@ def fold_back_w0(specs: Sequence[FactorSpec], params: Params,
 # streaming round buffers (double-buffered ring)
 # --------------------------------------------------------------------------
 
+def _ring_locked(fn):
+    """Serialise a RoundBuffers method on the ring's RLock. The HTTP
+    federation service (fedsrv/server.py) decodes uplinks on ThreadingHTTP-
+    Server worker threads, so ``write_flat`` races ``begin_round``/
+    ``evict``/``take`` — decode and validation stay parallel (they happen in
+    the codec, before the ring is touched); only the scatter and the round
+    bookkeeping serialise. Re-entrant: ``begin_round`` evicts under its own
+    lock, and single-threaded callers (the sim coordinators) pay one
+    uncontended acquire per call."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._ring_lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 class RoundBuffers:
     """Preallocated ``(C_max, …)`` device stacks, written slot-by-slot, with a
     ``depth``-deep ring of rotating stack sets.
@@ -472,6 +489,8 @@ class RoundBuffers:
         self.replay_drops = 0  # uplinks replayed for already-closed rounds
         self.duplicate_drops = 0  # second (client, round) write, same lane
         self._auto = 0
+        # threaded ingest (fedsrv/server.py): see _ring_locked
+        self._ring_lock = threading.RLock()
         if not self._host:
             @functools.partial(jax.jit, donate_argnums=(0,))
             def _scatter(stacks, slot, leaves):
@@ -511,6 +530,7 @@ class RoundBuffers:
         return round_id, self._open[round_id]
 
     # -- round lifecycle ----------------------------------------------------
+    @_ring_locked
     def begin_round(self, slots: Dict[int, int], round_id=None, *,
                     deadline: Optional[float] = None,
                     now: Optional[float] = None):
@@ -575,6 +595,7 @@ class RoundBuffers:
             self.rec.gauge("ring.occupancy").set(len(self._open))
         return round_id
 
+    @_ring_locked
     def evict(self, round_id, reason: str = "explicit") -> Dict[int, int]:
         """Drop an open round WITHOUT closing it: its stacks are discarded and
         any late uplink for it will be dropped (not an error). Returns the
@@ -595,6 +616,7 @@ class RoundBuffers:
                        len(e["written"]), len(e["slots"]))
         return dict(e["written"])
 
+    @_ring_locked
     def write_flat(self, client_id: int, flat: Dict[str, Any],
                    round_id=None, *, weight: Optional[float] = None) -> bool:
         """Scatter one client's decoded adapter leaves into its lane.
@@ -729,29 +751,36 @@ class RoundBuffers:
             if eager:
                 self.rec.counter("close.partial_folds").inc()
 
+    @_ring_locked
     def is_chunked(self, round_id=None) -> bool:
         return bool(self._entry(round_id)[1]["chunked"])
 
     # -- views --------------------------------------------------------------
     @property
+    @_ring_locked
     def open_rounds(self) -> List[Any]:
         return list(self._open)
 
     @property
+    @_ring_locked
     def delivered(self) -> Dict[int, int]:
         """client_id → slot written in the OLDEST open round (next to close)."""
         return dict(self._entry()[1]["written"])
 
+    @_ring_locked
     def delivered_in(self, round_id=None) -> Dict[int, int]:
         return dict(self._entry(round_id)[1]["written"])
 
+    @_ring_locked
     def lanes(self, round_id=None) -> Dict[int, int]:
         """client_id → lane for ALL of a round's candidates (delivered or not)."""
         return dict(self._entry(round_id)[1]["slots"])
 
+    @_ring_locked
     def slot_of(self, client_id: int, round_id=None) -> int:
         return self._entry(round_id)[1]["slots"][client_id]
 
+    @_ring_locked
     def take(self, round_id=None) -> Dict[str, jnp.ndarray]:
         """Pop the oldest (or named) open round; hand its stacks to the close
         program (donated there — this set is gone for good)."""
@@ -772,6 +801,7 @@ class RoundBuffers:
             stacks = {p: jnp.asarray(x) for p, x in stacks.items()}
         return stacks
 
+    @_ring_locked
     def take_chunked(self, round_id=None) -> Tuple[Any, Dict[str, Any]]:
         """Flush the remaining chunks IN SLOT ORDER, pop the round and return
         ``(round_id, entry)`` — the entry carries the folded accumulators
@@ -799,6 +829,7 @@ class RoundBuffers:
         return rid, e
 
     # -- checkpoint/resume (crash-safe round state) -------------------------
+    @_ring_locked
     def state_dict(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """(json-able bookkeeping, array leaves) snapshot of the ring.
 
@@ -855,6 +886,7 @@ class RoundBuffers:
             meta["open"].append(entry)
         return meta, arrays
 
+    @_ring_locked
     def load_state(self, meta: Dict[str, Any],
                    arrays: Dict[str, Any]) -> None:
         self._open = OrderedDict()

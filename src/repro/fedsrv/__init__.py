@@ -45,8 +45,15 @@ Fault tolerance (fedsrv/faults.py + the defended transport): a seeded
 the close stays exact over the survivors), addressing faults are dropped,
 transient decode failures retry with bounded backoff, and a round starved
 below quorum degrades gracefully (previous global carried forward).
+
+Process boundary (fedsrv/server.py + fedsrv/client.py + fedsrv/wire.py):
+the same defended ingest path behind a stdlib ``ThreadingHTTPServer`` —
+``FedClient.submit_delta`` / ``pull_latest`` over HTTP, quarantine/stale/
+retry semantics mapped onto 4xx/429 statuses, and the SimClock pinned to
+wall time (``now_fn=time.monotonic``) so round deadlines mean real seconds.
 """
 
+from repro.fedsrv.client import FedClient, PullResult
 from repro.fedsrv.coordinator import (
     AsyncBufferCoordinator,
     Delivery,
@@ -61,6 +68,13 @@ from repro.fedsrv.faults import (
     FaultInjector,
     FaultPlan,
     FaultSpec,
+)
+from repro.fedsrv.server import (
+    FederationHTTPServer,
+    FederationServer,
+    init_global_state,
+    start_http_server,
+    w0_digest,
 )
 from repro.fedsrv.registry import (
     ClientInfo,
@@ -80,6 +94,7 @@ from repro.fedsrv.transport import (
     TransportError,
     ValidationPolicy,
 )
+from repro.fedsrv.wire import payload_from_wire, payload_to_wire
 
 __all__ = [
     "AdapterCodec",
@@ -93,8 +108,12 @@ __all__ = [
     "FaultInjector",
     "FaultPlan",
     "FaultSpec",
+    "FedClient",
+    "FederationHTTPServer",
+    "FederationServer",
     "LedgerEntry",
     "Payload",
+    "PullResult",
     "RoundCoordinator",
     "RoundOutcome",
     "RoundPolicy",
@@ -105,6 +124,11 @@ __all__ = [
     "TransportError",
     "UplinkResult",
     "ValidationPolicy",
+    "init_global_state",
+    "payload_from_wire",
+    "payload_to_wire",
     "purpose_rng",
+    "start_http_server",
+    "w0_digest",
     "weighted_close",
 ]

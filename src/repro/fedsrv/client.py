@@ -1,0 +1,168 @@
+"""HTTP federation client: ``submit_delta`` / ``pull_latest`` over a socket.
+
+The thin mirror of the server's endpoint table (fedsrv/server.py): encode
+with the same :class:`AdapterCodec` the sim coordinator uses, frame with
+fedsrv/wire.py, POST, and map HTTP statuses BACK onto the PR-7 transport
+error taxonomy — 429/503/connection failures raise (internally)
+:class:`TransientTransportError` and go through the same bounded
+exponential-backoff retry loop the coordinator runs on its SimClock (real
+``time.sleep`` here); 409/410 surface as :class:`StaleUplinkError`; 4xx
+rejections surface as :class:`TransportError` with the server's ``reason``.
+A caller that already handles the in-process codec's failures handles the
+HTTP ones for free.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+from repro.fedsrv.transport import (AdapterCodec, StaleUplinkError,
+                                    TransientTransportError, TransportError)
+from repro.fedsrv.wire import payload_from_wire, payload_to_wire
+from repro.obs import NULL
+from repro.util.logging import get_logger
+
+logger = get_logger("fedsrv.client")
+
+#: statuses worth a bounded retry (server backpressure / transient fabric)
+_RETRYABLE = frozenset({429, 503})
+
+
+@dataclass(frozen=True)
+class PullResult:
+    """One ``GET /v1/adapters/latest`` response."""
+
+    version: int            # closes the server has performed
+    round_id: int           # round currently open server-side
+    lora: Any               # decoded global adapter tree
+    w0_digest: str          # sha256 over the server's folded base weights
+    nbytes: int             # wire frame size (downlink accounting)
+
+
+class FedClient:
+    """One federated client talking to a :class:`FederationServer`.
+
+    ``quantize`` must match what the server aggregates-as-transmitted
+    (``FedConfig.quantize_uplink``); ``num_examples`` rides in the
+    ``X-Fed-Examples`` header and only matters under examples weighting.
+    """
+
+    def __init__(self, base_url: str, client_id: int, *, token: str = "",
+                 quantize: str = "none", num_examples: Optional[int] = None,
+                 retries: int = 3, backoff: float = 0.1,
+                 timeout: float = 30.0, recorder=None):
+        self.base_url = base_url.rstrip("/")
+        self.client_id = client_id
+        self.token = token
+        self.codec = AdapterCodec(quantize, recorder=recorder)
+        self.num_examples = num_examples
+        self.retries = retries
+        self.backoff = backoff
+        self.timeout = timeout
+        self.rec = recorder if recorder is not None else NULL
+
+    # -- plumbing ------------------------------------------------------------
+    def _request(self, method: str, path: str, body: Optional[bytes] = None,
+                 headers: Optional[Dict[str, str]] = None
+                 ) -> Tuple[int, bytes, Dict[str, str]]:
+        hdrs = dict(headers or {})
+        if self.token:
+            hdrs["Authorization"] = f"Bearer {self.token}"
+        req = urllib.request.Request(self.base_url + path, data=body,
+                                     headers=hdrs, method=method)
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return resp.status, resp.read(), dict(resp.headers)
+        except urllib.error.HTTPError as e:
+            # non-2xx WITH a response: the status is the answer, not a fault
+            return e.code, e.read(), dict(e.headers or {})
+        except (urllib.error.URLError, ConnectionError, TimeoutError) as e:
+            raise TransientTransportError(
+                f"{method} {path}: {e}", client_id=self.client_id,
+                reason="connect") from e
+
+    def _json(self, data: bytes) -> Dict[str, Any]:
+        try:
+            return json.loads(data.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError):
+            return {}
+
+    # -- API -----------------------------------------------------------------
+    def health(self) -> Dict[str, Any]:
+        code, data, _ = self._request("GET", "/v1/healthz")
+        if code != 200:
+            raise TransientTransportError(f"healthz returned {code}",
+                                          client_id=self.client_id,
+                                          reason="health")
+        return self._json(data)
+
+    def current_round(self) -> int:
+        return int(self.health()["round"])
+
+    def metrics(self) -> Dict[str, Any]:
+        return self._json(self._request("GET", "/v1/metrics")[1])
+
+    def submit_delta(self, lora: Any, round_id: Optional[int] = None
+                     ) -> Dict[str, Any]:
+        """Encode + frame + POST one adapter delta; bounded-backoff retries
+        on 429/503/connection faults (the coordinator's retry budget shape:
+        ``backoff · 2^attempt`` sleeps, ``retries`` re-attempts)."""
+        rid = self.current_round() if round_id is None else int(round_id)
+        payload = self.codec.encode(lora, round_id=rid,
+                                    client_id=self.client_id,
+                                    direction="uplink")
+        body = payload_to_wire(payload)
+        headers = {"Content-Type": "application/octet-stream"}
+        if self.num_examples is not None:
+            headers["X-Fed-Examples"] = str(self.num_examples)
+        attempt = 0
+        while True:
+            try:
+                code, data, _ = self._request(
+                    "POST", f"/v1/rounds/{rid}/deltas", body, headers)
+            except TransientTransportError:
+                if attempt >= self.retries:
+                    raise
+                code = None
+            if code == 200:
+                return self._json(data)
+            if code is not None and code not in _RETRYABLE:
+                obj = self._json(data)
+                reason = str(obj.get("reason", obj.get("error", "rejected")))
+                err = StaleUplinkError if code in (409, 410) else TransportError
+                raise err(f"POST /v1/rounds/{rid}/deltas → {code}: "
+                          f"{obj.get('detail', reason)}",
+                          round_id=rid, client_id=self.client_id,
+                          reason=reason)
+            if code is not None and attempt >= self.retries:
+                raise TransportError(
+                    f"retry budget exhausted after {attempt + 1} POSTs "
+                    f"(last status {code})", round_id=rid,
+                    client_id=self.client_id, reason="retries_exhausted")
+            delay = self.backoff * (2 ** attempt)
+            if self.rec.enabled:
+                self.rec.counter("uplink.http_retries").inc()
+            logger.debug("client %d: POST retry %d in %.3fs (status=%s)",
+                         self.client_id, attempt + 1, delay, code)
+            time.sleep(delay)
+            attempt += 1
+
+    def pull_latest(self) -> PullResult:
+        """GET the merged global adapter; decode through the defended codec
+        (finite check applies — a corrupt downlink quarantines client-side)."""
+        code, data, headers = self._request("GET", "/v1/adapters/latest")
+        if code != 200:
+            raise TransportError(f"pull_latest → {code}",
+                                 client_id=self.client_id, reason="pull")
+        payload = payload_from_wire(data)
+        lora = self.codec.decode(payload)
+        return PullResult(
+            version=int(headers.get("X-Fed-Version", -1)),
+            round_id=int(headers.get("X-Fed-Round", -1)),
+            lora=lora, w0_digest=headers.get("X-Fed-W0-Digest", ""),
+            nbytes=len(data))

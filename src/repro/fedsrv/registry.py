@@ -57,12 +57,28 @@ class ClientInfo:
 
 
 class SimClock:
-    """Deterministic simulated clock (seconds). Monotone, replayable."""
+    """Deterministic simulated clock (seconds). Monotone, replayable.
 
-    def __init__(self, start: float = 0.0):
+    Pass ``now_fn`` (e.g. ``time.monotonic``) to pin the clock to WALL time:
+    :meth:`now` then returns elapsed real seconds since construction, so the
+    same coordinator/server deadline arithmetic (``deadline = now() + ddl``)
+    that drives simulated rounds drives the HTTP federation service
+    (fedsrv/server.py) against real sockets. ``advance``/``advance_to``
+    still work in wall mode — they raise the monotone floor (a retry backoff
+    of 0.5 s means at-least-0.5 s later, which wall time satisfies by
+    waiting) — and the timeline stays monotone even if ``now_fn`` jitters.
+    """
+
+    def __init__(self, start: float = 0.0, now_fn=None):
         self._t = float(start)
+        self._now_fn = now_fn
+        # wall origin: maps now_fn()'s epoch onto the simulated axis so a
+        # restored/advanced _t stays the floor
+        self._wall0 = None if now_fn is None else float(now_fn()) - self._t
 
     def now(self) -> float:
+        if self._now_fn is not None:
+            self._t = max(self._t, float(self._now_fn()) - self._wall0)
         return self._t
 
     def advance_to(self, t: float) -> float:
@@ -72,17 +88,20 @@ class SimClock:
     def advance(self, dt: float) -> float:
         if dt < 0:
             raise ValueError(f"clock cannot run backwards (dt={dt})")
-        self._t += float(dt)
+        self._t = self.now() + float(dt)
         return self._t
 
     # -- checkpoint/resume (crash-safe round state) ------------------------
     def state_dict(self) -> dict:
-        return {"t": self._t}
+        return {"t": self.now()}
 
     def load_state(self, state: dict) -> None:
         """Restore the exact float — a resumed run must replay the same
-        arrival timeline bitwise (checkpoint/round_state)."""
+        arrival timeline bitwise (checkpoint/round_state). In wall mode the
+        restored value becomes the new origin: elapsed time accrues on top."""
         self._t = float(state["t"])
+        if self._now_fn is not None:
+            self._wall0 = float(self._now_fn()) - self._t
 
 
 @dataclass(frozen=True)

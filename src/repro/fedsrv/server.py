@@ -1,0 +1,505 @@
+"""HTTP federation service: the round coordinator behind a real socket.
+
+Everything below the socket is the existing stack — :class:`AdapterCodec`
+defended decode (``_decode_flat`` → ``_validate_flat`` → ring scatter via
+``decode_into``), the :class:`RoundCloseEngine` single-dispatch close, the
+:class:`BytesLedger`, the obs recorder — composed exactly as the in-process
+coordinator composes them, which is what makes the clean-twin parity check
+in scripts/loadgen.py meaningful: an HTTP round must close BITWISE identical
+to an in-process round over the same deliveries.
+
+Endpoints (the Chorus split — ``submit_delta`` up, ``pull_latest`` down):
+
+* ``POST /v1/rounds/{round_id}/deltas`` — one wire-framed uplink payload
+  (fedsrv/wire.py). The PR-7 defended-path outcomes map onto HTTP statuses:
+
+  ===========================  ======  ==================================
+  outcome                      status  in-process twin
+  ===========================  ======  ==================================
+  accepted (lane scattered)    200     ``decode_into`` returned
+  malformed frame              400     ``TransportError reason="wire"``
+  bad/missing bearer token     401     — (auth stub)
+  unknown client id            403     — (registry membership)
+  stale / replayed / dup lane  409     ``StaleUplinkError`` (dropped)
+  serving complete             410     —
+  validation quarantine        422     ``TransportError`` (quarantined)
+  quota exhausted / busy       429     ``TransientTransportError`` (retry)
+  ===========================  ======  ==================================
+
+  429 carries ``Retry-After``; the client's bounded-backoff retry loop is
+  the same machinery the sim coordinator runs on its SimClock.
+* ``GET /v1/adapters/latest`` — the merged global adapter as a wire frame,
+  with ``X-Fed-Version`` (closes so far) and ``X-Fed-W0-Digest`` (sha256
+  over the folded base weights, spec order) headers. The digest is the
+  residual fold's witness: avg(B)·avg(A) alone cannot distinguish an exact
+  FedEx close from naive FedAvg — the folded W0 can.
+* ``GET /v1/healthz`` — round/version/delivery progress (also drives
+  deadline-expiry checks, so a quorum round closes even with no new POSTs).
+* ``GET /v1/metrics`` — obs registry snapshot + per-round records + ledger.
+
+Concurrency: ``ThreadingHTTPServer`` handler threads run decode/validation
+in parallel and serialise only at the ring scatter (RoundBuffers' internal
+RLock) and the round bookkeeping (``self._lock``). A bounded semaphore
+admits at most ``ServeConfig.max_concurrent`` uplink decodes — beyond that
+POSTs bounce with 429 instead of growing the heap under a thundering herd.
+
+Deadlines: the server's :class:`SimClock` is constructed with
+``now_fn=time.monotonic``, so ``FedConfig.round_deadline`` (sim-seconds in
+the coordinator) means WALL seconds here — same arithmetic, real time.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig, LoRAConfig, ServeConfig
+from repro.core.engine import RoundCloseEngine, collect_w0_leaves
+from repro.core.lora import init_lora
+from repro.fedsrv.registry import SimClock
+from repro.fedsrv.transport import (AdapterCodec, BytesLedger,
+                                    StaleUplinkError, TransportError,
+                                    ValidationPolicy)
+from repro.fedsrv.wire import payload_from_wire, payload_to_wire
+from repro.obs import make_recorder
+from repro.util.logging import get_logger
+
+logger = get_logger("fedsrv.server")
+
+_DELTAS_RE = re.compile(r"^/v1/rounds/(-?\d+)/deltas$")
+
+
+def init_global_state(model, lora_cfg: LoRAConfig, seed: int = 0):
+    """(params, global_lora) from one seed — the EXACT init recipe of
+    ``FederatedTrainer.__post_init__``, factored out so a server process and
+    its clean twin (scripts/loadgen.py) derive identical state from
+    (arch, lora_cfg, seed) alone."""
+    rng = jax.random.key(seed)
+    rp, rl = jax.random.split(rng)
+    params = model.init(rp)
+    global_lora = init_lora(rl, params, model.cfg, lora_cfg)
+    if not jax.tree_util.tree_leaves(global_lora):
+        raise ValueError("init_lora produced no adapters — check target "
+                         "patterns / rank for this arch")
+    return params, global_lora
+
+
+def w0_digest(specs, params) -> str:
+    """sha256 over the adapted base (W0) leaves in spec order, fp32 host
+    bytes — the cheap cross-process witness that two parameter trees carry
+    the same residual folds."""
+    h = hashlib.sha256()
+    leaves = collect_w0_leaves(specs, params)
+    for s in specs:
+        h.update(np.asarray(jax.device_get(leaves[s.key]),
+                            np.float32).tobytes())
+    return h.hexdigest()
+
+
+class FederationServer:
+    """Round lifecycle + defended ingest behind the HTTP handler.
+
+    All federation semantics come from ``fed_cfg`` (clients, rounds, quorum,
+    ``round_deadline`` in wall-seconds, weighting, codec, engine backend);
+    ``serve_cfg`` adds only the socket surface (port, backpressure bound,
+    quota, auth token). Rounds are numbered 0..rounds-1 and every client
+    0..num_clients-1 has a lane in each (full-participation candidate set;
+    partial delivery is handled by quorum + deadline exactly as in the sim
+    coordinator).
+    """
+
+    def __init__(self, params, global_lora, *, scale: float,
+                 fed_cfg: FedConfig, serve_cfg: Optional[ServeConfig] = None,
+                 recorder=None):
+        if fed_cfg.engine == "off":
+            raise ValueError("--mode serve needs the streaming close engine "
+                             "(engine=off is the eager list path)")
+        if fed_cfg.method not in ("fedex", "fedex_svd"):
+            raise ValueError(f"serve mode closes fedex/fedex_svd rounds, "
+                             f"got method={fed_cfg.method!r}")
+        self.fed_cfg = fed_cfg
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self.rec = recorder if recorder is not None \
+            else make_recorder(fed_cfg.obs)
+        # SimClock in WALL mode: round_deadline means real seconds
+        self.clock = SimClock(now_fn=time.monotonic)
+        self.codec = AdapterCodec(
+            fed_cfg.quantize_uplink, recorder=self.rec,
+            validation=ValidationPolicy(enabled=fed_cfg.uplink_validation,
+                                        max_norm=fed_cfg.uplink_max_norm))
+        self.codec.register_spec(global_lora)
+        self.ledger = BytesLedger()
+        eng_method = "fedex_svd" if (fed_cfg.method == "fedex_svd"
+                                     and fed_cfg.svd_rank) else "fedex"
+        self.engine = RoundCloseEngine(
+            params, global_lora, c_max=fed_cfg.num_clients, scale=scale,
+            method=eng_method, svd_rank=fed_cfg.svd_rank,
+            backend=fed_cfg.engine, depth=fed_cfg.ring_depth,
+            recorder=self.rec if self.rec.enabled else None,
+            chunk=fed_cfg.close_chunk)
+        self.params = params
+        self.global_lora = global_lora
+        self.version = 0            # closes so far; bumps on every close
+        self.round_id = 0
+        self.done = False
+        self._lock = threading.RLock()
+        self._uplink_slots = threading.BoundedSemaphore(
+            self.serve_cfg.max_concurrent)
+        self._quota: Dict[Tuple[int, int], int] = {}   # (round, client) → POSTs
+        self._examples: Dict[int, float] = {}          # client → declared n
+        self._deadline_at: Optional[float] = None
+        # the previous close's DeferredDivergence: resolved lazily at the
+        # NEXT close (after that round's uplinks landed), so the ring-write/
+        # close-window overlap the obs report proves is real, not staged
+        self._pending_div = None
+        self._digest_cache: Tuple[int, Optional[str]] = (-1, None)
+        self._t_wall0 = time.monotonic()
+        self._open_round(0)
+
+    # -- round lifecycle (callers hold self._lock) --------------------------
+    def _open_round(self, rid: int) -> None:
+        slots = {cid: cid for cid in range(self.fed_cfg.num_clients)}
+        ddl = None
+        if self.fed_cfg.round_deadline > 0:
+            ddl = self.clock.now() + self.fed_cfg.round_deadline
+        self.engine.buffers.begin_round(slots, round_id=rid, deadline=ddl,
+                                        now=self.clock.now())
+        self.round_id = rid
+        self._deadline_at = ddl
+        logger.info("round %d open (C=%d, deadline=%s)", rid, len(slots),
+                    "none" if ddl is None else f"+{self.fed_cfg.round_deadline}s")
+
+    def _resolve_pending(self) -> None:
+        if self._pending_div is not None:
+            self._pending_div.resolve()
+            self._pending_div = None
+
+    def _close_round(self, rid: int) -> None:
+        delivered = sorted(self.engine.buffers.delivered_in(rid))
+        weights = None
+        if self.fed_cfg.weighting == "examples":
+            ns = [self._examples.get(c, 1.0) for c in delivered]
+            weights = [n / sum(ns) for n in ns]
+        # round N-1's host sync happens HERE, after round N's writes
+        self._resolve_pending()
+        self.global_lora, self.params, div = self.engine.close(
+            self.params, delivered, weights, round_id=rid)
+        self._pending_div = div
+        self.version += 1
+        if self.rec.enabled:
+            self.rec.round_set(rid, delivered=len(delivered),
+                               sampled=self.fed_cfg.num_clients)
+            self._stamp_round_comm(rid)
+            self.rec.event("round.close", cat="server", round=rid,
+                           delivered=len(delivered), version=self.version)
+        logger.info("round %d closed: %d/%d delivered, version=%d", rid,
+                    len(delivered), self.fed_cfg.num_clients, self.version)
+        if self.version >= self.fed_cfg.rounds:
+            self.done = True
+            self._resolve_pending()  # no further writes are coming
+        else:
+            self._open_round(rid + 1)
+
+    def _maybe_close(self) -> bool:
+        """Close the current round if complete (all lanes) or expired with
+        quorum. Caller holds self._lock."""
+        if self.done:
+            return False
+        rid = self.round_id
+        delivered = self.engine.buffers.delivered_in(rid)
+        if len(delivered) >= self.fed_cfg.num_clients:
+            self._close_round(rid)
+            return True
+        if (self._deadline_at is not None
+                and self.clock.now() >= self._deadline_at
+                and len(delivered) >= max(1, self.fed_cfg.min_quorum)):
+            self._close_round(rid)
+            return True
+        return False
+
+    def tick(self) -> None:
+        """Deadline poll — lets a quorum round close with no new POSTs."""
+        with self._lock:
+            self._maybe_close()
+
+    def finalize(self) -> None:
+        """Resolve any outstanding divergence handle (blocks on the device)
+        — call before writing metrics/trace so every closed round record
+        carries close_block_us + divergence."""
+        with self._lock:
+            self._resolve_pending()
+
+    # -- accounting ---------------------------------------------------------
+    def _stamp_round_comm(self, rid: int) -> None:
+        """Copy the ledger's per-round comm totals onto the obs round record
+        (caller holds self._lock). Called at close AND again from any
+        accounting that lands after the close — a handler thread whose
+        ``write_flat`` made the round complete can be accounted behind the
+        thread that closed it, so the record must converge, not freeze."""
+        tot = self.ledger.round_totals(rid)
+        self.rec.round_set(rid,
+                           uplink_bytes=tot["uplink_bytes"],
+                           uplink_params=tot["uplink_params"],
+                           downlink_bytes=tot["downlink_bytes"],
+                           downlink_params=tot["downlink_params"])
+
+    def _account(self, payload, body_len: int, header_len: int,
+                 direction: str, note: str) -> None:
+        """Ledger + uplink.http_* counters for one parsed POST. The payload
+        octets go under ``direction`` (uplink / quarantined / dropped); the
+        HTTP request line + headers + wire-frame envelope go under the
+        separate ``http_overhead`` direction so per-param reconciliation
+        stays exact (they are real socket bytes, but zero params)."""
+        overhead = (body_len - payload.nbytes) + header_len
+        self.ledger.record(payload, note=note, direction=direction)
+        self.ledger.record_raw(payload.round_id, "http_overhead", overhead,
+                               client_id=payload.client_id,
+                               note="frame+headers")
+        if self.rec.enabled:
+            self.rec.counter("uplink.http_requests").inc()
+            self.rec.counter("uplink.http_bytes").inc(body_len + header_len)
+            self.rec.counter("uplink.http_overhead_bytes").inc(overhead)
+            if payload.round_id < self.round_id or self.done:
+                self._stamp_round_comm(payload.round_id)  # late account
+
+    # -- request handlers ---------------------------------------------------
+    def handle_submit(self, path_round: int, body: bytes, header_len: int,
+                      token: Optional[str], examples: Optional[float]
+                      ) -> Tuple[int, Dict[str, Any], Dict[str, str]]:
+        """One uplink POST → (status, json body, extra headers)."""
+        rec = self.rec
+        cfg = self.serve_cfg
+        if cfg.token and token != cfg.token:
+            if rec.enabled:
+                rec.counter("uplink.http_rejected[auth]").inc()
+            return 401, {"error": "auth",
+                         "detail": "missing or bad bearer token"}, {}
+        try:
+            payload = payload_from_wire(body)
+        except TransportError as e:
+            if rec.enabled:
+                rec.counter("uplink.http_rejected[wire]").inc()
+            return 400, {"error": "wire", "detail": str(e)}, {}
+        cid = payload.client_id
+        if not 0 <= cid < self.fed_cfg.num_clients:
+            if rec.enabled:
+                rec.counter("uplink.http_rejected[unknown_client]").inc()
+            return 403, {"error": "unknown_client", "client": cid}, {}
+        if payload.round_id != path_round:
+            if rec.enabled:
+                rec.counter("uplink.http_rejected[wire]").inc()
+            return 400, {"error": "wire",
+                         "detail": f"payload round {payload.round_id} != "
+                                   f"path round {path_round}"}, {}
+        with self._lock:
+            if self.done:
+                return 410, {"error": "done",
+                             "detail": "all rounds served"}, {}
+            self._maybe_close()  # a passed deadline closes before we route
+            q = self._quota.get((path_round, cid), 0)
+            if q >= cfg.quota_per_round:
+                if rec.enabled:
+                    rec.counter("uplink.http_rejected[quota]").inc()
+                return 429, {"error": "quota",
+                             "detail": f"{q} POSTs for (round {path_round}, "
+                                       f"client {cid})"}, \
+                    {"Retry-After": "1"}
+            self._quota[(path_round, cid)] = q + 1
+            if examples is not None:
+                self._examples[cid] = float(examples)
+        # backpressure: bounded concurrent decodes — never block the handler
+        if not self._uplink_slots.acquire(blocking=False):
+            if rec.enabled:
+                rec.counter("uplink.http_rejected[busy]").inc()
+            return 429, {"error": "busy",
+                         "detail": "uplink decode slots exhausted"}, \
+                {"Retry-After": "0.1"}
+        try:
+            weight = None
+            if self.fed_cfg.weighting == "examples" and examples is not None:
+                weight = float(examples)
+            # defended path: _decode_flat → _validate_flat → ring scatter;
+            # decode/validate run CONCURRENTLY across handler threads, only
+            # the scatter serialises (RoundBuffers' ring lock)
+            self.codec.decode_into(payload, self.engine.buffers,
+                                   weight=weight)
+        except StaleUplinkError as e:
+            with self._lock:
+                self._account(payload, len(body), header_len, "dropped",
+                              f"drop:{e.reason}")
+            return 409, {"error": "stale", "reason": e.reason}, {}
+        except TransportError as e:
+            with self._lock:
+                self._account(payload, len(body), header_len, "quarantined",
+                              f"quarantine:{e.reason}")
+                if rec.enabled:
+                    rec.counter(f"uplink.quarantined[{e.reason}]").inc()
+            return 422, {"error": "quarantined", "reason": e.reason}, {}
+        finally:
+            self._uplink_slots.release()
+        with self._lock:
+            self._account(payload, len(body), header_len, "uplink",
+                          "http uplink")
+            delivered = len(self.engine.buffers.delivered_in(path_round)) \
+                if path_round == self.round_id and not self.done else None
+            closed = self._maybe_close()
+            return 200, {"status": "accepted", "round": path_round,
+                         "delivered": delivered, "closed": closed,
+                         "version": self.version}, {}
+
+    def handle_latest(self) -> Tuple[int, bytes, Dict[str, str]]:
+        with self._lock:
+            version = self.version
+            tree = self.global_lora
+            digest = self._current_digest()
+            rid = self.round_id
+        payload = self.codec.encode(tree, round_id=version, client_id=-1,
+                                    direction="downlink")
+        body = payload_to_wire(payload)
+        with self._lock:
+            self.ledger.record(payload, note="pull_latest")
+            self.ledger.record_raw(version, "http_overhead",
+                                   len(body) - payload.nbytes,
+                                   note="frame (downlink)")
+            if self.rec.enabled:
+                self.rec.counter("downlink.http_requests").inc()
+                self.rec.counter("downlink.http_bytes").inc(len(body))
+        return 200, body, {"X-Fed-Version": str(version),
+                           "X-Fed-Round": str(rid),
+                           "X-Fed-W0-Digest": digest}
+
+    def _current_digest(self) -> str:
+        ver, cached = self._digest_cache
+        if ver != self.version or cached is None:
+            cached = w0_digest(self.engine.specs, self.params)
+            self._digest_cache = (self.version, cached)
+        return cached
+
+    def handle_healthz(self) -> Tuple[int, Dict[str, Any]]:
+        with self._lock:
+            self._maybe_close()
+            delivered = None
+            if not self.done:
+                delivered = len(
+                    self.engine.buffers.delivered_in(self.round_id))
+            return 200, {
+                "status": "done" if self.done else "serving",
+                "round": self.round_id,
+                "version": self.version,
+                "rounds": self.fed_cfg.rounds,
+                "delivered": delivered,
+                "expected": self.fed_cfg.num_clients,
+                "uptime_s": round(time.monotonic() - self._t_wall0, 3),
+            }
+
+    def handle_metrics(self) -> Tuple[int, Dict[str, Any]]:
+        with self._lock:
+            out: Dict[str, Any] = {
+                "ledger": self.ledger.totals(),
+                "version": self.version,
+                "rounds_closed": self.version,
+            }
+            if self.rec.enabled:
+                out.update(self.rec.metrics.snapshot(),
+                           rounds=self.rec.round_records())
+            return 200, out
+
+
+class FederationHTTPServer(ThreadingHTTPServer):
+    daemon_threads = True
+    # a wedged client socket must not hold a handler thread forever
+    timeout = 30
+
+    def __init__(self, addr, fed: FederationServer):
+        self.fed = fed
+        super().__init__(addr, _Handler)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "fedsrv/1.0"
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):  # route chatter to our logger
+        logger.debug("%s %s", self.address_string(), fmt % args)
+
+    # -- response plumbing ---------------------------------------------------
+    def _send(self, code: int, body: bytes, ctype: str,
+              headers: Optional[Dict[str, str]] = None) -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_json(self, code: int, obj: Dict[str, Any],
+                   headers: Optional[Dict[str, str]] = None) -> None:
+        self._send(code, json.dumps(obj).encode("utf-8"),
+                   "application/json", headers)
+
+    def _header_len(self) -> int:
+        # measured HTTP framing: request line + raw header block (the
+        # http_overhead ledger direction and the uplink.http_* counters
+        # reconcile against this, satellite fix)
+        return len(self.requestline) + 2 + len(bytes(self.headers))
+
+    def _token(self) -> Optional[str]:
+        auth = self.headers.get("Authorization", "")
+        return auth[len("Bearer "):] if auth.startswith("Bearer ") else None
+
+    # -- routes --------------------------------------------------------------
+    def do_GET(self):
+        fed = self.server.fed
+        with fed.rec.span("http.request", cat="http", method="GET",
+                          path=self.path):
+            if self.path == "/v1/healthz":
+                code, obj = fed.handle_healthz()
+                self._send_json(code, obj)
+            elif self.path == "/v1/metrics":
+                code, obj = fed.handle_metrics()
+                self._send_json(code, obj)
+            elif self.path == "/v1/adapters/latest":
+                code, body, headers = fed.handle_latest()
+                self._send(code, body, "application/octet-stream", headers)
+            else:
+                self._send_json(404, {"error": "not_found",
+                                      "path": self.path})
+
+    def do_POST(self):
+        fed = self.server.fed
+        m = _DELTAS_RE.match(self.path)
+        with fed.rec.span("http.request", cat="http", method="POST",
+                          path=self.path):
+            if m is None:
+                self._send_json(404, {"error": "not_found",
+                                      "path": self.path})
+                return
+            length = int(self.headers.get("Content-Length", 0) or 0)
+            body = self.rfile.read(length)
+            examples = self.headers.get("X-Fed-Examples")
+            code, obj, headers = fed.handle_submit(
+                int(m.group(1)), body, self._header_len(),
+                token=self._token(),
+                examples=float(examples) if examples else None)
+            self._send_json(code, obj, headers)
+
+
+def start_http_server(fed: FederationServer, host: str = "127.0.0.1",
+                      port: int = 0) -> FederationHTTPServer:
+    """Bind + serve on a daemon thread; returns the bound server (its
+    ``server_address[1]`` is the actual port — pass 0 for ephemeral)."""
+    httpd = FederationHTTPServer((host, port), fed)
+    t = threading.Thread(target=httpd.serve_forever, name="fedsrv-http",
+                         daemon=True)
+    t.start()
+    logger.info("fedsrv listening on http://%s:%d", *httpd.server_address)
+    return httpd

@@ -27,6 +27,7 @@ instead of scattering poison into the donated device stacks.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -151,6 +152,10 @@ class AdapterCodec:
         # uplink.ingest_bytes_per_s gauge
         self._ingest_bytes = 0
         self._ingest_t0: Optional[int] = None
+        # the HTTP server decodes uplinks from many handler threads at once;
+        # the throughput accumulator is the only read-modify-write shared
+        # state in the codec, so it gets its own lock
+        self._ingest_lock = threading.Lock()
 
     def register_spec(self, tree: Any) -> None:
         """Pin the expected adapter structure (path → shape). Decoded uplinks
@@ -307,13 +312,15 @@ class AdapterCodec:
                     "duplicate lane)", round_id=payload.round_id,
                     client_id=payload.client_id, reason="stale")
         now = time.perf_counter_ns()
-        if self._ingest_t0 is None:
-            self._ingest_t0 = now
-        self._ingest_bytes += payload.nbytes
+        with self._ingest_lock:
+            if self._ingest_t0 is None:
+                self._ingest_t0 = now
+            self._ingest_bytes += payload.nbytes
+            ingest_bytes, t0 = self._ingest_bytes, self._ingest_t0
         if self.rec.enabled:
-            elapsed_s = max((now - self._ingest_t0) / 1e9, 1e-9)
+            elapsed_s = max((now - t0) / 1e9, 1e-9)
             self.rec.gauge("uplink.ingest_bytes_per_s").set(
-                round(self._ingest_bytes / elapsed_s, 1))
+                round(ingest_bytes / elapsed_s, 1))
         return unflatten_from_paths(flat)
 
 
@@ -377,6 +384,17 @@ class BytesLedger:
             round_id=round_id, direction=direction, client_id=client_id,
             params=int(params), nbytes=int(params) * bytes_per_param,
             codec="none", note=note))
+
+    def record_raw(self, round_id: int, direction: str, nbytes: int,
+                   client_id: int = -1, note: str = "") -> None:
+        """Account raw non-payload octets (params=0): HTTP request line +
+        headers + wire frame envelope. These bytes crossed the socket but
+        carry no adapter parameters, so they live under their own direction
+        (``http_overhead``) — folding them into ``uplink_bytes`` would
+        silently break the bytes-per-param story ``reconcile()`` audits."""
+        self.entries.append(LedgerEntry(
+            round_id=round_id, direction=direction, client_id=client_id,
+            params=0, nbytes=int(nbytes), codec="raw", note=note))
 
     # -- views -------------------------------------------------------------
     def round_totals(self, round_id: int) -> Dict[str, int]:

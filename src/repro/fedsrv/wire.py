@@ -1,0 +1,131 @@
+"""Wire framing for HTTP transport: ``Payload`` ↔ bytes.
+
+The in-process coordinator hands :class:`~repro.fedsrv.transport.Payload`
+objects around directly; the HTTP federation service (fedsrv/server.py) needs
+them as octets. The frame is deliberately dumb — no pickle, no compression:
+
+    ``b"FDX1"`` · u32 header length (big-endian) · JSON header · raw buffers
+
+The JSON header carries the payload identity (round/client/direction/codec)
+plus one descriptor per tensor ``{path, dtype, shape, declared, scale,
+nbytes}`` in buffer order; the raw tensor bytes follow back-to-back in that
+same order. ``declared`` round-trips :class:`EncodedTensor.shape` so the
+PR-7 decode boundary (``_decode_flat``'s wire-length-vs-declared-shape
+check) keeps working across the socket — a truncated buffer still DECLARES
+its full logical shape and is quarantined, never mis-reshaped.
+
+:func:`payload_from_wire` is the defended twin of :func:`payload_to_wire`:
+every malformation — bad magic, truncated header or body, unknown dtype,
+buffer length disagreeing with the descriptor — raises a typed
+:class:`TransportError` with ``reason="wire"`` so the server maps it to
+HTTP 400 and counts it, instead of crashing a handler thread.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.fedsrv.transport import EncodedTensor, Payload, TransportError
+
+MAGIC = b"FDX1"
+_HDR = struct.Struct(">I")          # u32 big-endian JSON header length
+# wire dtype allowlist — matches the codec tiers (none/fp16/int8)
+_DTYPES = {"float32": np.float32, "float16": np.float16, "int8": np.int8}
+
+#: fixed framing overhead per payload, before the JSON header
+FRAME_OVERHEAD = len(MAGIC) + _HDR.size
+
+
+def _wire_error(msg: str, round_id=None, client_id=None) -> TransportError:
+    return TransportError(msg, round_id=round_id, client_id=client_id,
+                          reason="wire")
+
+
+def payload_to_wire(payload: Payload) -> bytes:
+    """Serialize a payload to one self-describing frame."""
+    descs = []
+    chunks = []
+    for path, enc in payload.tensors.items():
+        arr = np.ascontiguousarray(enc.data)
+        descs.append({
+            "path": path,
+            "dtype": arr.dtype.name,
+            "shape": list(arr.shape),
+            "declared": None if enc.shape is None else list(enc.shape),
+            "scale": enc.scale,
+            "nbytes": int(arr.nbytes),
+        })
+        chunks.append(arr.tobytes())
+    header = json.dumps({
+        "round_id": payload.round_id,
+        "client_id": payload.client_id,
+        "direction": payload.direction,
+        "codec": payload.codec,
+        "tensors": descs,
+    }, separators=(",", ":")).encode("utf-8")
+    return b"".join([MAGIC, _HDR.pack(len(header)), header] + chunks)
+
+
+def payload_from_wire(data: bytes) -> Payload:
+    """Parse one frame back into a :class:`Payload` (defended — see module
+    docstring). The returned tensors view the input buffer (no copy); the
+    codec's decode ``astype`` materialises fp32 later."""
+    if len(data) < FRAME_OVERHEAD or data[:len(MAGIC)] != MAGIC:
+        raise _wire_error("bad magic / truncated frame "
+                          f"({len(data)} B)")
+    (hlen,) = _HDR.unpack_from(data, len(MAGIC))
+    body_at = FRAME_OVERHEAD + hlen
+    if len(data) < body_at:
+        raise _wire_error(f"truncated header: declares {hlen} B, "
+                          f"frame has {len(data) - FRAME_OVERHEAD}")
+    try:
+        header: Dict[str, Any] = json.loads(
+            data[FRAME_OVERHEAD:body_at].decode("utf-8"))
+        round_id = int(header["round_id"])
+        client_id = int(header["client_id"])
+        direction = str(header["direction"])
+        codec = str(header["codec"])
+        descs = header["tensors"]
+        assert isinstance(descs, list)
+    except (ValueError, KeyError, TypeError, AssertionError,
+            UnicodeDecodeError) as e:
+        raise _wire_error(f"malformed JSON header: {e}") from e
+
+    tensors: Dict[str, EncodedTensor] = {}
+    off = body_at
+    for d in descs:
+        try:
+            path = str(d["path"])
+            dtype = _DTYPES[d["dtype"]]
+            shape = tuple(int(s) for s in d["shape"])
+            declared = d.get("declared")
+            declared = None if declared is None \
+                else tuple(int(s) for s in declared)
+            scale = d.get("scale")
+            scale = None if scale is None else float(scale)
+            nbytes = int(d["nbytes"])
+        except (ValueError, KeyError, TypeError) as e:
+            raise _wire_error(f"malformed tensor descriptor: {e}",
+                              round_id, client_id) from e
+        want = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        if nbytes != want:
+            raise _wire_error(
+                f"{path}: descriptor nbytes={nbytes} disagrees with "
+                f"dtype/shape ({want} B)", round_id, client_id)
+        if off + nbytes > len(data):
+            raise _wire_error(
+                f"{path}: truncated body (need {nbytes} B at offset {off}, "
+                f"frame is {len(data)} B)", round_id, client_id)
+        arr = np.frombuffer(data, dtype=dtype, count=int(
+            np.prod(shape, dtype=np.int64)), offset=off).reshape(shape)
+        off += nbytes
+        tensors[path] = EncodedTensor(arr, scale, declared)
+    if off != len(data):
+        raise _wire_error(f"trailing garbage: {len(data) - off} B past the "
+                          "last tensor", round_id, client_id)
+    return Payload(round_id=round_id, client_id=client_id,
+                   direction=direction, codec=codec, tensors=tensors)

@@ -2,7 +2,11 @@
 
 Serves a (optionally LoRA-adapted, FedEx-aggregated) model: the federated
 artifact of train.py can be merged (core.merge_lora) or applied as adapters at
-request time. CPU-runnable demo:
+request time. ``--pull-from URL`` fetches the CURRENT merged global adapter
+from a running federation server (``train.py --mode serve``) via
+``FedClient.pull_latest`` — the served generation then runs on what the
+federation actually aggregated (arch/rank must match the server's). CPU
+demo:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b-smoke --steps 8
 """
@@ -29,12 +33,20 @@ logger = get_logger("serve")
 
 def serve(arch: str, *, batch_size: int = 2, prompt_len: int = 32,
           steps: int = 8, max_len: int = 128, rank: int = 4,
-          use_lora: bool = True, seed: int = 0):
+          use_lora: bool = True, seed: int = 0, pull_from: str = ""):
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(seed))
     lora_cfg = LoRAConfig(rank=rank)
-    lora = init_lora(jax.random.key(seed + 1), params, cfg, lora_cfg) if use_lora else None
+    if pull_from:
+        from repro.fedsrv.client import FedClient
+        pulled = FedClient(pull_from, client_id=-1).pull_latest()
+        lora = jax.tree_util.tree_map(jnp.asarray, pulled.lora)
+        logger.info("pulled global adapter v%d from %s (W0 digest %s…)",
+                    pulled.version, pull_from, pulled.w0_digest[:12])
+    else:
+        lora = init_lora(jax.random.key(seed + 1), params, cfg, lora_cfg) \
+            if use_lora else None
 
     batch = make_batch_for(cfg, batch_size, prompt_len, seed=seed)
     cache = model.init_cache(batch_size, max_len)
@@ -70,10 +82,14 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--rank", type=int, default=4)
     ap.add_argument("--no-lora", action="store_true")
+    ap.add_argument("--pull-from", default="",
+                    help="federation server URL — serve the merged global "
+                         "adapter from GET /v1/adapters/latest (arch/rank "
+                         "must match the server's)")
     args = ap.parse_args()
     toks = serve(args.arch, batch_size=args.batch_size, prompt_len=args.prompt_len,
                  steps=args.steps, max_len=args.max_len, rank=args.rank,
-                 use_lora=not args.no_lora)
+                 use_lora=not args.no_lora, pull_from=args.pull_from)
     print("generated token ids:\n", toks)
 
 

@@ -63,12 +63,69 @@ def build_federated_data(vocab: int, num_clients: int, *, seqs_per_task: int = 1
     return loaders, eval_batches
 
 
+def _run_serve(args, model, lora_cfg, fed_cfg) -> None:
+    """--mode serve: boot the HTTP federation service and block until all
+    rounds close (or Ctrl-C). Training happens in the CLIENT processes —
+    this process only ingests deltas, closes rounds and serves the merged
+    global adapter (scripts/loadgen.py is the benchmark driver)."""
+    import time
+
+    from repro.configs.base import ServeConfig
+    from repro.fedsrv.server import (FederationServer, init_global_state,
+                                     start_http_server)
+
+    serve_cfg = ServeConfig(host=args.host, port=args.port,
+                            max_concurrent=args.max_concurrent,
+                            quota_per_round=args.quota,
+                            token=args.serve_token)
+    params, global_lora = init_global_state(model, lora_cfg, seed=args.seed)
+    fed = FederationServer(params, global_lora, scale=lora_cfg.scale,
+                           fed_cfg=fed_cfg, serve_cfg=serve_cfg)
+    httpd = start_http_server(fed, host=serve_cfg.host, port=serve_cfg.port)
+    host, port = httpd.server_address[:2]
+    # machine-readable readiness line (loadgen --spawn waits for it)
+    print(f"SERVING http://{host}:{port}", flush=True)
+    try:
+        while not fed.done:
+            time.sleep(0.05)
+            fed.tick()  # deadline-expiry closes need no inbound POST
+        # drain window: the benchmark/clients still need the final
+        # pull_latest + metrics after the last close
+        logger.info("all %d rounds closed — lingering %.1fs for pulls",
+                    fed.version, args.linger)
+        time.sleep(args.linger)
+    except KeyboardInterrupt:
+        logger.info("interrupted — shutting down after %d close(s)",
+                    fed.version)
+    httpd.shutdown()
+    fed.finalize()  # resolve the last divergence before metrics flush
+    rec = fed.rec
+    if rec.enabled:
+        for line in rec.summary_lines():
+            logger.info("%s", line)
+        if args.trace:
+            rec.write_trace(args.trace)
+            logger.info("trace → %s", args.trace)
+        if args.metrics_out:
+            rec.write_metrics(args.metrics_out)
+            logger.info("metrics JSONL → %s", args.metrics_out)
+    if fed.ledger.entries:
+        print("comm ledger (measured over HTTP):")
+        for line in fed.ledger.summary_lines():
+            print("  " + line)
+    print(f"\nserved {fed.version}/{fed_cfg.rounds} round close(s) "
+          f"(C={fed_cfg.num_clients}, method={fed_cfg.method})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", default="host", choices=("host", "mesh"),
+    ap.add_argument("--mode", default="host", choices=("host", "mesh", "serve"),
                     help="host = paper's cross-silo simulation (fedsrv "
                          "coordinator); mesh = co-scheduled clients, one "
-                         "pjit'd program per round phase (mesh_train.py)")
+                         "pjit'd program per round phase (mesh_train.py); "
+                         "serve = HTTP federation service (fedsrv/server.py) "
+                         "— clients POST deltas over the wire, --deadline "
+                         "means WALL seconds")
     ap.add_argument("--arch", default="paper-tiny")
     ap.add_argument("--method", default="fedex",
                     choices=("fedex", "fedit", "ffa", "fedex_svd", "centralized"))
@@ -154,6 +211,24 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true",
                     help="resume from --checkpoint-dir's round_state.npz "
                          "(bitwise continuation of the interrupted run)")
+    # HTTP federation service (--mode serve; fedsrv/server.py):
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="serve mode: bind address")
+    ap.add_argument("--port", type=int, default=8077,
+                    help="serve mode: bind port (0 = ephemeral, reported at "
+                         "startup)")
+    ap.add_argument("--serve-token", default="",
+                    help="serve mode: shared bearer token ('' = auth off)")
+    ap.add_argument("--max-concurrent", type=int, default=16,
+                    help="serve mode: concurrent uplink decodes admitted "
+                         "before POSTs bounce with 429 (backpressure)")
+    ap.add_argument("--quota", type=int, default=4,
+                    help="serve mode: POSTs allowed per (client, round) "
+                         "before 429 (quota)")
+    ap.add_argument("--linger", type=float, default=15.0,
+                    help="serve mode: keep serving GETs (pull_latest / "
+                         "metrics) this many seconds after the last round "
+                         "closes, so clients can fetch the final artifact")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--out", default="", help="write round history JSON here")
@@ -214,6 +289,10 @@ def main() -> None:
         cfg = replace(cfg, vocab_size=args.vocab)
     cfg = replace(cfg, dtype=args.dtype)
     model = build_model(cfg)
+
+    if args.mode == "serve":
+        _run_serve(args, model, lora_cfg, fed_cfg)
+        return
 
     loaders, eval_batches = build_federated_data(
         cfg.vocab_size, args.clients, seq_len=args.seq_len,

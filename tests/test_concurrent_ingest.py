@@ -1,0 +1,235 @@
+"""Threaded ingest into the ring (the HTTP server's concurrency contract).
+
+fedsrv/server.py decodes uplinks on many ThreadingHTTPServer handler threads
+at once; decode/validate run in parallel and only the ring scatter +
+bookkeeping serialize on RoundBuffers' internal RLock. These tests hammer
+that lock directly — many writer threads racing each other, racing
+``begin_round``/``take`` rotation, and racing eviction — and assert the
+ring's invariants hold under the race:
+
+* every ACCEPTED write lands exactly once in its lane (no lost updates,
+  no double scatters), and the closed aggregate equals a serial twin's;
+* a duplicate (client, round) write loses the race exactly once — accepted
+  + duplicate_drops == attempts, per lane accepted == 1;
+* writes racing an eviction either land before it (counted in the evicted
+  round's delivered map) or drop cleanly (return False) — never scatter
+  into a different live round;
+* the codec's shared ingest-throughput accumulator under ``decode_into``
+  from many threads equals the exact byte sum of accepted payloads.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import RoundBuffers, RoundCloseEngine
+from repro.fedsrv.transport import (AdapterCodec, StaleUplinkError,
+                                    ValidationPolicy)
+from repro.util.tree import flatten_with_paths
+
+M, N, R = 8, 6, 2
+
+
+def _template():
+    return {"blk": {"q": {"a": jnp.zeros((M, R), jnp.float32),
+                          "b": jnp.zeros((R, N), jnp.float32)}}}
+
+
+def _delta(rnd, cid, seed=7):
+    g = np.random.default_rng([seed, rnd, cid])
+    return {"blk": {"q": {"a": g.normal(size=(M, R)).astype(np.float32),
+                          "b": g.normal(size=(R, N)).astype(np.float32)}}}
+
+
+def _run_threads(fns):
+    """Start all thunks behind one barrier so they actually contend."""
+    barrier = threading.Barrier(len(fns))
+    errors = []
+
+    def _wrap(fn):
+        try:
+            barrier.wait()
+            fn()
+        except Exception as e:  # pragma: no cover - surfaced via assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=_wrap, args=(fn,)) for fn in fns]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "writer thread wedged"
+    assert not errors, errors
+
+
+class TestThreadedWriters:
+    def test_parallel_writes_land_exactly_once(self):
+        C = 24
+        buf = RoundBuffers(_template(), c_max=C)
+        buf.begin_round({i: i for i in range(C)}, round_id=0)
+        results = {}
+
+        def writer(cid):
+            def _go():
+                results[cid] = buf.write(cid, _delta(0, cid), round_id=0)
+            return _go
+
+        _run_threads([writer(i) for i in range(C)])
+        assert all(results.values())
+        assert sorted(buf.delivered_in(0)) == list(range(C))
+        stacks = buf.take(0)
+        for path, stack in stacks.items():
+            for i in range(C):
+                want = flatten_with_paths(_delta(0, i))[path]
+                np.testing.assert_array_equal(np.asarray(stack[i]), want,
+                                              err_msg=f"{path} lane {i}")
+
+    def test_duplicate_race_single_winner_per_lane(self):
+        C, dup = 8, 4  # dup threads per lane, all racing the same round
+        buf = RoundBuffers(_template(), c_max=C)
+        buf.begin_round({i: i for i in range(C)}, round_id=0)
+        outcomes = []
+        lock = threading.Lock()
+
+        def writer(cid):
+            def _go():
+                ok = buf.write(cid, _delta(0, cid), round_id=0)
+                with lock:
+                    outcomes.append((cid, ok))
+            return _go
+
+        _run_threads([writer(i) for i in range(C) for _ in range(dup)])
+        for cid in range(C):
+            wins = [ok for c, ok in outcomes if c == cid and ok]
+            assert len(wins) == 1, f"lane {cid}: {len(wins)} accepted writes"
+        assert buf.duplicate_drops == C * (dup - 1)
+        assert sorted(buf.delivered_in(0)) == list(range(C))
+
+    def test_writers_racing_rotation_and_eviction(self):
+        """Round 0 (evictable) and round 1 fill concurrently while the main
+        thread evicts round 0 mid-stream: round-1 writes must ALL land,
+        round-0 writes must each either land before the evict (delivered)
+        or drop (False) — the two rounds' lanes never cross."""
+        C = 16
+        buf = RoundBuffers(_template(), c_max=C)
+        buf.begin_round({i: i for i in range(C)}, round_id=0)
+        buf.begin_round({i: i for i in range(C)}, round_id=1)
+        r0 = {}
+
+        def writer(rnd, cid):
+            def _go():
+                ok = buf.write(cid, _delta(rnd, cid), round_id=rnd)
+                if rnd == 0:
+                    r0[cid] = ok
+            return _go
+
+        evicted = {}
+
+        def evictor():
+            evicted.update(buf.evict(0, reason="test race"))
+
+        _run_threads([writer(r, i) for r in (0, 1) for i in range(C)]
+                     + [evictor])
+        # round 0: accepted set == the delivered map the evict returned
+        assert {c for c, ok in r0.items() if ok} == set(evicted)
+        # round 1 is untouched by the eviction
+        assert sorted(buf.delivered_in(1)) == list(range(C))
+        stacks = buf.take(1)
+        for path, stack in stacks.items():
+            for i in range(C):
+                want = flatten_with_paths(_delta(1, i))[path]
+                np.testing.assert_array_equal(np.asarray(stack[i]), want,
+                                              err_msg=f"{path} lane {i}")
+        # late uplink for the evicted round drops cleanly
+        assert buf.write(0, _delta(0, 0), round_id=0) is False
+        assert buf.stale_drops >= 1
+
+    def test_threaded_close_equals_serial_twin(self):
+        """Engine close over threads-scattered stacks is BITWISE the serial
+        close — arrival order cannot leak into the aggregate."""
+        C = 12
+        params = {"blk": {"q": {"kernel": jnp.asarray(
+            np.random.default_rng(0).normal(size=(M, N)), jnp.float32)}}}
+        threaded = RoundCloseEngine(params, _template(), c_max=C, scale=0.5,
+                                    backend="auto")
+        serial = RoundCloseEngine(params, _template(), c_max=C, scale=0.5,
+                                  backend="auto")
+        threaded.buffers.begin_round({i: i for i in range(C)}, round_id=0)
+        serial.buffers.begin_round({i: i for i in range(C)}, round_id=0)
+        _run_threads([
+            (lambda cid: lambda: threaded.buffers.write(
+                cid, _delta(0, cid), round_id=0))(i)
+            for i in reversed(range(C))])
+        for i in range(C):
+            serial.buffers.write(i, _delta(0, i), round_id=0)
+        lt, pt, _ = threaded.close(params, list(range(C)), round_id=0)
+        ls, ps, _ = serial.close(params, list(range(C)), round_id=0)
+        for k, v in flatten_with_paths(lt).items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(flatten_with_paths(ls)[k]))
+        for k, v in flatten_with_paths(pt).items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(flatten_with_paths(ps)[k]))
+
+
+class TestThreadedDecodeInto:
+    @pytest.mark.parametrize("quantize", ["none", "int8"])
+    def test_concurrent_decode_into_exact(self, quantize):
+        """The server's actual ingest path: many threads running
+        ``codec.decode_into`` concurrently. Every accepted payload's
+        dequantized leaves land in their lane; the codec's shared ingest
+        byte accumulator (uplink.ingest_bytes_per_s numerator) is the exact
+        sum of accepted payload bytes — no torn read-modify-write."""
+        C = 16
+        codec = AdapterCodec(quantize, validation=ValidationPolicy())
+        codec.register_spec(_template())
+        buf = RoundBuffers(_template(), c_max=C)
+        buf.begin_round({i: i for i in range(C)}, round_id=0)
+        payloads = [codec.encode(_delta(0, i), round_id=0, client_id=i)
+                    for i in range(C)]
+
+        def writer(p):
+            return lambda: codec.decode_into(p, buf)
+
+        _run_threads([writer(p) for p in payloads])
+        assert sorted(buf.delivered_in(0)) == list(range(C))
+        assert codec._ingest_bytes == sum(p.nbytes for p in payloads)
+        ref = AdapterCodec(quantize)
+        stacks = buf.take(0)
+        for i, p in enumerate(payloads):
+            want = flatten_with_paths(ref.decode(p))
+            for path, stack in stacks.items():
+                np.testing.assert_array_equal(
+                    np.asarray(stack[i]), np.asarray(want[path]),
+                    err_msg=f"{path} lane {i} ({quantize})")
+
+    def test_stale_decode_into_races_accepted_writes(self):
+        """Duplicate payloads race the originals through decode_into: each
+        lane accepts exactly one copy, every loser raises StaleUplinkError,
+        and only WINNER bytes hit the ingest accumulator."""
+        C = 8
+        codec = AdapterCodec("none")
+        codec.register_spec(_template())
+        buf = RoundBuffers(_template(), c_max=C)
+        buf.begin_round({i: i for i in range(C)}, round_id=0)
+        payloads = [codec.encode(_delta(0, i), round_id=0, client_id=i)
+                    for i in range(C)]
+        stale = []
+        lock = threading.Lock()
+
+        def writer(p):
+            def _go():
+                try:
+                    codec.decode_into(p, buf)
+                except StaleUplinkError:
+                    with lock:
+                        stale.append(p.client_id)
+            return _go
+
+        _run_threads([writer(p) for p in payloads for _ in range(3)])
+        assert sorted(buf.delivered_in(0)) == list(range(C))
+        assert sorted(stale) == sorted(list(range(C)) * 2)
+        assert buf.duplicate_drops == 2 * C
+        assert codec._ingest_bytes == sum(p.nbytes for p in payloads)

@@ -1,0 +1,368 @@
+"""HTTP federation service (fedsrv/server.py + client.py + wire.py).
+
+Contracts under test:
+
+* Wire frame round-trip: ``payload_to_wire``/``payload_from_wire`` is exact
+  for every codec tier, and every malformation (magic, truncated header,
+  truncated body, bad dtype, descriptor/byte disagreement, trailing bytes)
+  raises ``TransportError reason="wire"`` — never a frombuffer crash.
+* End-to-end exactness: rounds driven through FedClient → real socket →
+  defended decode → ring → engine close are BITWISE identical to an
+  in-process engine replay of the same deltas (same seed), and the server's
+  W0 digest matches the twin's folded base — the residual-fold witness.
+* HTTP status mapping: 401 auth, 403 unknown client, 400 wire/addressing,
+  409 stale/replay, 410 done, 422 quarantine (with the reason landing in
+  ``uplink.quarantined[reason]``), 429 quota.
+* Deadline mapping: ``FedConfig.round_deadline`` means wall-seconds in
+  serve mode (SimClock pinned to ``time.monotonic``); an expired round
+  closes at quorum from a ``tick()``/healthz poll with no further POSTs.
+* Ledger-vs-wire reconciliation under HTTP framing: request-line + header
+  + frame-envelope octets live under the separate ``http_overhead``
+  direction, and ``uplink.http_bytes`` equals payload-direction ledger
+  bytes + ``uplink.http_overhead_bytes`` exactly (satellite fix).
+* SimClock wall mode: monotone, advance() floors, state round-trips.
+"""
+
+import time
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, ServeConfig
+from repro.core.engine import RoundCloseEngine
+from repro.fedsrv.client import FedClient
+from repro.fedsrv.registry import SimClock
+from repro.fedsrv.server import (FederationServer, start_http_server,
+                                 w0_digest)
+from repro.fedsrv.transport import (AdapterCodec, Payload, StaleUplinkError,
+                                    TransportError)
+from repro.fedsrv.wire import payload_from_wire, payload_to_wire
+from repro.util.tree import flatten_with_paths
+
+M, N, R = 8, 6, 2
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"blk": {"q": {"kernel": jnp.asarray(
+        rng.normal(size=(M, N)), jnp.float32)}}}
+
+
+def _template():
+    return {"blk": {"q": {"a": jnp.zeros((M, R), jnp.float32),
+                          "b": jnp.zeros((R, N), jnp.float32)}}}
+
+
+def _delta(rnd, cid, seed=42):
+    g = np.random.default_rng([seed, rnd, cid])
+    return {"blk": {"q": {"a": g.normal(size=(M, R)).astype(np.float32),
+                          "b": g.normal(size=(R, N)).astype(np.float32)}}}
+
+
+def _bitwise(a, b):
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_array_equal(np.asarray(fa[k]), np.asarray(fb[k]),
+                                      err_msg=f"at {k}")
+
+
+@pytest.fixture
+def served():
+    """A booted 3-client 2-round server on an ephemeral port + its URL.
+    Token auth on; obs trace so counters/records are assertable."""
+    fed_cfg = FedConfig(num_clients=3, rounds=2, obs="trace")
+    srv = FederationServer(_params(), _template(), scale=0.5,
+                           fed_cfg=fed_cfg,
+                           serve_cfg=ServeConfig(port=0, token="tok",
+                                                 quota_per_round=2))
+    httpd = start_http_server(srv, port=0)
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    yield srv, url
+    httpd.shutdown()
+
+
+class TestWireFrame:
+    @pytest.mark.parametrize("codec", ["none", "fp16", "int8"])
+    def test_round_trip_exact(self, codec):
+        c = AdapterCodec(codec)
+        payload = c.encode(_delta(0, 1), round_id=3, client_id=1)
+        back = payload_from_wire(payload_to_wire(payload))
+        assert (back.round_id, back.client_id, back.codec,
+                back.direction) == (3, 1, codec, "uplink")
+        _bitwise(c.decode(back), c.decode(payload))
+
+    def test_declared_shape_survives_framing(self):
+        # a truncated buffer that still DECLARES its full shape must be
+        # quarantined by the decode boundary after crossing the wire
+        c = AdapterCodec("none")
+        payload = c.encode(_delta(0, 0), round_id=0, client_id=0)
+        path, enc = next(iter(payload.tensors.items()))
+        cut = type(enc)(enc.data.reshape(-1)[:-2], enc.scale,
+                        tuple(enc.data.shape))
+        bad = Payload(payload.round_id, payload.client_id, payload.direction,
+                      payload.codec, {**payload.tensors, path: cut})
+        back = payload_from_wire(payload_to_wire(bad))
+        with pytest.raises(TransportError) as ei:
+            c.decode(back)
+        assert ei.value.reason == "bytes"
+
+    @pytest.mark.parametrize("mangle", [
+        lambda b: b"XXXX" + b[4:],                      # magic
+        lambda b: b[:6],                                # truncated header
+        lambda b: b[:-3],                               # truncated body
+        lambda b: b + b"\x00\x00",                      # trailing garbage
+        lambda b: b[:4] + b"\xff\xff\xff\xff" + b[8:],  # absurd header len
+    ])
+    def test_malformed_frames_raise_wire_reason(self, mangle):
+        payload = AdapterCodec("none").encode(_delta(0, 0), round_id=0,
+                                              client_id=0)
+        with pytest.raises(TransportError) as ei:
+            payload_from_wire(mangle(payload_to_wire(payload)))
+        assert ei.value.reason == "wire"
+
+    def test_bad_dtype_rejected(self):
+        payload = AdapterCodec("none").encode(_delta(0, 0), round_id=0,
+                                              client_id=0)
+        blob = payload_to_wire(payload)
+        assert b"float32" in blob
+        with pytest.raises(TransportError) as ei:
+            payload_from_wire(blob.replace(b"float32", b"float64", 1))
+        assert ei.value.reason == "wire"
+
+
+class TestServerEndToEnd:
+    def test_rounds_close_bitwise_vs_inprocess_twin(self, served):
+        srv, url = served
+        clients = [FedClient(url, i, token="tok") for i in range(3)]
+        for rnd in range(2):
+            for i, c in enumerate(clients):
+                resp = c.submit_delta(_delta(rnd, i), round_id=rnd)
+                assert resp["status"] == "accepted"
+        pull = clients[0].pull_latest()
+        assert pull.version == 2
+
+        eng = RoundCloseEngine(_params(), _template(), c_max=3, scale=0.5,
+                               backend="auto")
+        tp, tl = _params(), None
+        for rnd in range(2):
+            eng.buffers.begin_round({i: i for i in range(3)}, round_id=rnd)
+            for i in range(3):
+                eng.buffers.write(i, _delta(rnd, i), round_id=rnd)
+            tl, tp, div = eng.close(tp, [0, 1, 2], round_id=rnd)
+        _bitwise(pull.lora, tl)
+        assert pull.w0_digest == w0_digest(eng.specs, tp)
+
+    def test_done_server_rejects_with_410(self, served):
+        srv, url = served
+        clients = [FedClient(url, i, token="tok") for i in range(3)]
+        for rnd in range(2):
+            for i, c in enumerate(clients):
+                c.submit_delta(_delta(rnd, i), round_id=rnd)
+        assert clients[0].health()["status"] == "done"
+        with pytest.raises(StaleUplinkError):
+            clients[0].submit_delta(_delta(5, 0), round_id=5)
+
+    def test_examples_weighting_matches_weighted_twin(self):
+        fed_cfg = FedConfig(num_clients=3, rounds=1, weighting="examples")
+        srv = FederationServer(_params(), _template(), scale=0.5,
+                               fed_cfg=fed_cfg,
+                               serve_cfg=ServeConfig(port=0))
+        httpd = start_http_server(srv, port=0)
+        url = f"http://127.0.0.1:{httpd.server_address[1]}"
+        try:
+            ns = [120, 40, 200]
+            for i in range(3):
+                FedClient(url, i, num_examples=ns[i]).submit_delta(
+                    _delta(0, i), round_id=0)
+            pull = FedClient(url, 0).pull_latest()
+        finally:
+            httpd.shutdown()
+        eng = RoundCloseEngine(_params(), _template(), c_max=3, scale=0.5,
+                               backend="auto")
+        eng.buffers.begin_round({i: i for i in range(3)}, round_id=0)
+        for i in range(3):
+            eng.buffers.write(i, _delta(0, i), round_id=0)
+        tot = sum(ns)
+        tl, tp, _ = eng.close(_params(), [0, 1, 2],
+                              [n / tot for n in ns], round_id=0)
+        _bitwise(pull.lora, tl)
+        assert pull.w0_digest == w0_digest(eng.specs, tp)
+
+
+class TestHTTPStatusMapping:
+    def test_auth_401(self, served):
+        srv, url = served
+        with pytest.raises(TransportError) as ei:
+            FedClient(url, 0, token="wrong").submit_delta(_delta(0, 0),
+                                                          round_id=0)
+        assert ei.value.reason == "auth"
+        assert srv.rec.metrics.snapshot()["counters"][
+            "uplink.http_rejected[auth]"] == 1
+
+    def test_unknown_client_403(self, served):
+        srv, url = served
+        with pytest.raises(TransportError) as ei:
+            FedClient(url, 99, token="tok").submit_delta(_delta(0, 99),
+                                                         round_id=0)
+        assert ei.value.reason == "unknown_client"
+
+    def test_malformed_body_400(self, served):
+        srv, url = served
+        req = urllib.request.Request(
+            f"{url}/v1/rounds/0/deltas", data=b"not a frame",
+            headers={"Authorization": "Bearer tok"}, method="POST")
+        try:
+            urllib.request.urlopen(req)
+            raise AssertionError("expected HTTP 400")
+        except urllib.error.HTTPError as e:
+            assert e.code == 400
+
+    def test_duplicate_lane_409_replay_after_close_409(self, served):
+        srv, url = served
+        c0 = FedClient(url, 0, token="tok")
+        c0.submit_delta(_delta(0, 0), round_id=0)
+        with pytest.raises(StaleUplinkError):       # duplicate lane
+            c0.submit_delta(_delta(0, 0), round_id=0)
+        for i in (1, 2):
+            FedClient(url, i, token="tok").submit_delta(_delta(0, i),
+                                                        round_id=0)
+        with pytest.raises(StaleUplinkError):       # replay: round 0 closed
+            FedClient(url, 1, token="tok").submit_delta(_delta(0, 1),
+                                                        round_id=0)
+
+    def test_quarantine_422_reason_counted(self, served):
+        srv, url = served
+        bad = _delta(0, 0)
+        bad["blk"]["q"]["a"][0, 0] = np.nan
+        with pytest.raises(TransportError) as ei:
+            FedClient(url, 0, token="tok").submit_delta(bad, round_id=0)
+        assert ei.value.reason == "nonfinite"
+        snap = srv.rec.metrics.snapshot()["counters"]
+        assert snap["uplink.quarantined[nonfinite]"] == 1
+        # the quarantined bytes are ledgered under their own direction
+        tot = srv.ledger.round_totals(0)
+        assert tot.get("quarantined_bytes", 0) > 0
+        assert tot["uplink_bytes"] == 0
+
+    def test_quota_429_then_retry_exhaustion(self, served):
+        srv, url = served
+        c = FedClient(url, 0, token="tok", retries=1, backoff=0.01)
+        c.submit_delta(_delta(0, 0), round_id=0)
+        with pytest.raises(StaleUplinkError):
+            c.submit_delta(_delta(0, 0), round_id=0)  # dup → quota 2/2 spent
+        with pytest.raises(TransportError) as ei:
+            c.submit_delta(_delta(0, 0), round_id=0)  # 429 until budget dies
+        assert ei.value.reason == "retries_exhausted"
+        snap = srv.rec.metrics.snapshot()["counters"]
+        assert snap["uplink.http_rejected[quota]"] == 2  # initial + 1 retry
+
+
+class TestDeadlineQuorum:
+    def test_wall_deadline_closes_at_quorum_without_posts(self):
+        fed_cfg = FedConfig(num_clients=3, rounds=1, min_quorum=2,
+                            round_deadline=0.4)
+        srv = FederationServer(_params(), _template(), scale=0.5,
+                               fed_cfg=fed_cfg, serve_cfg=ServeConfig(port=0))
+        httpd = start_http_server(srv, port=0)
+        url = f"http://127.0.0.1:{httpd.server_address[1]}"
+        try:
+            for i in (0, 2):
+                FedClient(url, i).submit_delta(_delta(0, i), round_id=0)
+            assert srv.version == 0  # quorum met but deadline not expired
+            deadline = time.monotonic() + 5.0
+            while srv.version == 0 and time.monotonic() < deadline:
+                srv.tick()          # wall deadline expires → quorum close
+                time.sleep(0.02)
+            assert srv.version == 1 and srv.done
+            pull = FedClient(url, 0).pull_latest()
+        finally:
+            httpd.shutdown()
+        # exact over the DELIVERED subset only
+        eng = RoundCloseEngine(_params(), _template(), c_max=3, scale=0.5,
+                               backend="auto")
+        eng.buffers.begin_round({i: i for i in range(3)}, round_id=0)
+        for i in (0, 2):
+            eng.buffers.write(i, _delta(0, i), round_id=0)
+        tl, tp, _ = eng.close(_params(), [0, 2], round_id=0)
+        _bitwise(pull.lora, tl)
+        assert pull.w0_digest == w0_digest(eng.specs, tp)
+
+
+class TestHTTPFramingReconciliation:
+    def test_http_bytes_equal_payload_plus_overhead(self, served):
+        """Satellite fix regression: every on-the-wire octet is either
+        payload (uplink/quarantined/dropped ledger directions) or overhead
+        (http_overhead direction == uplink.http_overhead_bytes counter) —
+        nothing silently folded into payload byte counts."""
+        srv, url = served
+        bad = _delta(0, 1)
+        bad["blk"]["q"]["b"][0, 0] = np.inf
+        c0, c1 = (FedClient(url, i, token="tok") for i in (0, 1))
+        c0.submit_delta(_delta(0, 0), round_id=0)
+        with pytest.raises(StaleUplinkError):
+            c0.submit_delta(_delta(0, 0), round_id=0)   # dropped (duplicate)
+        with pytest.raises(TransportError):
+            c1.submit_delta(bad, round_id=0)            # quarantined
+        snap = srv.rec.metrics.snapshot()["counters"]
+        tot = srv.ledger.round_totals(0)
+        payload_bytes = (tot["uplink_bytes"] + tot.get("quarantined_bytes", 0)
+                        + tot.get("dropped_bytes", 0))
+        assert tot["uplink_params"] > 0
+        assert tot["http_overhead_params"] == 0      # raw octets, no params
+        assert snap["uplink.http_overhead_bytes"] == tot["http_overhead_bytes"]
+        assert snap["uplink.http_bytes"] == \
+            payload_bytes + snap["uplink.http_overhead_bytes"]
+
+    def test_downlink_frame_overhead_tracked(self, served):
+        srv, url = served
+        FedClient(url, 0, token="tok").pull_latest()
+        tot = srv.ledger.round_totals(0)  # version 0 downlink
+        assert tot["downlink_bytes"] > 0
+        assert tot["http_overhead_bytes"] > 0
+        snap = srv.rec.metrics.snapshot()["counters"]
+        assert snap["downlink.http_bytes"] == \
+            tot["downlink_bytes"] + tot["http_overhead_bytes"]
+
+
+class TestSimClockWallMode:
+    def test_sim_mode_unchanged_bitwise(self):
+        c = SimClock()
+        c.advance(0.1)
+        c.advance_to(1.5)
+        assert c.now() == 1.5
+        c2 = SimClock()
+        c2.load_state(c.state_dict())
+        assert c2.now() == 1.5
+
+    def test_wall_mode_tracks_elapsed_time(self):
+        fake = [100.0]
+        c = SimClock(now_fn=lambda: fake[0])
+        assert c.now() == 0.0
+        fake[0] = 100.5
+        assert c.now() == pytest.approx(0.5)
+
+    def test_wall_mode_advance_is_a_floor(self):
+        fake = [0.0]
+        c = SimClock(now_fn=lambda: fake[0])
+        c.advance(2.0)                      # floor: at-least-2s later
+        assert c.now() == 2.0
+        fake[0] = 1.0                       # wall behind the floor
+        assert c.now() == 2.0               # monotone
+        fake[0] = 3.5
+        assert c.now() == pytest.approx(3.5)
+
+    def test_wall_mode_state_round_trip(self):
+        fake = [10.0]
+        c = SimClock(now_fn=lambda: fake[0])
+        fake[0] = 11.0
+        state = c.state_dict()
+        assert state["t"] == pytest.approx(1.0)
+        c2 = SimClock(now_fn=lambda: fake[0])
+        c2.load_state(state)
+        assert c2.now() == pytest.approx(1.0)   # restored value is origin
+        fake[0] = 12.5
+        assert c2.now() == pytest.approx(2.5)
