@@ -191,6 +191,69 @@ def run_chaos(faults: str, model, recorder, rounds: int):
     assert all_ok, "faulty-run close diverged from its crash-twin"
 
 
+def run_chaos_hetero(faults: str, model, recorder, rounds: int):
+    """Ragged-rank chaos scenario: the same fault plan vs its crash-twin,
+    but with ``method=hetero`` and mixed client ranks — quarantining a
+    RAGGED lane must exclude it exactly (per-client bases and rank-r_i
+    adapters bitwise identical to the twin).  Stamps ``clean_exact`` per
+    round under the ``chaos-hetero`` run label; ``scripts/obs_report.py
+    --check --chaos`` asserts every stamp."""
+    ranks = (4, 2, 1, 3, 2)  # r_max=4; the default plan faults ragged lanes
+    print("\n=== chaos-hetero: ragged-rank fault plan vs crash-twin ===")
+    print(f"  plan: {faults}  client_ranks: {ranks}")
+    t0 = time.time()
+
+    def make(plan, rec_):
+        loaders, evals = build_data()
+        if rec_ is not None:
+            rec_.set_run("chaos-hetero")
+        return FederatedTrainer(
+            model=model, lora_cfg=LoRAConfig(rank=4, alpha=8),
+            fed_cfg=FedConfig(num_clients=CLIENTS, rounds=rounds,
+                              local_steps=3, method="hetero",
+                              client_ranks=ranks, engine="auto",
+                              participation=1.0, faults=plan),
+            train_cfg=TrainConfig(learning_rate=5e-3, schedule="constant",
+                                  total_steps=rounds * 3),
+            client_loaders=loaders, eval_batches=evals, seed=0,
+            recorder=rec_)
+
+    faulty = make(faults, recorder)
+    hist = faulty.run()
+    q = sorted({e.client_id for e in faulty.ledger.entries
+                if e.direction == "quarantined"})
+    d = sorted({e.client_id for e in faulty.ledger.entries
+                if e.direction == "dropped"})
+    print(f"  quarantined clients: {q}  dropped clients: {d}")
+
+    twin_plan = crash_twin(faults)
+    if twin_plan is None:
+        print("  plan has non-twin-safe kinds — skipping exactness stamps")
+        return
+    print(f"  twin: {twin_plan}")
+    twin = make(twin_plan, None)
+    twin_hist = twin.run()
+
+    leaves_f = jax.tree.leaves((faulty.global_lora, faulty.client_params,
+                                faulty._client_lora))
+    leaves_t = jax.tree.leaves((twin.global_lora, twin.client_params,
+                                twin._client_lora))
+    final_ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(leaves_f, leaves_t))
+    all_ok = final_ok
+    for r in range(rounds):
+        ok = final_ok and hist[r].eval_loss == twin_hist[r].eval_loss
+        all_ok = all_ok and ok
+        if recorder is not None:
+            recorder.round_set(r, clean_exact=int(ok))
+        print(f"  round {r}: clean_exact={int(ok)} "
+              f"(eval {hist[r].eval_loss:.6f} vs {twin_hist[r].eval_loss:.6f})")
+    print(f"  final global + per-client bases/adapters bitwise equal: "
+          f"{final_ok}")
+    print(f"  [{time.time() - t0:.1f}s]")
+    assert all_ok, "ragged-lane close diverged from its crash-twin"
+
+
 def large_c_smoke():
     """Large-C chunked close smoke (CI's memory-wall witness): a C=256 round
     streamed through the CHUNKED engine (close_chunk=32) must (a) keep the
@@ -351,6 +414,8 @@ def main():
                      model, recorder=rec)
     if args.faults:
         run_chaos(args.faults, model, rec, rounds=2 if args.quick else 3)
+        run_chaos_hetero(args.faults, model, rec,
+                         rounds=2 if args.quick else 3)
     exactness_check()
     if args.large_c:
         large_c_smoke()

@@ -66,6 +66,29 @@ def synthetic_delta(template_shapes: Dict[str, tuple], seed: int, rnd: int,
             for p, s in template_shapes.items()}
 
 
+def ragged_shapes(shapes: Dict[str, tuple], r: int) -> Dict[str, tuple]:
+    """Template shapes at one client's true LoRA rank r: factor leaves get
+    their rank axis narrowed (a is (…, m, r), b is (…, r, n)); everything
+    else keeps the registered shape."""
+    out = {}
+    for p, s in shapes.items():
+        leaf = p.rsplit("/", 1)[-1]
+        if leaf == "a":
+            s = s[:-1] + (r,)
+        elif leaf == "b":
+            s = s[:-2] + (r, s[-1])
+        out[p] = s
+    return out
+
+
+def hetero_ranks(clients: int, r_max: int) -> List[int]:
+    """The --hetero rank pattern: cycle r_max, r_max/2, r_max/4 across the
+    fleet (clipped to ≥1) — deterministic, so server flags and the clean
+    twin derive the same fleet from (clients, rank) alone."""
+    cycle = [r_max, max(1, r_max // 2), max(1, r_max // 4)]
+    return [cycle[c % len(cycle)] for c in range(clients)]
+
+
 def _free_port() -> int:
     with socket.socket() as s:
         s.bind(("127.0.0.1", 0))
@@ -85,6 +108,9 @@ def _spawn_server(args, port: int, trace: str, metrics: str):
            "--quota", str(args.quota),
            "--port", str(port), "--host", "127.0.0.1",
            "--obs", "trace", "--trace", trace, "--metrics-out", metrics]
+    if args.hetero:
+        cmd += ["--client-ranks", ",".join(
+            str(r) for r in hetero_ranks(args.clients, args.rank))]
     if args.token:
         cmd += ["--serve-token", args.token]
     if args.deadline:
@@ -140,10 +166,15 @@ def drive_round(url: str, args, shapes: Dict[str, tuple], rnd: int
             except queue.Empty:
                 return
             client.client_id = cid  # one pooled connection, many identities
-            tree = synthetic_delta(shapes, args.seed, rnd, cid)
+            r_c = None
+            cid_shapes = shapes
+            if args.hetero:
+                r_c = hetero_ranks(args.clients, args.rank)[cid]
+                cid_shapes = ragged_shapes(shapes, r_c)
+            tree = synthetic_delta(cid_shapes, args.seed, rnd, cid)
             t0 = time.perf_counter()
             try:
-                resp = client.submit_delta(tree, round_id=rnd)
+                resp = client.submit_delta(tree, round_id=rnd, rank=r_c)
                 dt = (time.perf_counter() - t0) * 1e3
                 with lock:
                     lat_ms.append(dt)
@@ -155,7 +186,7 @@ def drive_round(url: str, args, shapes: Dict[str, tuple], rnd: int
                 if args.duplicates > 0 \
                         and cid % max(1, int(1 / args.duplicates)) == 0:
                     try:
-                        client.submit_delta(tree, round_id=rnd)
+                        client.submit_delta(tree, round_id=rnd, rank=r_c)
                     except StaleUplinkError:
                         with lock:
                             outcomes["dup_409"] += 1
@@ -207,6 +238,30 @@ def run_twin(args, model, lora_cfg, shapes: Dict[str, tuple]):
     from repro.fedsrv.server import init_global_state
 
     params, global_lora = init_global_state(model, lora_cfg, seed=args.seed)
+    if args.hetero:
+        ranks = hetero_ranks(args.clients, args.rank)
+        engine = RoundCloseEngine(
+            params, global_lora, c_max=args.clients, scale=lora_cfg.scale,
+            method="hetero", backend="auto", depth=2,
+            chunk=args.close_chunk, client_ranks=ranks)
+        codec = AdapterCodec(args.quantize)
+        codec.register_spec(global_lora)
+        client_params = [params] * args.clients
+        for rnd in range(args.rounds):
+            engine.buffers.begin_round({c: c for c in range(args.clients)},
+                                       round_id=rnd)
+            for cid in range(args.clients):
+                # same ragged encode→pad-at-decode round-trip the server runs
+                payload = codec.encode(
+                    synthetic_delta(ragged_shapes(shapes, ranks[cid]),
+                                    args.seed, rnd, cid),
+                    round_id=rnd, client_id=cid, rank=ranks[cid])
+                codec.decode_into(payload, engine.buffers)
+            new_cp, _loras, global_lora, div = engine.close_hetero(
+                client_params, list(range(args.clients)), round_id=rnd)
+            client_params = [new_cp[c] for c in range(args.clients)]
+            div.resolve()
+        return global_lora, client_params, engine
     eng_method = "fedex_svd" if (args.method == "fedex_svd"
                                  and args.svd_rank) else "fedex"
     engine = RoundCloseEngine(
@@ -235,6 +290,27 @@ def _bitwise(a, b) -> bool:
         np.array_equal(np.asarray(fa[k]), np.asarray(fb[k])) for k in fa)
 
 
+def wrong_rank_probe(url: str, args, shapes: Dict[str, tuple]) -> bool:
+    """POST a delta declaring an out-of-range LoRA rank (r_max + 1): the
+    defended decode must bounce it 422 ``reason="rank"`` BEFORE any scatter,
+    leaving the lane open for the client's real delta later in the round."""
+    client = FedClient(url, 0, token=args.token, quantize=args.quantize)
+    tree = synthetic_delta(shapes, args.seed, 0, 0)
+    try:
+        client.submit_delta(tree, round_id=0, rank=args.rank + 1)
+    except StaleUplinkError:
+        print("[loadgen] wrong-rank probe: UNEXPECTED 409/410", flush=True)
+        return False
+    except TransportError as e:
+        ok = e.reason == "rank"
+        print(f"[loadgen] wrong-rank probe: rejected reason={e.reason!r} "
+              f"({'ok' if ok else 'UNEXPECTED'})", flush=True)
+        return ok
+    print("[loadgen] wrong-rank probe: server ACCEPTED an out-of-range rank",
+          flush=True)
+    return False
+
+
 # ---------------------------------------------------------------------------
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -255,6 +331,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--method", default="fedex",
                     choices=("fedex", "fedex_svd"))
+    ap.add_argument("--hetero", action="store_true",
+                    help="ragged-rank fleet: --method hetero with the cyclic "
+                         "client-rank pattern of hetero_ranks(); uplinks "
+                         "travel at each client's true rank, the close is "
+                         "verified bitwise vs an in-process hetero twin "
+                         "(chained per-client W0 digest), and a wrong-rank "
+                         "POST must bounce 422 reason='rank'")
     ap.add_argument("--svd-rank", type=int, default=0)
     ap.add_argument("--quantize", default="none",
                     choices=("none", "fp16", "int8"))
@@ -280,6 +363,8 @@ def main() -> None:
         args.clients, args.rounds, args.threads = 8, 2, 8
         if args.duplicates == 0.0:
             args.duplicates = 0.25
+    if args.hetero:
+        args.method = "hetero"   # the spawn cmd + twin both key off this
     if not args.spawn and not args.server:
         ap.error("need --server URL or --spawn")
 
@@ -287,7 +372,8 @@ def main() -> None:
     from dataclasses import replace as dc_replace
 
     from repro.configs import LoRAConfig, get_config
-    from repro.fedsrv.server import init_global_state, w0_digest
+    from repro.fedsrv.server import (hetero_w0_digest, init_global_state,
+                                     w0_digest)
     from repro.models import build_model
 
     cfg = dc_replace(get_config(args.arch), vocab_size=args.vocab,
@@ -309,6 +395,11 @@ def main() -> None:
     probe = FedClient(url, client_id=-1, token=args.token)
     try:
         _wait_healthy(probe, proc)
+        probe_422_ok = None
+        if args.hetero:
+            # before any real round-0 delta: the quarantine must not scatter,
+            # so client 0's genuine uplink still lands afterwards
+            probe_422_ok = wrong_rank_probe(url, args, shapes)
         t_bench0 = time.perf_counter()
         rounds_out = []
         total_payload_bytes = 0
@@ -337,8 +428,11 @@ def main() -> None:
             twin_global, twin_params, twin_engine = run_twin(
                 args, model, lora_cfg, shapes)
             parity["adapter_bitwise"] = _bitwise(pull.lora, twin_global)
-            parity["w0_digest_match"] = (
-                w0_digest(twin_engine.specs, twin_params) == pull.w0_digest)
+            # hetero folds a DIFFERENT residual into every client's base, so
+            # the witness is the chained per-client digest
+            twin_digest = hetero_w0_digest(twin_engine.specs, twin_params) \
+                if args.hetero else w0_digest(twin_engine.specs, twin_params)
+            parity["w0_digest_match"] = twin_digest == pull.w0_digest
             print(f"[loadgen] clean-twin parity: {parity}", flush=True)
     finally:
         if proc is not None:
@@ -390,12 +484,20 @@ def main() -> None:
         "pull_latest_ok": pull_ok,
         "parity": parity,
     }
+    if args.hetero:
+        bench["hetero"] = {
+            "client_ranks": hetero_ranks(args.clients, args.rank),
+            "wrong_rank_422": probe_422_ok,
+            "quarantined_rank": counters.get("uplink.quarantined[rank]"),
+        }
     with open(args.out, "w") as f:
         json.dump(bench, f, indent=2)
     print(f"[loadgen] wrote {args.out}")
 
     ok = pull_ok and (args.no_verify or (parity.get("adapter_bitwise")
                                          and parity.get("w0_digest_match")))
+    if args.hetero:
+        ok = ok and bool(probe_422_ok)
     if not ok:
         print("[loadgen] FAILED: parity or pull_latest check did not hold",
               file=sys.stderr)

@@ -181,7 +181,7 @@ class FedConfig:
     num_clients: int = 3
     rounds: int = 5
     local_steps: int = 10  # steps per client per round ("local epochs" analog)
-    method: str = "fedex"  # fedex | fedit | ffa | fedex_svd | centralized
+    method: str = "fedex"  # fedex | fedit | ffa | fedex_svd | hetero | centralized
     svd_rank: int = 0  # fedex_svd: truncation rank r' (0 → k*r, i.e. exact)
     assignment: str = "average"  # average | keep_local | reinit  (Table 5)
     dirichlet_alpha: float = 0.5  # non-IID split concentration
@@ -189,8 +189,14 @@ class FedConfig:
     # differential privacy on uploads (paper §7 future work; core/privacy.py):
     dp_clip: float = 0.0  # 0 → off; else L2 clip on the adapter delta
     dp_noise_multiplier: float = 0.0  # Gaussian σ = multiplier · clip
-    # heterogeneous client ranks (paper §6 open problem; core/hetero.py):
-    client_ranks: Tuple[int, ...] = ()  # non-empty → method "fedex_hetero"
+    # heterogeneous client ranks (paper §6 open problem; core/hetero.py +
+    # core/engine.py method="hetero"): client i trains a rank-rᵢ adapter,
+    # padded to r_max = lora.rank at the server; ``method="hetero"`` with an
+    # empty tuple defaults every client to lora.rank (uniform hetero).
+    client_ranks: Tuple[int, ...] = ()  # non-empty → the hetero close
+    # per-client local step counts (mesh mode masks scan iterations past a
+    # client's budget); empty → every client runs ``local_steps``
+    client_local_steps: Tuple[int, ...] = ()
     # --- fedsrv coordinator (partial participation / stragglers / async) ---
     participation: float = 1.0  # fraction of clients sampled per round
     min_quorum: int = 0  # deliveries needed before the deadline cuts (0 → 1)
@@ -249,8 +255,26 @@ class FedConfig:
 
     def __post_init__(self):
         if self.method not in ("fedex", "fedit", "ffa", "fedex_svd",
-                               "centralized"):
+                               "hetero", "centralized"):
             raise ValueError(f"unknown method {self.method!r}")
+        if self.client_ranks:
+            if len(self.client_ranks) != self.num_clients:
+                raise ValueError(
+                    f"client_ranks has {len(self.client_ranks)} entries for "
+                    f"{self.num_clients} clients")
+            if any(r < 1 for r in self.client_ranks):
+                raise ValueError(
+                    f"client_ranks must be ≥ 1, got {self.client_ranks}")
+        if self.client_local_steps:
+            if len(self.client_local_steps) != self.num_clients:
+                raise ValueError(
+                    f"client_local_steps has {len(self.client_local_steps)} "
+                    f"entries for {self.num_clients} clients")
+            if any(not 1 <= s <= self.local_steps
+                   for s in self.client_local_steps):
+                raise ValueError(
+                    f"client_local_steps must lie in [1, local_steps="
+                    f"{self.local_steps}], got {self.client_local_steps}")
         if self.assignment not in ("average", "keep_local", "reinit"):
             raise ValueError(f"unknown assignment {self.assignment!r}")
         if self.engine not in ("auto", "jnp", "pallas", "off"):
@@ -340,6 +364,11 @@ def validate_fed_lora(fed: "FedConfig", lora: "LoRAConfig") -> None:
             f"svd_rank={fed.svd_rank} exceeds the residual rank bound "
             f"k·r = {fed.num_clients}·{lora.rank} = "
             f"{fed.num_clients * lora.rank}; use 0 for the exact close")
+    if fed.client_ranks and max(fed.client_ranks) > lora.rank:
+        raise ValueError(
+            f"client_ranks max {max(fed.client_ranks)} exceeds the r_max "
+            f"template lora.rank={lora.rank}; ragged uplinks are padded to "
+            "lora.rank, never truncated")
 
 
 @dataclass(frozen=True)

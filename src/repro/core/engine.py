@@ -101,7 +101,7 @@ Params = Dict[str, Any]
 
 _CPU = jax.default_backend() == "cpu"
 
-ENGINE_METHODS = ("fedex", "fedex_svd", "reinit", "keep_local")
+ENGINE_METHODS = ("fedex", "fedex_svd", "reinit", "keep_local", "hetero")
 
 
 class DeferredDivergence:
@@ -583,6 +583,11 @@ class RoundBuffers:
             entry.update(
                 stacks=None, chunks={}, retained={}, acc=None,
                 w=np.zeros(num_chunks * self.chunk, np.float32),
+                # per-slot TRUE adapter ranks (hetero rounds): −1 = full rank
+                # (unmasked — the non-hetero default), set by write_flat's
+                # ``rank`` and snapshotted with the round state so a resumed
+                # twin replays the same masked folds
+                ranks=np.full(num_chunks * self.chunk, -1, np.int32),
                 next_chunk=0, num_chunks=num_chunks, expected=expected,
                 filled=[0] * num_chunks, eager_folds=0)
         else:
@@ -618,7 +623,8 @@ class RoundBuffers:
 
     @_ring_locked
     def write_flat(self, client_id: int, flat: Dict[str, Any],
-                   round_id=None, *, weight: Optional[float] = None) -> bool:
+                   round_id=None, *, weight: Optional[float] = None,
+                   rank: Optional[int] = None) -> bool:
         """Scatter one client's decoded adapter leaves into its lane.
 
         ``round_id=None`` routes to the oldest open round that has a lane for
@@ -636,7 +642,13 @@ class RoundBuffers:
         chunked rounds fold it into the running accumulators at ingest, so
         the caller must stream the same weighting it will close with (the
         close cross-checks and raises on a mismatch). Defaults to 1.0
-        (uniform); stacked rounds ignore it (they weight at close time)."""
+        (uniform); stacked rounds ignore it (they weight at close time).
+
+        ``rank`` is this uplink's TRUE adapter rank (hetero rounds stream
+        rank-rᵢ payloads zero-padded to the template r_max): chunked rounds
+        record it per slot so the eager partial folds mask the padded
+        columns, and it rides in ``state_dict`` for crash-safe resume.
+        ``None`` (every non-hetero caller) means full rank."""
         if round_id is None:
             for rid, e in self._open.items():
                 if client_id in e["slots"]:
@@ -692,6 +704,8 @@ class RoundBuffers:
                 for p in self._shapes:
                     buf[p][row] = np.asarray(flat[p], np.float32)
                 e["w"][slot] = np.float32(1.0 if weight is None else weight)
+                if rank is not None:
+                    e["ranks"][slot] = np.int32(rank)
                 e["filled"][k] += 1
             elif self._host:
                 for p in self._shapes:
@@ -706,9 +720,21 @@ class RoundBuffers:
         return True
 
     def write(self, client_id: int, lora_tree: Params, round_id=None, *,
-              weight: Optional[float] = None) -> bool:
+              weight: Optional[float] = None,
+              rank: Optional[int] = None) -> bool:
         return self.write_flat(client_id, flatten_with_paths(lora_tree),
-                               round_id, weight=weight)
+                               round_id, weight=weight, rank=rank)
+
+    @_ring_locked
+    def chunk_ranks(self, round_id, k: int) -> Optional[np.ndarray]:
+        """Chunk k's per-slot rank vector (−1 = full rank), or None for a
+        stacked round. Read by the hetero partial fold to mask padded
+        columns at ingest; re-entrant under the ring lock (the fold cascade
+        calls back into the engine while holding it)."""
+        _, e = self._entry(round_id)
+        if not e["chunked"]:
+            return None
+        return np.asarray(e["ranks"][k * self.chunk:(k + 1) * self.chunk])
 
     # -- chunked fold cascade ----------------------------------------------
     def _cascade(self, rid, e) -> None:
@@ -871,6 +897,7 @@ class RoundBuffers:
                              retained_chunks=sorted(e["retained"]),
                              acc_keys=sorted(e["acc"]) if e["acc"] else [])
                 arrays[f"ring/{rid}/_w"] = np.asarray(e["w"])
+                arrays[f"ring/{rid}/_ranks"] = np.asarray(e["ranks"])
                 for k, buf in e["chunks"].items():
                     for p, x in buf.items():
                         arrays[f"ring/{rid}/_chunk{k}/{p}"] = np.asarray(x)
@@ -912,6 +939,11 @@ class RoundBuffers:
                          retained=_bufs("ret", entry["retained_chunks"]),
                          acc=acc,
                          w=np.asarray(arrays[f"ring/{rid}/_w"], np.float32),
+                         ranks=(np.asarray(arrays[f"ring/{rid}/_ranks"],
+                                           np.int32)
+                                if f"ring/{rid}/_ranks" in arrays
+                                else np.full(int(entry["num_chunks"])
+                                             * self.chunk, -1, np.int32)),
                          next_chunk=int(entry["next_chunk"]),
                          num_chunks=int(entry["num_chunks"]),
                          expected=[int(x) for x in entry["expected"]],
@@ -1019,6 +1051,60 @@ def factored_truncated_residual(a_stack: jnp.ndarray, b_stack: jnp.ndarray,
     aprime = L @ ((vl * il[..., None, :]) @ u_r) * s_r[..., None, :]
     bprime = (vt_r @ jnp.swapaxes(vr * ir[..., None, :], -1, -2)) @ R
     return aprime, bprime
+
+
+def factored_truncated_product(L: jnp.ndarray, R: jnp.ndarray, rank: int
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eckart–Young-optimal rank-``rank`` factors of the UNCENTERED product
+    ``L @ R`` — the hetero close's truncation primitive, shared with the eager
+    oracle (core/hetero.py) so engine and oracle compose the SAME ops.
+
+    Identical Gram machinery to :func:`factored_truncated_residual` (two
+    (P, P) eigendecompositions + one small SVD, P = L's column count; the
+    dense (m, n) product never exists — jaxpr-asserted in tests), but on the
+    raw product rather than the centred residual, and with the BALANCED
+    singular split A' = Q_L U √Σ, B' = √Σ Vᵀ Q_Rᵀ R (the LoRA-friendly
+    parameterisation of core/hetero.py) instead of folding Σ into A' alone.
+    Zero columns of L / zero rows of R (rank-padded lanes) yield zero Gram
+    eigenvalues that ``_safe_inv_sqrt`` floors away, so r_max-padded ragged
+    stacks truncate exactly as their unpadded originals. The rank-r' slice of
+    the returned factors IS the optimal rank-r' truncation for any r' ≤ rank
+    (same singular triplets), which is how the hetero close serves every
+    client rank from ONE decomposition.
+    """
+    gl = jnp.einsum("...mi,...mj->...ij", L, L)
+    gr = jnp.einsum("...in,...jn->...ij", R, R)
+    el, vl = jnp.linalg.eigh(gl)
+    er, vr = jnp.linalg.eigh(gr)
+    il, sl = _safe_inv_sqrt(el)
+    ir, sr = _safe_inv_sqrt(er)
+    core = sl[..., :, None] * (jnp.swapaxes(vl, -1, -2) @ vr) * sr[..., None, :]
+    u, s, vt = jnp.linalg.svd(core, full_matrices=False)
+    sq = jnp.sqrt(jnp.maximum(s[..., :rank], 0.0))
+    aprime = L @ ((vl * il[..., None, :]) @ u[..., :, :rank]) * sq[..., None, :]
+    bprime = sq[..., :, None] * (
+        (vt[..., :rank, :] @ jnp.swapaxes(vr * ir[..., None, :], -1, -2)) @ R)
+    return aprime, bprime
+
+
+def _rank_mask(ranks: jnp.ndarray, r: int) -> jnp.ndarray:
+    """(C,) int rank vector → (C, r) 0/1 float mask: column j of lane c is
+    live iff j < ranks[c]. Negative ranks mean "unmasked" (full r)."""
+    rk = jnp.where(ranks < 0, r, ranks)
+    return (jnp.arange(r)[None, :] < rk[:, None]).astype(jnp.float32)
+
+
+def _mask_factor_stacks(a: jnp.ndarray, b: jnp.ndarray, ranks: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero the rank-padded columns of a (C, …, m, r) stack and the matching
+    rows of its (C, …, r, n) twin. Multiplying by the 0/1 mask is EXACT
+    (0·x = 0, 1·x = x), so lanes whose padding carries garbage (a defended
+    decode that validated but over-wrote) still contribute exactly zero."""
+    c, r = a.shape[0], a.shape[-1]
+    mask = _rank_mask(ranks, r)
+    ma = mask.reshape((c,) + (1,) * (a.ndim - 2) + (r,))
+    mb = mask.reshape((c,) + (1,) * (b.ndim - 3) + (r, 1))
+    return a * ma, b * mb
 
 
 def _l_block(a_chunk: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -1231,6 +1317,69 @@ def _keep_local_close(specs: Sequence[FactorSpec], scale: float,
     return new_w0
 
 
+def _hetero_close(specs: Sequence[FactorSpec], scale: float,
+                  w0_stacks: Dict[str, jnp.ndarray],
+                  stacks: Dict[str, jnp.ndarray], w: jnp.ndarray,
+                  ranks: jnp.ndarray, c_max: int, uniform: bool,
+                  backend: str, interpret: Optional[bool]):
+    """Heterogeneous-rank close (core/hetero.py's scheme, engine-side): the
+    ideal update Δ̄ = Σ_c w_c·a_c b_c is truncated ONCE at the template rank
+    r_max via :func:`factored_truncated_product`; lane c's adapters are the
+    leading-rᵢ slice of that truncation (same singular triplets — rank masks
+    in place of per-client SVDs) and its residual Δ̄ − aᵢ'bᵢ' folds into its
+    OWN (C_max, …)-stacked W0, so W0_c + ΔW_c + a_c'b_c' = W0_c + Δ̄ exactly
+    for every lane. Ragged lanes ride zero-padded to r_max with a (C_max,)
+    rank vector next to the weight vector; the masks multiply by exact 0/1 so
+    masked rank columns contribute exactly zero to every sum. The uniform
+    branch (full participation, uniform weights, every delivered rank =
+    r_max) composes the eager oracle's op sequence over stack slices — the
+    bitwise contract; the ragged branch shares every decomposition input with
+    the oracle's padded form, differing only by the fold's FMA contraction
+    (≤2 ulp, asserted in tests/test_engine_hetero.py).
+
+    Returns ``(new_w0_stacks, glob, masked_stacks)`` with ``glob[key] =
+    {"a": A'(r_max), "b": B'(r_max)}`` (callers slice per-client ranks) and
+    the rank-masked stacks for the divergence tail."""
+    new_w0, glob, masked = {}, {}, {}
+    for s in specs:
+        a = stacks[s.key + "/a"].astype(jnp.float32)  # (C, ..., m, r_max)
+        b = stacks[s.key + "/b"].astype(jnp.float32)  # (C, ..., r_max, n)
+        r = s.a_shape[-1]
+        if uniform:
+            am, bm = a, b  # every lane at full rank: masking is the identity
+            L = jnp.concatenate([a[i] / c_max for i in range(c_max)], axis=-1)
+        else:
+            am, bm = _mask_factor_stacks(a, b, ranks)
+            L = jnp.concatenate([w[i] * am[i] for i in range(c_max)], axis=-1)
+        R = jnp.concatenate([bm[i] for i in range(c_max)], axis=-2)
+        ap, bp = factored_truncated_product(L, R, r)
+        if backend == "pallas" and not uniform:
+            from repro.kernels import hetero_fold
+            new_w0[s.key] = hetero_fold(
+                w0_stacks[s.key], a, b, w, ranks, ap, bp, scale,
+                interpret=interpret).astype(s.w0_dtype)
+        else:
+            # Δ̄ as the factored product (the oracle's op), per-lane own =
+            # masked slice of the shared truncation; adding the exact-zero
+            # masked terms reproduces the oracle's sliced matmul exactly
+            ideal = L @ R
+            if uniform:
+                own_full = ap @ bp  # every lane at r_max: one shared own
+                owns = [own_full] * c_max
+            else:
+                mask = _rank_mask(ranks, r)
+                owns = [(ap * mask[c]) @ bp for c in range(c_max)]
+            new_w0[s.key] = jnp.stack([
+                (w0_stacks[s.key][c].astype(jnp.float32)
+                 + scale * (ideal - owns[c])).astype(s.w0_dtype)
+                for c in range(c_max)
+            ])
+        glob[s.key] = {"a": ap, "b": bp}
+        masked[s.key + "/a"] = am
+        masked[s.key + "/b"] = bm
+    return new_w0, glob, masked
+
+
 def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
                   method: str = "fedex", svd_rank: int = 0,
                   backend: str = "auto", interpret: Optional[bool] = None,
@@ -1255,6 +1404,13 @@ def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
     * ``method="keep_local"`` — ``w0_leaves`` holds (C_max, …)-stacked
       per-lane W0 leaves and the returned ``new_w0`` is stacked likewise;
       ``glob={}``.
+    * ``method="hetero"`` — heterogeneous client ranks: ``w0_leaves`` is
+      (C_max, …)-stacked per-lane W0 leaves (as keep_local) and the ``mask``
+      positional slot carries the (C_max,) INT rank vector (ragged lanes
+      zero-padded to the template rank r_max; rank 0 masks a lane entirely,
+      negative means full rank). Returns stacked ``new_w0`` plus ``glob`` =
+      the shared rank-r_max truncation factors per spec — the caller slices
+      each client's leading rᵢ columns/rows.
     """
     backend = _resolve_backend(backend)
     specs = list(specs)
@@ -1283,13 +1439,27 @@ def make_close_fn(specs: Sequence[FactorSpec], *, scale: float, c_max: int,
             new_w0 = _reinit_close(specs, scale, w0_leaves, stacks, weights,
                                    c_max, uniform, backend, interpret)
             glob = {}
+        elif method == "hetero":
+            new_w0, glob, masked = _hetero_close(
+                specs, scale, w0_leaves, stacks, weights, mask, c_max,
+                uniform, backend, interpret)
+            # divergence over the rank-masked stacks: padded columns must
+            # contribute exactly zero to the §6 metric too
+            stacks = masked
         else:  # keep_local
             new_w0 = _keep_local_close(specs, scale, w0_leaves, stacks,
                                        weights, c_max, uniform, backend,
                                        interpret)
             glob = {}
-        u = (jnp.full((c_max,), 1.0 / c_max, jnp.float32) if uniform
-             else mask / jnp.maximum(mask.sum(), 1.0))
+        if method == "hetero" and not uniform:
+            # the mask slot carries the rank vector — a lane participates in
+            # the divergence iff it delivered weight AND a non-empty rank
+            live = jnp.where((mask > 0) & (weights > 0),
+                             jnp.float32(1.0), jnp.float32(0.0))
+            u = live / jnp.maximum(live.sum(), 1.0)
+        else:
+            u = (jnp.full((c_max,), 1.0 / c_max, jnp.float32) if uniform
+                 else mask / jnp.maximum(mask.sum(), 1.0))
         parts = [
             _dev_fro_scaled(stacks[s.key + "/a"], stacks[s.key + "/b"],
                             u).ravel()
@@ -1325,9 +1495,27 @@ class RoundCloseEngine:
                  svd_rank: int = 0, backend: str = "auto",
                  interpret: Optional[bool] = None, donate: bool = True,
                  depth: int = 2, recorder=None, chunk: int = 0,
-                 program_cache_cap: int = 16):
+                 program_cache_cap: int = 16,
+                 client_ranks: Optional[Sequence[int]] = None):
         self.specs = build_factor_specs(params, lora_template)
         self.c_max = c_max
+        # hetero: per-client TRUE adapter ranks (index = client id). The
+        # template rank is r_max — every stack lane is padded to it and the
+        # close masks the truncation back down per lane. None = every client
+        # at full rank (the uniform bitwise branch).
+        if client_ranks is not None:
+            rmax = self.specs[0].a_shape[-1] if self.specs else 0
+            client_ranks = tuple(int(r) for r in client_ranks)
+            if len(client_ranks) != c_max:
+                raise ValueError(
+                    f"client_ranks has {len(client_ranks)} entries for "
+                    f"c_max={c_max}")
+            bad = [r for r in client_ranks if not 1 <= r <= rmax]
+            if bad:
+                raise ValueError(
+                    f"client_ranks {bad} outside [1, r_max={rmax}] — the "
+                    "lora template must be built at the LARGEST client rank")
+        self.client_ranks = client_ranks
         self.scale = scale
         self.method = method
         self.svd_rank = svd_rank
@@ -1352,10 +1540,10 @@ class RoundCloseEngine:
             lora_template, c_max, depth=depth, recorder=self.rec,
             chunk=self.chunk,
             on_chunk=self._fold_chunk if self.chunk else None,
-            # keep_local folds each lane's OWN base and fedex_svd re-streams
-            # the L/R blocks for the projection pass — both need the chunk
-            # factor buffers back at close time
-            retain_chunks=method in ("keep_local", "fedex_svd"))
+            # keep_local folds each lane's OWN base, and fedex_svd / hetero
+            # re-stream the L/R blocks for the projection pass — all three
+            # need the chunk factor buffers back at close time
+            retain_chunks=method in ("keep_local", "fedex_svd", "hetero"))
         self._lora_template = lora_template
         self._close = make_close_fn(self.specs, scale=scale, c_max=c_max,
                                     method=method, svd_rank=svd_rank,
@@ -1540,6 +1728,18 @@ class RoundCloseEngine:
         if acc is None:
             acc = self._init_acc()
         stacks = {p: jnp.asarray(x) for p, x in chunk_bufs.items()}
+        if self.method == "hetero":
+            # rank-mask the chunk's lanes BEFORE accumulation so padded
+            # truncation columns contribute exactly zero even if a decoder
+            # ever writes junk past a lane's true rank (decode pads with
+            # zeros, so this is a defended no-op on the honest path)
+            rk = self.buffers.chunk_ranks(round_id, chunk_index)
+            if rk is not None:
+                rkd = jnp.asarray(rk, jnp.int32)
+                for s in self.specs:
+                    am, bm = _mask_factor_stacks(
+                        stacks[s.key + "/a"], stacks[s.key + "/b"], rkd)
+                    stacks[s.key + "/a"], stacks[s.key + "/b"] = am, bm
         wd = jnp.asarray(w, jnp.float32)
         prog = self._programs.get(("fold",), self._build_fold, self.rec)
         new_acc = prog(acc, stacks, wd)
@@ -1730,21 +1930,90 @@ class RoundCloseEngine:
         donate = (0,) if self._donate and not _CPU else ()
         return jax.jit(_fin, donate_argnums=donate)
 
+    def _build_hetero_core(self):
+        """hetero chunked, stage 2: the eigh/eigh/svd core on the
+        UNCENTERED Grams at each spec's template rank r_max —
+        factored_truncated_product's math, returning the unscaled
+        projection operators (and singular values separately) so stage 3
+        can stream chunks through them."""
+        specs = self.specs
+
+        def _core(gl, gr):
+            out = {}
+            for s in specs:
+                rank = s.a_shape[-1]
+                el, vl = jnp.linalg.eigh(gl[s.key])
+                er, vr = jnp.linalg.eigh(gr[s.key])
+                il, sl = _safe_inv_sqrt(el)
+                ir, sr = _safe_inv_sqrt(er)
+                core = sl[..., :, None] * (jnp.swapaxes(vl, -1, -2) @ vr) \
+                    * sr[..., None, :]
+                u, sv, vt = jnp.linalg.svd(core, full_matrices=False)
+                projl = (vl * il[..., None, :]) @ u[..., :, :rank]
+                projr = vt[..., :rank, :] @ jnp.swapaxes(
+                    vr * ir[..., None, :], -1, -2)
+                out[s.key] = (projl, sv[..., :rank], projr)
+            return out
+
+        return jax.jit(_core)
+
+    def _build_hetero_fin(self):
+        """hetero chunked, stage 3½: the balanced √s split of the streamed
+        projections — factored_truncated_product's final op order, so the
+        chunked factors match the stacked close's convention."""
+        specs = self.specs
+
+        def _fin(ap0, sr, bp0):
+            ap, bp = {}, {}
+            for s in specs:
+                sq = jnp.sqrt(jnp.maximum(sr[s.key], 0.0))
+                ap[s.key] = ap0[s.key] * sq[..., None, :]
+                bp[s.key] = sq[..., :, None] * bp0[s.key]
+            return ap, bp
+
+        return jax.jit(_fin)
+
+    def _build_hetero_chunk(self):
+        """hetero chunked, stage 4 — one chunk of lanes: every lane's own
+        base gets W0_c + scale·(ideal − (A'∘mask_c) B'), where mask_c zeroes
+        the shared truncation's columns past the lane's true rank — the
+        leading-slice Eckart–Young truncation, computed without slicing so
+        one program serves every rank in the fleet."""
+        specs, scale = self.specs, self.scale
+
+        def _hc(w0c, masks, ap, bp, ideal):
+            out = {}
+            for s in specs:
+                r = s.a_shape[-1]
+                mk = masks[:, :r]
+                shaped = mk.reshape(
+                    (mk.shape[0],) + (1,) * (ap[s.key].ndim - 1) + (r,))
+                own = jnp.matmul(ap[s.key][None] * shaped, bp[s.key][None])
+                out[s.key] = (w0c[s.key].astype(jnp.float32)
+                              + scale * (ideal[s.key][None] - own)
+                              ).astype(s.w0_dtype)
+            return out
+
+        donate = (0,) if self._donate and not _CPU else ()
+        return jax.jit(_hc, donate_argnums=donate)
+
     # -- chunked closes --------------------------------------------------
-    def _svd_chunked(self, w0_leaves, entry, w, winv, round_id):
-        """Orchestrate the four svd stages over the retained chunks. Memory:
-        at most two chunks' factors + the (C·r)² Grams are live — the Grams
-        dominate exactly as in the stacked close (they ARE the method), but
-        the full (C, …) factor stacks never materialise on device."""
-        chunk, nk = self.buffers.chunk, entry["num_chunks"]
-        acc = entry["acc"]
-        bbar = {s.key: acc["gb/" + s.key] * winv for s in self.specs}
-        # slot-indexed NORMALISED weights (the cross-check already proved
-        # they match the close-time vector; use the close-time values so the
-        # L blocks equal the stacked close's columns)
-        wn = np.zeros(nk * chunk, np.float32)
-        ncopy = min(len(w), nk * chunk)
+    def _slot_weights(self, entry, w) -> np.ndarray:
+        """Slot-indexed NORMALISED weights (the cross-check already proved
+        they match the close-time vector; use the close-time values so the
+        L blocks equal the stacked close's columns)."""
+        nslots = entry["num_chunks"] * self.buffers.chunk
+        wn = np.zeros(nslots, np.float32)
+        ncopy = min(len(w), nslots)
         wn[:ncopy] = np.asarray(w, np.float32)[:ncopy]
+        return wn
+
+    def _pairwise_grams(self, entry, wn, bbar, round_id):
+        """(i, j) chunk-pair Gram tiles assembled into the full (C·r)²
+        Grams — shared by the fedex_svd (centered) and hetero (uncentered;
+        zero ``bbar``) chunked closes. At most two chunks' factors are ever
+        resident at once; the dense m×n residual still never exists."""
+        chunk, nk = self.buffers.chunk, entry["num_chunks"]
         dev = {}
 
         def _chunk_dev(k):
@@ -1785,17 +2054,19 @@ class RoundCloseEngine:
                 rows_r.append(jnp.concatenate(row_r, axis=-1))
             gl_full[s.key] = jnp.concatenate(rows_l, axis=-2)
             gr_full[s.key] = jnp.concatenate(rows_r, axis=-2)
-        gram_bytes = _tree_bytes(gl_full) + _tree_bytes(gr_full)
-        self._note_peak(round_id, 2 * gram_bytes + _tree_bytes(acc))
-        core = self._programs.get(("svdcore",), self._build_svd_core,
-                                  self.rec)
-        proj_ops = core(gl_full, gr_full)
+        return gl_full, gr_full
+
+    def _stream_projection(self, entry, wn, proj_ops, bbar, rank_of):
+        """Stream every retained chunk through the projection operators:
+        A' = Σ_k L_k projL_k and B' = Σ_k projR_k R_k (slot order).
+        ``rank_of(spec)`` is the truncation width — ``svd_rank`` for
+        fedex_svd, the template r_max for hetero."""
+        chunk, nk = self.buffers.chunk, entry["num_chunks"]
         proj = self._programs.get(("svdproj",), self._build_svd_proj,
                                   self.rec)
-        rank = self.svd_rank
-        ap = {s.key: jnp.zeros(s.a_shape[:-1] + (rank,), jnp.float32)
+        ap = {s.key: jnp.zeros(s.a_shape[:-1] + (rank_of(s),), jnp.float32)
               for s in self.specs}
-        bp = {s.key: jnp.zeros(s.b_shape[:-2] + (rank, s.b_shape[-1]),
+        bp = {s.key: jnp.zeros(s.b_shape[:-2] + (rank_of(s), s.b_shape[-1]),
                                jnp.float32) for s in self.specs}
         for i in range(nk):
             ci = {p: jnp.asarray(x) for p, x in entry["retained"][i].items()}
@@ -1807,6 +2078,24 @@ class RoundCloseEngine:
                 projl_i[s.key] = projl[..., i * cr:(i + 1) * cr, :]
                 projr_i[s.key] = projr[..., :, i * cr:(i + 1) * cr]
             ap, bp = proj(ci, wi, projl_i, projr_i, bbar, ap, bp)
+        return ap, bp
+
+    def _svd_chunked(self, w0_leaves, entry, w, winv, round_id):
+        """Orchestrate the four svd stages over the retained chunks. Memory:
+        at most two chunks' factors + the (C·r)² Grams are live — the Grams
+        dominate exactly as in the stacked close (they ARE the method), but
+        the full (C, …) factor stacks never materialise on device."""
+        acc = entry["acc"]
+        bbar = {s.key: acc["gb/" + s.key] * winv for s in self.specs}
+        wn = self._slot_weights(entry, w)
+        gl_full, gr_full = self._pairwise_grams(entry, wn, bbar, round_id)
+        gram_bytes = _tree_bytes(gl_full) + _tree_bytes(gr_full)
+        self._note_peak(round_id, 2 * gram_bytes + _tree_bytes(acc))
+        core = self._programs.get(("svdcore",), self._build_svd_core,
+                                  self.rec)
+        proj_ops = core(gl_full, gr_full)
+        ap, bp = self._stream_projection(entry, wn, proj_ops, bbar,
+                                         lambda s: self.svd_rank)
         self._note_peak(round_id, gram_bytes + _tree_bytes(ap)
                         + _tree_bytes(bp) + _tree_bytes(w0_leaves)
                         + _tree_bytes(acc))
@@ -1941,6 +2230,149 @@ class RoundCloseEngine:
         return out, DeferredDivergence(
             div, rid, recorder=self.rec if self.rec.enabled else None)
 
+    # -- hetero helpers --------------------------------------------------
+    def _client_rank(self, cid: int) -> int:
+        """Client ``cid``'s TRUE adapter rank (template r_max when no
+        per-client spec was registered)."""
+        rmax = self.specs[0].a_shape[-1]
+        if self.client_ranks is None:
+            return rmax
+        return int(self.client_ranks[cid])
+
+    def _rank_vector(self, client_ids, lanes) -> np.ndarray:
+        """(C_max,) int32 slot-indexed rank vector for the delivered set —
+        0 on non-delivered lanes (fully masked), the registered true rank on
+        delivered ones. Rides in the close's ``mask`` argument slot."""
+        ranks = np.zeros(self.c_max, np.int32)
+        for cid in client_ids:
+            ranks[lanes[cid]] = self._client_rank(cid)
+        return ranks
+
+    def _writeback_lane(self, client_params, cid, new_stacks, lane):
+        """Client ``cid``'s params with lane ``lane`` of the per-lane W0
+        output stacks folded back in (keep_local/hetero write-back)."""
+        newp = client_params[cid]
+        for s in self.specs:
+            leaf = new_stacks[s.key][lane]
+            if s.has_kernel:
+                node = dict(_get_path(client_params[cid], s.key),
+                            kernel=leaf)
+                newp = _set_path(newp, s.key, node)
+            else:
+                newp = _set_path(newp, s.key, leaf)
+        return newp
+
+    def _hetero_loras(self, glob_flat, client_ids, ranks, lanes
+                      ) -> Dict[int, Params]:
+        """Per-client rank-r_i adapters: the LEADING slices of the shared
+        r_max truncation factors (the balanced √s split makes the leading-
+        r_i slice the Eckart–Young rank-r_i truncation of the same mean)."""
+        out: Dict[int, Params] = {}
+        for cid in client_ids:
+            r_i = int(ranks[lanes[cid]])
+            flat = {}
+            for s in self.specs:
+                flat[s.key + "/a"] = glob_flat[s.key + "/a"][..., :, :r_i]
+                flat[s.key + "/b"] = glob_flat[s.key + "/b"][..., :r_i, :]
+            out[cid] = unflatten_from_paths(flat)
+        return out
+
+    def _close_hetero_chunked(self, client_params: Sequence[Params],
+                              client_ids: Sequence[int],
+                              weights: Optional[Sequence[float]], *,
+                              round_id
+                              ) -> Tuple[Dict[int, Params],
+                                         Dict[int, Params], Params,
+                                         DeferredDivergence]:
+        """Chunked hetero close: ideal + divergence from the streamed
+        accumulators (ingest-weighted convention, as every chunked close),
+        the shared r_max truncation from UNCENTERED pairwise chunk Grams
+        (``_pairwise_grams`` with a zero centering vector — dense m×n never
+        formed), then each retained chunk's lanes fold their OWN bases with
+        rank-masked truncations, one chunk of per-lane W0s resident at a
+        time."""
+        w, _mask, _uniform = self.weight_vector(client_ids, weights,
+                                                round_id)
+        lanes = self.buffers.lanes(round_id)
+        lane_to_cid = {lane: cid for cid, lane in lanes.items()}
+        delivered = set(client_ids)
+        ranks = self._rank_vector(client_ids, lanes)
+        rmax = self.specs[0].a_shape[-1]
+        rid, entry = self.buffers.take_chunked(round_id)
+        wsum = self._check_ingest_weights(entry, w, rid)
+        winv = jnp.float32(1.0 / np.float32(wsum))
+        chunk = self.buffers.chunk
+        # lane rank masks over ALL slots (chunks may pad past C_max)
+        nslots = entry["num_chunks"] * chunk
+        slot_ranks = np.zeros(nslots, np.int32)
+        slot_ranks[:len(ranks)] = ranks
+        rmask = (np.arange(rmax)[None, :]
+                 < slot_ranks[:, None]).astype(np.float32)
+        t0 = time.perf_counter_ns()
+        out: Dict[int, Params] = {}
+        with self.rec.span("close.dispatch", cat="engine", round=rid,
+                           method=self.method, uniform=False, chunked=True):
+            fin = self._programs.get(("klfin",), self._build_kl_finalize,
+                                     self.rec)
+            ideal, div = fin(entry["acc"], winv)
+            zero_bbar = {s.key: jnp.zeros(s.b_shape, jnp.float32)
+                         for s in self.specs}
+            wn = self._slot_weights(entry, w)
+            gl_full, gr_full = self._pairwise_grams(entry, wn, zero_bbar,
+                                                    rid)
+            self._note_peak(rid, 2 * (_tree_bytes(gl_full)
+                                      + _tree_bytes(gr_full))
+                            + _tree_bytes(entry["acc"]))
+            core = self._programs.get(("hcore",), self._build_hetero_core,
+                                      self.rec)
+            proj_ops = core(gl_full, gr_full)
+            ap0, bp0 = self._stream_projection(entry, wn, proj_ops,
+                                               zero_bbar,
+                                               lambda s: s.a_shape[-1])
+            hfin = self._programs.get(("hfin",), self._build_hetero_fin,
+                                      self.rec)
+            sr = {s.key: proj_ops[s.key][1] for s in self.specs}
+            ap, bp = hfin(ap0, sr, bp0)
+            hc = self._programs.get(("hchunk",), self._build_hetero_chunk,
+                                    self.rec)
+            for k in range(entry["num_chunks"]):
+                rows = [lane_to_cid.get(k * chunk + row)
+                        for row in range(chunk)]
+                if not any(cid in delivered for cid in rows
+                           if cid is not None):
+                    continue
+                w0c = {}
+                for s in self.specs:
+                    leaves = []
+                    for cid in rows:
+                        p = (client_params[cid] if cid is not None
+                             else client_params[0])
+                        node = _get_path(p, s.key)
+                        leaves.append(node["kernel"] if s.has_kernel
+                                      else node)
+                    w0c[s.key] = jnp.stack(leaves)
+                masks = jnp.asarray(rmask[k * chunk:(k + 1) * chunk])
+                self._note_peak(rid, _tree_bytes(ideal) + _tree_bytes(w0c)
+                                + _tree_bytes(ap) + _tree_bytes(bp)
+                                + _tree_bytes(entry["acc"]))
+                new_chunk = hc(w0c, masks, ap, bp, ideal)
+                for row, cid in enumerate(rows):
+                    if cid is None or cid not in delivered:
+                        continue
+                    out[cid] = self._writeback_lane(
+                        client_params, cid, new_chunk, row)
+        self._chunked_obs(rid, entry, t0)
+        self._finish_peak(rid)
+        glob_flat = {}
+        for s in self.specs:
+            glob_flat[s.key + "/a"] = ap[s.key]
+            glob_flat[s.key + "/b"] = bp[s.key]
+        global_lora = unflatten_from_paths(glob_flat)
+        client_loras = self._hetero_loras(glob_flat, client_ids, ranks,
+                                          lanes)
+        return out, client_loras, global_lora, DeferredDivergence(
+            div, rid, recorder=self.rec if self.rec.enabled else None)
+
     # ------------------------------------------------------------------
     def close(self, params: Params, client_ids: Sequence[int],
               weights: Optional[Sequence[float]] = None, *,
@@ -1961,6 +2393,9 @@ class RoundCloseEngine:
         if self.method == "keep_local":
             raise ValueError("keep_local engine closes per-client bases — "
                              "use close_keep_local()")
+        if self.method == "hetero":
+            raise ValueError("hetero engine closes per-client bases — "
+                             "use close_hetero()")
         if self.method == "reinit" and rng is None:
             raise ValueError("reinit close needs the round's rng")
         if round_id is None and self.buffers.open_rounds:
@@ -2028,16 +2463,74 @@ class RoundCloseEngine:
         self._finish_peak(round_id)
         out: Dict[int, Params] = {}
         for cid in client_ids:
-            lane = lanes[cid]
-            newp = client_params[cid]
-            for s in self.specs:
-                leaf = new_stacks[s.key][lane]
-                if s.has_kernel:
-                    node = dict(_get_path(client_params[cid], s.key),
-                                kernel=leaf)
-                    newp = _set_path(newp, s.key, node)
-                else:
-                    newp = _set_path(newp, s.key, leaf)
-            out[cid] = newp
+            out[cid] = self._writeback_lane(client_params, cid, new_stacks,
+                                            lanes[cid])
         return out, DeferredDivergence(
+            div, round_id, recorder=self.rec if self.rec.enabled else None)
+
+    def close_hetero(self, client_params: Sequence[Params],
+                     client_ids: Sequence[int],
+                     weights: Optional[Sequence[float]] = None, *,
+                     round_id=None
+                     ) -> Tuple[Dict[int, Params], Dict[int, Params],
+                                Params, DeferredDivergence]:
+        """Close a rank-heterogeneous round (the paper's §6 open question,
+        engine-side): ONE shared rank-r_max Eckart–Young truncation of the
+        weighted factored mean — computed from (C·r_max)² Grams, the dense
+        m×n mean never formed — then every DELIVERED client's own base
+        absorbs ΔW_i = Δ̄ − a'_i b'_i, where (a'_i, b'_i) is the LEADING
+        rank-r_i slice of the shared factors (the balanced √s split makes
+        that slice the optimal rank-r_i truncation). Every client then
+        satisfies W0_i + ΔW_i + a'_i b'_i = W0 + Δ̄ exactly.
+
+        ``client_params`` is the trainer's per-client params list (indexed
+        by client id); ranks come from the engine's ``client_ranks``
+        registry (template r_max when unset). Returns
+        ``({cid: new_params}, {cid: rank-r_i lora}, global_lora,
+        divergence)`` — the global is the shared r_max truncation, the
+        divergence a :class:`DeferredDivergence` (no host sync here).
+        """
+        if self.method != "hetero":
+            raise ValueError(f"engine method is {self.method!r}, "
+                             "not hetero")
+        if round_id is None and self.buffers.open_rounds:
+            round_id = self.buffers.open_rounds[0]  # oldest — same as take()
+        self._validate_delivered(client_ids, round_id)
+        if self.buffers.is_chunked(round_id):
+            return self._close_hetero_chunked(client_params, client_ids,
+                                              weights, round_id=round_id)
+        w, mask, uniform = self.weight_vector(client_ids, weights, round_id)
+        lanes = self.buffers.lanes(round_id)
+        lane_to_cid = {lane: cid for cid, lane in lanes.items()}
+        ranks = self._rank_vector(client_ids, lanes)
+        rmax = self.specs[0].a_shape[-1]
+        # the bitwise-stable uniform branch additionally needs every
+        # delivered lane at full rank (no masking anywhere)
+        uniform = uniform and bool(np.all(ranks == rmax))
+        w0_stacks = {}
+        for s in self.specs:
+            leaves = []
+            for lane in range(self.c_max):
+                cid = lane_to_cid.get(lane)
+                p = (client_params[cid] if cid is not None
+                     else client_params[0])
+                node = _get_path(p, s.key)
+                leaves.append(node["kernel"] if s.has_kernel else node)
+            w0_stacks[s.key] = jnp.stack(leaves)
+        stacks = self.buffers.take(round_id)
+        new_stacks, glob, div = self._dispatch(w0_stacks, stacks, w, ranks,
+                                               uniform, round_id)
+        self._finish_peak(round_id)
+        out: Dict[int, Params] = {}
+        for cid in client_ids:
+            out[cid] = self._writeback_lane(client_params, cid, new_stacks,
+                                            lanes[cid])
+        glob_flat = {}
+        for s in self.specs:
+            glob_flat[s.key + "/a"] = glob[s.key]["a"]
+            glob_flat[s.key + "/b"] = glob[s.key]["b"]
+        global_lora = unflatten_from_paths(glob_flat)
+        client_loras = self._hetero_loras(glob_flat, client_ids, ranks,
+                                          lanes)
+        return out, client_loras, global_lora, DeferredDivergence(
             div, round_id, recorder=self.rec if self.rec.enabled else None)

@@ -165,28 +165,36 @@ class FederatedTrainer:
         self._total_steps = self.fed_cfg.rounds * self.fed_cfg.local_steps
         self._last_div = 0.0
         self._start_round = 0  # advanced by load_state (crash-safe resume)
-        # heterogeneous ranks (beyond-paper; core/hetero.py): per-client
-        # adapters of rank rᵢ + per-client frozen bases for the residual fold.
-        self.hetero = bool(self.fed_cfg.client_ranks)
+        # heterogeneous ranks (beyond-paper; core/hetero.py + engine
+        # method="hetero"): per-client adapters of rank rᵢ + per-client
+        # frozen bases for the residual fold. ``method="hetero"`` without
+        # explicit ranks runs every client at lora.rank (uniform hetero).
+        self.hetero = bool(self.fed_cfg.client_ranks) or self.method == "hetero"
         if self.hetero:
-            assert len(self.fed_cfg.client_ranks) == self.fed_cfg.num_clients
+            self.client_ranks = list(self.fed_cfg.client_ranks) or (
+                [self.lora_cfg.rank] * self.fed_cfg.num_clients)
+            assert len(self.client_ranks) == self.fed_cfg.num_clients
             self._client_lora = [
                 init_lora(jax.random.fold_in(rl, i), self.params, self.model.cfg,
                           _dc.replace(self.lora_cfg, rank=r))
-                for i, r in enumerate(self.fed_cfg.client_ranks)]
+                for i, r in enumerate(self.client_ranks)]
             self.client_params = [self.params] * self.fed_cfg.num_clients
         from repro.configs.base import validate_fed_lora
         validate_fed_lora(self.fed_cfg, self.lora_cfg)
         self.coordinator = self._build_coordinator()
         # fused round-close engine (core/engine.py): every engine-covered
         # method — fedex with any §6 assignment (average / keep_local /
-        # reinit) and fedex_svd — closes in ONE jitted program over streamed
-        # (C_max, …) stacks. Everything else (fedit/ffa/centralized, hetero
-        # ranks) keeps the eager list-of-trees ground truth.
+        # reinit), fedex_svd, and the ragged-rank hetero close — runs in ONE
+        # jitted program over streamed (C_max, …) stacks. Everything else
+        # (fedit/ffa/centralized) keeps the eager list-of-trees ground truth.
         self.engine = None
         eng_method = None
-        if self.fed_cfg.engine != "off" and not self.hetero:
-            if self.method == "fedex":
+        if self.fed_cfg.engine != "off":
+            if self.hetero:
+                # ragged uplinks pad to r_max = lora.rank at ingest; the
+                # close masks each lane back to its true rank
+                eng_method = "hetero"
+            elif self.method == "fedex":
                 eng_method = {"average": "fedex",
                               "keep_local": "keep_local",
                               "reinit": "reinit"}[self.fed_cfg.assignment]
@@ -202,7 +210,8 @@ class FederatedTrainer:
                 backend=self.fed_cfg.engine,
                 depth=self.fed_cfg.ring_depth,
                 recorder=self.recorder,
-                chunk=self.fed_cfg.close_chunk)
+                chunk=self.fed_cfg.close_chunk,
+                client_ranks=self.client_ranks if self.hetero else None)
             self.coordinator.sink = self.engine.buffers
 
     def _build_coordinator(self):
@@ -417,7 +426,12 @@ class FederatedTrainer:
         loader = self.client_loaders[client % len(self.client_loaders)]
         opt_state = init_adamw(lora)
         losses = []
-        for s in range(self.fed_cfg.local_steps):
+        # uneven budgets: client c stops after its own step count (mesh mode
+        # expresses the same schedule as masked scan iterations)
+        steps = (self.fed_cfg.client_local_steps[client]
+                 if self.fed_cfg.client_local_steps
+                 else self.fed_cfg.local_steps)
+        for s in range(steps):
             batch = loader.next_batch()
             lr = lr_at(self._global_step + s, base_lr=self.train_cfg.learning_rate,
                        total_steps=self._total_steps,
@@ -452,7 +466,66 @@ class FederatedTrainer:
                                  kind=self.train_cfg.schedule,
                                  warmup_ratio=self.train_cfg.warmup_ratio))
 
-            if self.hetero:
+            if self.hetero and self.engine is not None:
+                from repro.core.hetero import pad_adapters
+
+                # engine-side ragged close: every client's rank-rᵢ adapter
+                # pads to the r_max template at ingest (exact — zero columns)
+                # and streams into the ring with its TRUE rank riding the
+                # slot's rank vector; close_hetero masks each lane back to
+                # rᵢ inside the jitted program and folds each client's own
+                # residual into ITS frozen base.
+                rid = self.engine.buffers.begin_round(
+                    {c: c for c in range(k)}, rnd)
+                client_losses = []
+                delivered = []
+                if self.fault_injector is not None:
+                    # chaos: ragged uplinks ride the SAME defended codec
+                    # path as the uniform methods — encode → corrupt →
+                    # decode_into — so crashes DROP the lane and validation
+                    # failures QUARANTINE it; the close runs over the
+                    # surviving subset and a lost lane contributes nothing.
+                    self.coordinator._ensure_spec(self.global_lora)
+                for c in range(k):
+                    lora_c, losses = self._client_round(
+                        c, self.client_params[c], self._client_lora[c])
+                    client_losses.append(losses[-1])
+                    padded = pad_adapters(lora_c, self.lora_cfg.rank)
+                    if self.fault_injector is None:
+                        self.engine.buffers.write(
+                            c, padded, round_id=rid,
+                            rank=self.client_ranks[c])
+                        delivered.append(c)
+                        continue
+                    res = self.coordinator._uplink(
+                        padded, rid, c, rank=self.client_ranks[c])
+                    if res.ok:
+                        delivered.append(c)
+                # round boundary: previous rounds' deferred divergences
+                # resolve only after this round's uplinks streamed in
+                self._resolve_divergences()
+                with self.recorder.span("round.close", cat="trainer",
+                                        round=rnd, engine=True):
+                    new_cp, new_loras, self.global_lora, div = \
+                        self.engine.close_hetero(
+                            self.client_params, delivered,
+                            round_id=rid)
+                for c in delivered:
+                    self.client_params[c] = new_cp[c]
+                    self._client_lora[c] = new_loras[c]
+                self._last_div = div
+                if self.recorder.enabled:
+                    # closed-round comm fields (obs_report --check): under
+                    # chaos the defended path ledgers real uplink bytes;
+                    # the direct ring path transmits nothing measurable
+                    tot = self.ledger.round_totals(rnd)
+                    self.recorder.round_set(
+                        rnd,
+                        uplink_params=tot["uplink_params"],
+                        uplink_bytes=tot["uplink_bytes"],
+                        downlink_params=tot["downlink_params"],
+                        downlink_bytes=tot["downlink_bytes"])
+            elif self.hetero:
                 from repro.core.hetero import hetero_fedex_aggregate
 
                 client_loras = []
@@ -463,7 +536,8 @@ class FederatedTrainer:
                     client_loras.append(lora_c)
                     client_losses.append(losses[-1])
                 new_loras, residuals = hetero_fedex_aggregate(
-                    client_loras, list(self.fed_cfg.client_ranks))
+                    client_loras, list(self.client_ranks),
+                    r_max=self.lora_cfg.rank)
                 self._client_lora = new_loras
                 self.client_params = [
                     agg.apply_residual(p, r_i, self.scale)

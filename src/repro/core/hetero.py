@@ -5,38 +5,82 @@ assignments for Aᵢ and Bᵢ must also accommodate rank heterogeneity. Further
 investigation is required…". This module supplies one such scheme with the
 SAME exactness guarantee as FedEx-LoRA:
 
-1. Ideal update Δ̄ = mean_i(aᵢ bᵢ) is formed ONLY in factored form
-   (rank ≤ Σᵢ rᵢ; `core/decompose.py` machinery — never densified server-side
-   until fold-in).
-2. Client i (capacity rank rᵢ) receives the Eckart–Young-optimal rank-rᵢ
-   truncation (aᵢ', bᵢ') of Δ̄ — the best adapters its budget can hold.
+1. Ragged client adapters are zero-padded to r_max = max(rᵢ) (exact: padded
+   rank columns multiply to zero in every product) and the ideal update
+   Δ̄ = Σᵢ wᵢ·aᵢ bᵢ is formed ONLY in factored form (L=(m, k·r_max),
+   R=(k·r_max, n) — never densified until fold-in).
+2. ONE shared Eckart–Young truncation at r_max is computed from L, R via the
+   (k·r_max)² Gram machinery (``engine.factored_truncated_product``); client
+   i (capacity rank rᵢ) receives the LEADING rᵢ columns/rows — the balanced
+   √s split orders columns by singular value, so the leading slice IS the
+   optimal rank-rᵢ truncation of Δ̄, every client sharing one decomposition.
 3. Its residual ΔWᵢ = Δ̄ − aᵢ'bᵢ' folds into ITS copy of W0 (per-client
    fold-in, as in the paper's keep_local strategy), so every client's
-   effective weights equal the ideal FedAvg of products EXACTLY:
+   effective weights equal the ideal weighted mean of products EXACTLY:
 
        W0 + ΔWᵢ + aᵢ'bᵢ' = W0 + Δ̄        ∀i.
 
 Singular-factor split: aᵢ' = U√S, bᵢ' = √S Vᵀ keeps both factors balanced
 (the LoRA-friendly parameterisation).
+
+This is the EAGER ORACLE for the engine-side hetero close
+(``core/engine.py`` ``method="hetero"`` / ``RoundCloseEngine.close_hetero``):
+the engine runs the same padded formulation over (C_max, …) stacks with
+per-lane rank masks, and tests/test_engine_hetero.py holds the two to
+bitwise (uniform ranks + weights) / ≤2 ulp (ragged) parity.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import map_factors, _is_factor
-from repro.core.decompose import truncated_svd_product
+from repro.core.aggregation import map_factors, normalize_weights, _is_factor
 
 Params = Dict[str, Any]
 
 
-def _mean_product_factors(factors: List[Params]) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Factored mean of products: Δ̄ = L @ R with L=(m, Σrᵢ), R=(Σrᵢ, n)."""
+def pad_adapters(lora: Params, r_max: int) -> Params:
+    """Zero-pad every {a, b} factor of an adapter tree to rank ``r_max``.
+
+    Exact by construction: a's padded columns and b's padded rows only ever
+    multiply each other or zero, so every product involving the padded
+    adapters equals the unpadded one. This is the decode-side padding the
+    engine/codec apply to ragged uplinks before they enter (C_max, …)
+    stacks.
+    """
+
+    def _pad(f: Params) -> Params:
+        a, b = f["a"], f["b"]
+        r = a.shape[-1]
+        if r == r_max:
+            return {"a": a, "b": b}
+        if r > r_max:
+            raise ValueError(f"adapter rank {r} exceeds r_max={r_max}")
+        pa = [(0, 0)] * (a.ndim - 1) + [(0, r_max - r)]
+        pb = [(0, 0)] * (b.ndim - 2) + [(0, r_max - r), (0, 0)]
+        return {"a": jnp.pad(a, pa), "b": jnp.pad(b, pb)}
+
+    return map_factors(_pad, lora)
+
+
+def _mean_product_factors(
+    factors: List[Params],
+    weights: Optional[Sequence[float]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Factored weighted mean of products: Δ̄ = L @ R.
+
+    ``weights=None`` keeps the historical uniform ``a/k`` op order (the
+    engine's bitwise-uniform branch); a weight vector multiplies each
+    client's L columns instead (the engine's ragged branch op order).
+    """
     k = len(factors)
-    lefts = [f["a"].astype(jnp.float32) / k for f in factors]
+    if weights is None:
+        lefts = [f["a"].astype(jnp.float32) / k for f in factors]
+    else:
+        lefts = [w_i * f["a"].astype(jnp.float32)
+                 for w_i, f in zip(weights, factors)]
     rights = [f["b"].astype(jnp.float32) for f in factors]
     return jnp.concatenate(lefts, axis=-1), jnp.concatenate(rights, axis=-2)
 
@@ -44,45 +88,50 @@ def _mean_product_factors(factors: List[Params]) -> Tuple[jnp.ndarray, jnp.ndarr
 def hetero_fedex_aggregate(
     client_loras: List[Params],
     client_ranks: Sequence[int],
+    weights: Optional[Sequence[float]] = None,
+    r_max: Optional[int] = None,
 ) -> Tuple[List[Params], List[Params]]:
     """Returns (per-client new adapters, per-client residuals).
 
-    ``client_loras[i]`` may have rank rᵢ ≠ rⱼ. Stacked-layer leaves are
-    handled by vmapping the per-matrix computation over leading axes.
+    ``client_loras[i]`` may have rank rᵢ ≠ rⱼ (each is zero-padded to
+    r_max internally; already-padded trees pass through exactly).
+    ``weights`` are optional per-client example weights (normalised here;
+    ``None`` → uniform mean). ``r_max`` defaults to max(client_ranks);
+    engine-parity callers pass the engine's template rank explicitly —
+    decomposition numerics depend on the padded width, so matching the
+    engine bitwise requires matching its r_max even when every delivered
+    rank is smaller. Stacked-layer leaves batch natively — the
+    Gram/eigh/svd core broadcasts over leading axes.
     """
+    # late import: engine pulls no symbols from this module, so the oracle
+    # can borrow its Gram-based truncation without an import cycle
+    from repro.core.engine import factored_truncated_product
+
     k = len(client_loras)
     assert len(client_ranks) == k
+    if r_max is None:
+        r_max = max(int(r) for r in client_ranks)
+    elif r_max < max(int(r) for r in client_ranks):
+        raise ValueError(f"r_max={r_max} below max client rank")
+    norm = normalize_weights(weights, k)
+    if weights is not None and norm is None:
+        # EXPLICIT equal weights keep the weighted op order (w·a, the
+        # engine's ragged branch) rather than collapsing to the uniform a/k
+        # path — callers choose the branch they want parity with
+        norm = [1.0 / k] * k
 
     def per_matrix(*factors):
-        def one(fs):
-            L, R = _mean_product_factors(list(fs))
-
-            outs = []
-            for r_i in client_ranks:
-                u, s, vt = truncated_svd_product(L, R, r_i)
-                sq = jnp.sqrt(jnp.maximum(s, 0.0))
-                a_new = u * sq  # (m, rᵢ)
-                b_new = sq[:, None] * vt  # (rᵢ, n)
-                resid = L @ R - a_new @ b_new
-                outs.append((a_new, b_new, resid))
-            return outs
-
-        lead_ndim = factors[0]["a"].ndim - 2
-        if lead_ndim == 0:
-            return one(factors)
-        # vmap over stacked-layer axes, one level at a time
-        def vone(*fs_flat):
-            fs = [{"a": fs_flat[2 * i], "b": fs_flat[2 * i + 1]} for i in range(k)]
-            outs = one(fs)
-            return tuple(x for o in outs for x in o)
-
-        fn = vone
-        for _ in range(lead_ndim):
-            fn = jax.vmap(fn)
-        flat = [x for f in factors for x in (f["a"], f["b"])]
-        res_flat = fn(*flat)
-        return [(res_flat[3 * i], res_flat[3 * i + 1], res_flat[3 * i + 2])
-                for i in range(k)]
+        padded = [pad_adapters(f, r_max) for f in factors]
+        L, R = _mean_product_factors(padded, norm)
+        ap, bp = factored_truncated_product(L, R, r_max)
+        ideal = L @ R
+        outs = []
+        for r_i in client_ranks:
+            a_new = ap[..., :, :r_i]
+            b_new = bp[..., :r_i, :]
+            resid = ideal - a_new @ b_new
+            outs.append((a_new, b_new, resid))
+        return outs
 
     # walk the factor tree once, collecting per-client trees
     new_loras: List[Params] = [dict() for _ in range(k)]

@@ -107,15 +107,17 @@ class FedClient:
     def metrics(self) -> Dict[str, Any]:
         return self._json(self._request("GET", "/v1/metrics")[1])
 
-    def submit_delta(self, lora: Any, round_id: Optional[int] = None
-                     ) -> Dict[str, Any]:
+    def submit_delta(self, lora: Any, round_id: Optional[int] = None,
+                     rank: Optional[int] = None) -> Dict[str, Any]:
         """Encode + frame + POST one adapter delta; bounded-backoff retries
         on 429/503/connection faults (the coordinator's retry budget shape:
-        ``backoff · 2^attempt`` sleeps, ``retries`` re-attempts)."""
+        ``backoff · 2^attempt`` sleeps, ``retries`` re-attempts). ``rank``
+        declares a ragged (hetero) uplink's LoRA rank — the factor tensors
+        travel at their true rank-r width and the server pads to r_max."""
         rid = self.current_round() if round_id is None else int(round_id)
         payload = self.codec.encode(lora, round_id=rid,
                                     client_id=self.client_id,
-                                    direction="uplink")
+                                    direction="uplink", rank=rank)
         body = payload_to_wire(payload)
         headers = {"Content-Type": "application/octet-stream"}
         if self.num_examples is not None:

@@ -237,7 +237,8 @@ class RoundCoordinator:
                                    client=payload.client_id, attempt=attempt)
 
     def _uplink(self, lora: Any, round_id: int, client_id: int, *,
-                weight: float = 1.0) -> UplinkResult:
+                weight: float = 1.0,
+                rank: Optional[int] = None) -> UplinkResult:
         """Client → server through the codec; the server aggregates what was
         actually transmitted (quantization included). With a streaming sink
         the decoded leaves additionally go straight into the client's stack
@@ -253,12 +254,16 @@ class RoundCoordinator:
         validation failures QUARANTINE the uplink (ledger direction
         ``quarantined``, lane left zero for exact exclusion), addressing
         failures and mid-uplink crashes DROP it (direction ``dropped``).
+
+        ``rank`` declares a ragged (hetero) uplink's true LoRA rank: it
+        rides the payload header so rank-aware validation applies and the
+        ring's slot rank vector records it at ingest.
         """
         with self.rec.span("client.uplink", cat="fedsrv", round=round_id,
                            client=client_id):
             payload = self.codec.encode(lora, round_id=round_id,
                                         client_id=client_id,
-                                        direction="uplink")
+                                        direction="uplink", rank=rank)
             kinds: List[str] = []
             if self.faults is not None:
                 payload, applied = self.faults.corrupt(payload)

@@ -104,6 +104,16 @@ def w0_digest(specs, params) -> str:
     return h.hexdigest()
 
 
+def hetero_w0_digest(specs, client_params) -> str:
+    """sha256 chain over every client's W0 digest in client-id order — the
+    ragged-round witness: a hetero close folds a DIFFERENT residual into each
+    client's base, so the single-tree digest cannot certify the fleet."""
+    h = hashlib.sha256()
+    for p in client_params:
+        h.update(bytes.fromhex(w0_digest(specs, p)))
+    return h.hexdigest()
+
+
 class FederationServer:
     """Round lifecycle + defended ingest behind the HTTP handler.
 
@@ -122,9 +132,9 @@ class FederationServer:
         if fed_cfg.engine == "off":
             raise ValueError("--mode serve needs the streaming close engine "
                              "(engine=off is the eager list path)")
-        if fed_cfg.method not in ("fedex", "fedex_svd"):
-            raise ValueError(f"serve mode closes fedex/fedex_svd rounds, "
-                             f"got method={fed_cfg.method!r}")
+        if fed_cfg.method not in ("fedex", "fedex_svd", "hetero"):
+            raise ValueError(f"serve mode closes fedex/fedex_svd/hetero "
+                             f"rounds, got method={fed_cfg.method!r}")
         self.fed_cfg = fed_cfg
         self.serve_cfg = serve_cfg or ServeConfig()
         self.rec = recorder if recorder is not None \
@@ -137,15 +147,29 @@ class FederationServer:
                                         max_norm=fed_cfg.uplink_max_norm))
         self.codec.register_spec(global_lora)
         self.ledger = BytesLedger()
-        eng_method = "fedex_svd" if (fed_cfg.method == "fedex_svd"
-                                     and fed_cfg.svd_rank) else "fedex"
+        # ragged-rank serving: hetero closes per-client bases, so the server
+        # carries one params tree per client (all aliases of the same arrays
+        # until the first hetero close diverges them)
+        self.hetero = (fed_cfg.method == "hetero"
+                       or bool(fed_cfg.client_ranks))
+        self.client_ranks = list(fed_cfg.client_ranks) or None
+        if self.hetero:
+            eng_method = "hetero"
+        elif fed_cfg.method == "fedex_svd" and fed_cfg.svd_rank:
+            eng_method = "fedex_svd"
+        else:
+            eng_method = "fedex"
         self.engine = RoundCloseEngine(
             params, global_lora, c_max=fed_cfg.num_clients, scale=scale,
             method=eng_method, svd_rank=fed_cfg.svd_rank,
             backend=fed_cfg.engine, depth=fed_cfg.ring_depth,
             recorder=self.rec if self.rec.enabled else None,
-            chunk=fed_cfg.close_chunk)
+            chunk=fed_cfg.close_chunk,
+            client_ranks=self.client_ranks if self.hetero else None)
         self.params = params
+        self.client_params = [params] * fed_cfg.num_clients \
+            if self.hetero else None
+        self.client_loras: Dict[int, Any] = {}   # cid → rank-r_i adapters
         self.global_lora = global_lora
         self.version = 0            # closes so far; bumps on every close
         self.round_id = 0
@@ -190,8 +214,19 @@ class FederationServer:
             weights = [n / sum(ns) for n in ns]
         # round N-1's host sync happens HERE, after round N's writes
         self._resolve_pending()
-        self.global_lora, self.params, div = self.engine.close(
-            self.params, delivered, weights, round_id=rid)
+        if self.hetero:
+            # per-client bases: every delivered client's OWN W0 absorbs its
+            # rank-r_i residual; the shared r_max truncation is the downlink
+            new_cp, new_loras, self.global_lora, div = \
+                self.engine.close_hetero(self.client_params, delivered,
+                                         weights, round_id=rid)
+            for cid, p in new_cp.items():
+                self.client_params[cid] = p
+            self.client_loras.update(new_loras)
+            self.params = self.client_params[0]
+        else:
+            self.global_lora, self.params, div = self.engine.close(
+                self.params, delivered, weights, round_id=rid)
         self._pending_div = div
         self.version += 1
         if self.rec.enabled:
@@ -379,7 +414,9 @@ class FederationServer:
     def _current_digest(self) -> str:
         ver, cached = self._digest_cache
         if ver != self.version or cached is None:
-            cached = w0_digest(self.engine.specs, self.params)
+            cached = hetero_w0_digest(self.engine.specs, self.client_params) \
+                if self.hetero \
+                else w0_digest(self.engine.specs, self.params)
             self._digest_cache = (self.version, cached)
         return cached
 

@@ -89,13 +89,20 @@ class EncodedTensor:
 
 @dataclass(frozen=True)
 class Payload:
-    """One serialized adapter tree in flight (uplink delta or downlink global)."""
+    """One serialized adapter tree in flight (uplink delta or downlink global).
+
+    ``rank`` is the DECLARED LoRA rank of a ragged (hetero) uplink: the
+    factor leaves on the wire are the client's true rank-r tensors, and the
+    defended decode pads them to the registered r_max spec with zeros before
+    scatter. ``None`` means uniform-rank (legacy wire frames parse to None).
+    """
 
     round_id: int
     client_id: int
     direction: str              # "uplink" | "downlink"
     codec: str
     tensors: Dict[str, EncodedTensor]
+    rank: Optional[int] = None  # declared ragged rank (hetero), None=uniform
 
     @property
     def num_params(self) -> int:
@@ -176,14 +183,16 @@ class AdapterCodec:
         return EncodedTensor(q, scale)
 
     def encode(self, tree: Any, *, round_id: int, client_id: int,
-               direction: str = "uplink") -> Payload:
+               direction: str = "uplink",
+               rank: Optional[int] = None) -> Payload:
         codec = self.quantize if direction == "uplink" else "none"
         with self.rec.span("codec.encode", cat="transport", round=round_id,
                            client=client_id, codec=codec):
             tensors = {path: self._encode_leaf(leaf, codec)
                        for path, leaf in flatten_with_paths(tree).items()}
         payload = Payload(round_id=round_id, client_id=client_id,
-                          direction=direction, codec=codec, tensors=tensors)
+                          direction=direction, codec=codec, tensors=tensors,
+                          rank=None if rank is None else int(rank))
         if self.rec.enabled:
             self.rec.counter(f"transport.{direction}_bytes").inc(payload.nbytes)
             self.rec.counter(f"transport.{direction}_payloads").inc()
@@ -231,11 +240,36 @@ class AdapterCodec:
                     f"adapter tree mismatch vs registered spec "
                     f"(missing={missing}, extra={extra})",
                     reason="spec", **ctx)
+            r = payload.rank
             for path, arr in flat.items():
-                if tuple(arr.shape) != spec[path]:
+                want, got = spec[path], tuple(arr.shape)
+                ax = self._rank_axis(path) if r is not None else None
+                if ax is None:
+                    if got != want:
+                        raise TransportError(
+                            f"{path}: shape {got} != registered {want}",
+                            reason="shape", **ctx)
+                    continue
+                # Ragged (hetero) uplink: the factor's rank axis carries the
+                # client's declared rank — zero-padding to the registered
+                # r_max happens at decode, AFTER validation. Already-padded
+                # tensors pass too (masked columns contribute exactly zero).
+                r_max = want[len(want) + ax]
+                if not 1 <= r <= r_max:
                     raise TransportError(
-                        f"{path}: shape {tuple(arr.shape)} != registered "
-                        f"{spec[path]}", reason="shape", **ctx)
+                        f"{path}: declared rank {r} outside [1, {r_max}] "
+                        f"(registered r_max)", reason="rank", **ctx)
+                if len(got) != len(want) or any(
+                        g != w for i, (g, w) in enumerate(zip(got, want))
+                        if i != len(want) + ax):
+                    raise TransportError(
+                        f"{path}: shape {got} != registered {want}",
+                        reason="shape", **ctx)
+                if got[ax] not in (r, r_max):
+                    raise TransportError(
+                        f"{path}: rank axis has {got[ax]} columns, matching "
+                        f"neither declared rank {r} nor registered r_max "
+                        f"{r_max}", reason="rank", **ctx)
         check_finite, max_norm = v.check_finite, v.max_norm
         total = 0.0
         for path, arr in flat.items():
@@ -261,10 +295,39 @@ class AdapterCodec:
             raise TransportError("non-finite values in payload",
                                  reason="nonfinite", **ctx)
 
+    @staticmethod
+    def _rank_axis(path: str) -> Optional[int]:
+        """Which axis of a factor leaf is the LoRA rank axis: a is (…, m, r)
+        → −1, b is (…, r, n) → −2. Non-factor leaves return None (they must
+        match the registered spec exactly even on ragged uplinks)."""
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf == "a":
+            return -1
+        if leaf == "b":
+            return -2
+        return None
+
+    def _pad_ragged(self, payload: Payload,
+                    flat: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Zero-pad a VALIDATED ragged payload's factor leaves up to the
+        registered r_max spec shapes. The engine's per-lane rank mask zeroes
+        exactly the padded columns, so padding is the semantic identity
+        (tests/test_engine_hetero.py proves masking == padding bitwise)."""
+        if payload.rank is None or self.spec is None:
+            return flat
+        out = {}
+        for path, arr in flat.items():
+            want = self.spec.get(path)
+            if want is not None and tuple(arr.shape) != want:
+                arr = np.pad(arr, [(0, w - g) for g, w in
+                                   zip(arr.shape, want)])
+            out[path] = arr
+        return out
+
     def decode(self, payload: Payload) -> Any:
         flat = self._decode_flat(payload)
         self._validate_flat(payload, flat)
-        return unflatten_from_paths(flat)
+        return unflatten_from_paths(self._pad_ragged(payload, flat))
 
     def decode_into(self, payload: Payload, buffers: Any, *,
                     weight: Optional[float] = None) -> Any:
@@ -298,10 +361,14 @@ class AdapterCodec:
                            codec=payload.codec, nbytes=payload.nbytes):
             flat = self._decode_flat(payload)
             self._validate_flat(payload, flat)
+            flat = self._pad_ragged(payload, flat)
+            # forward the declared rank only when set, so uniform payloads
+            # keep working against sinks predating the rank= kwarg
+            rank_kw = {} if payload.rank is None else {"rank": payload.rank}
             try:
                 landed = buffers.write_flat(payload.client_id, flat,
                                             round_id=payload.round_id,
-                                            weight=weight)
+                                            weight=weight, **rank_kw)
             except KeyError as e:
                 raise StaleUplinkError(
                     f"unroutable round_id: {e}", round_id=payload.round_id,

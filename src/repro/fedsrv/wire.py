@@ -60,13 +60,19 @@ def payload_to_wire(payload: Payload) -> bytes:
             "nbytes": int(arr.nbytes),
         })
         chunks.append(arr.tobytes())
-    header = json.dumps({
+    hdr: Dict[str, Any] = {
         "round_id": payload.round_id,
         "client_id": payload.client_id,
         "direction": payload.direction,
         "codec": payload.codec,
         "tensors": descs,
-    }, separators=(",", ":")).encode("utf-8")
+    }
+    if payload.rank is not None:
+        # ragged (hetero) uplink: declared LoRA rank travels in the header;
+        # uniform payloads omit the key so pre-hetero frames stay bytewise
+        # identical
+        hdr["rank"] = int(payload.rank)
+    header = json.dumps(hdr, separators=(",", ":")).encode("utf-8")
     return b"".join([MAGIC, _HDR.pack(len(header)), header] + chunks)
 
 
@@ -89,6 +95,8 @@ def payload_from_wire(data: bytes) -> Payload:
         client_id = int(header["client_id"])
         direction = str(header["direction"])
         codec = str(header["codec"])
+        rank = header.get("rank")   # absent on pre-hetero frames → None
+        rank = None if rank is None else int(rank)
         descs = header["tensors"]
         assert isinstance(descs, list)
     except (ValueError, KeyError, TypeError, AssertionError,
@@ -128,4 +136,5 @@ def payload_from_wire(data: bytes) -> Payload:
         raise _wire_error(f"trailing garbage: {len(data) - off} B past the "
                           "last tensor", round_id, client_id)
     return Payload(round_id=round_id, client_id=client_id,
-                   direction=direction, codec=codec, tensors=tensors)
+                   direction=direction, codec=codec, tensors=tensors,
+                   rank=rank)

@@ -3,10 +3,12 @@
 * lora_matmul     — fused base+adapter projection (every LoRA'd matmul)
 * fedex_residual  — the paper's aggregation residual, fused into the W0 update
                     (uniform OR weighted/masked via a scalar-prefetch vector),
-                    plus two masked siblings sharing its tiling:
+                    plus three masked siblings sharing its tiling:
                     product_fold (signed Σ s_c·a_c b_c — reinit close and the
-                    factored rank-r' svd-residual fold) and perclient_fold
+                    factored rank-r' svd-residual fold), perclient_fold
                     (keep_local per-client residuals, all lanes in one pass)
+                    and hetero_fold (rank-masked ragged lanes + shared
+                    truncated own factors — the hetero close)
 * factor_mean     — weighted client-mean of stacked adapter factors (ā, b̄)
 * flash_swa       — sliding-window flash attention (mixtral/gemma3 long ctx)
 
@@ -23,9 +25,10 @@ identical to the *jitted* ground truth (the eager path differs by ≤2 ulp
 where XLA contracts mul+add to FMA inside fused programs).
 """
 
-from repro.kernels.ops import (factor_mean, fedex_fold, lora_dense,
-                               perclient_fold, product_accum, product_fold,
-                               swa_attention)
+from repro.kernels.ops import (factor_mean, fedex_fold, hetero_fold,
+                               lora_dense, perclient_fold, product_accum,
+                               product_fold, swa_attention)
 
-__all__ = ["factor_mean", "fedex_fold", "lora_dense", "perclient_fold",
-           "product_accum", "product_fold", "swa_attention"]
+__all__ = ["factor_mean", "fedex_fold", "hetero_fold", "lora_dense",
+           "perclient_fold", "product_accum", "product_fold",
+           "swa_attention"]

@@ -21,7 +21,7 @@ Two weighting modes:
   example-count weighting all reuse the same program, they only change the
   vector.
 
-Two masked variants share the tiling and the scalar-prefetch weight vector,
+Three masked variants share the tiling and the scalar-prefetch weight vector,
 covering the remaining round-close methods of the engine (core/engine.py).
 Their padded public wrappers are ``kernels/ops.py::product_fold`` and
 ``perclient_fold`` (as ``fedex_fold`` wraps :func:`fedex_residual_apply`) —
@@ -39,6 +39,11 @@ the engine and every caller go through those:
   Σ_j w_j a_j b_j is accumulated once per output tile and the per-lane
   own-product is recomputed from the resident VMEM slabs (r is small, so the
   extra FLOPs are negligible vs re-streaming C dense residuals from HBM).
+* :func:`hetero_fold_apply` (→ ``ops.hetero_fold``) — the ``hetero`` close:
+  perclient_fold with ragged ranks. A SECOND scalar-prefetch vector carries
+  each lane's true rank; padded rank columns are masked to exact zero inside
+  the tile loop, and every lane's own-product comes from the SHARED
+  rank-r_max truncation factors masked down to its own rank.
 
 Tile-indivisible shapes (whisper/qwen head dims, odd vocab slices) are padded
 to the next (bm, bn) multiple with zeros and sliced back — zero rows/columns
@@ -301,3 +306,82 @@ def perclient_fold_apply(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((c, mp, np_), jnp.float32),
         interpret=interpret,
     )(weights.astype(jnp.float32), w0p, ap, bp)[:, :m, :n]
+
+
+# --------------------------------------------------------------------------
+# hetero fold: rank-masked per-client fold, shared truncated own factors
+# --------------------------------------------------------------------------
+
+def _kernel_hetero(w_ref, rk_ref, w0_ref, a_ref, b_ref, oa_ref, ob_ref,
+                   o_ref, *, scale: float, num_clients: int):
+    """o[c] = w0[c] + scale·(Σ_j w_j·(a_j∘mask_j) b_j − (A'∘mask_c) B').
+
+    TWO scalar-prefetch vectors ride in SMEM: the (C,) f32 weight vector and
+    the (C,) int32 TRUE-rank vector (−1 = full rank). Rank columns of a_j
+    past rank_j are zeroed before every product — one-sided masking
+    suffices, since zeroing a's column k already kills the k-th rank-1 term
+    of a@b — and each lane's own-product uses the SHARED rank-r_max
+    truncated factors (A', B') masked down to its own rank: the
+    leading-slice Eckart–Young truncation without per-lane shapes, so ONE
+    compiled program serves every rank mix in the fleet.
+    """
+    a = a_ref[...].astype(jnp.float32)    # (C, bm, r)
+    b = b_ref[...].astype(jnp.float32)    # (C, r, bn)
+    oa = oa_ref[...].astype(jnp.float32)  # (bm, r)
+    ob = ob_ref[...].astype(jnp.float32)  # (r, bn)
+    r = a.shape[-1]
+    # 2-D iota: TPU vector units have no 1-D iota (mosaic lowering rule)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    ideal = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    for c in range(num_clients):  # static unroll: C is small
+        rk = jnp.where(rk_ref[c] < 0, r, rk_ref[c])
+        mask = (iota < rk).astype(jnp.float32)  # (1, r): exact 0/1
+        ideal += w_ref[c] * jnp.dot(a[c] * mask, b[c],
+                                    preferred_element_type=jnp.float32)
+    for c in range(num_clients):
+        rk = jnp.where(rk_ref[c] < 0, r, rk_ref[c])
+        mask = (iota < rk).astype(jnp.float32)
+        own = jnp.dot(oa * mask, ob, preferred_element_type=jnp.float32)
+        o_ref[c, :, :] = w0_ref[c].astype(jnp.float32) + scale * (ideal - own)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def hetero_fold_apply(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
+                      b_stack: jnp.ndarray, weights: jnp.ndarray,
+                      ranks: jnp.ndarray, own_a: jnp.ndarray,
+                      own_b: jnp.ndarray, *, scale: float = 1.0,
+                      bm: int = 256, bn: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """w0_stack: (C, m, n), a_stack: (C, m, r), b_stack: (C, r, n),
+    weights: (C,) f32, ranks: (C,) int32 (−1 = full rank), own_a: (m, r),
+    own_b: (r, n) → (C, m, n) f32 with lane c = W0_c + scale·(ideal −
+    (A'∘mask_c) B'). Zero-weight AND zero-rank lanes both vanish from the
+    ideal; callers discard non-delivered lanes (the C_max contract)."""
+    c, m, n = w0_stack.shape
+    r = a_stack.shape[-1]
+    bm, bn = min(bm, m), min(bn, n)
+    w0p = _pad_axis(_pad_axis(w0_stack, bm, 1), bn, 2)
+    ap = _pad_axis(a_stack, bm, 1)
+    bp = _pad_axis(b_stack, bn, 2)
+    oap = _pad_axis(own_a, bm, 0)
+    obp = _pad_axis(own_b, bn, 1)
+    mp, np_ = w0p.shape[1:]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((c, bm, bn), lambda i, j, *_: (0, i, j)),
+            pl.BlockSpec((c, bm, r), lambda i, j, *_: (0, i, 0)),
+            pl.BlockSpec((c, r, bn), lambda i, j, *_: (0, 0, j)),
+            pl.BlockSpec((bm, r), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, *_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((c, bm, bn), lambda i, j, *_: (0, i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_hetero, scale=scale, num_clients=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, mp, np_), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), ranks.astype(jnp.int32), w0p, ap, bp,
+      oap, obp)[:, :m, :n]

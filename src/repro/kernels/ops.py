@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.factor_mean import lora_factor_mean
 from repro.kernels.fedex_residual import (fedex_residual_apply,
+                                          hetero_fold_apply,
                                           perclient_fold_apply,
                                           product_accum_apply,
                                           product_fold_apply)
@@ -135,6 +136,31 @@ def perclient_fold(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
     bm, bn = _fold_tiles(*w0_stack.shape[1:])
     out = perclient_fold_apply(w0_stack, a_stack, b_stack, weights,
                                scale=scale, bm=bm, bn=bn, interpret=interpret)
+    return out.astype(w0_stack.dtype)
+
+
+def hetero_fold(w0_stack: jnp.ndarray, a_stack: jnp.ndarray,
+                b_stack: jnp.ndarray, weights: jnp.ndarray,
+                ranks: jnp.ndarray, own_a: jnp.ndarray, own_b: jnp.ndarray,
+                scale: float, *,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Hetero close: lane c gets W0_c + scale·(Σ_j w_j (a_j∘mask_j) b_j −
+    (A'∘mask_c) B'), all lanes in one tiled pass. Layout follows
+    ``perclient_fold`` (client axis leads, layer axes vmapped in between);
+    ``ranks`` is the (C,) int32 TRUE-rank vector (−1 = full rank) riding as
+    a second scalar-prefetch operand, and (own_a, own_b) are the SHARED
+    rank-r_max truncation factors every lane masks down to its own rank.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    if w0_stack.ndim > 3:  # (C, L, ..., m, n): vmap over the layer axes
+        return jax.vmap(lambda w, a, b, oa, ob: hetero_fold(
+            w, a, b, weights, ranks, oa, ob, scale, interpret=interpret),
+            in_axes=(1, 1, 1, 0, 0), out_axes=1)(
+            w0_stack, a_stack, b_stack, own_a, own_b)
+    bm, bn = _fold_tiles(*w0_stack.shape[1:])
+    out = hetero_fold_apply(w0_stack, a_stack, b_stack, weights, ranks,
+                            own_a, own_b, scale=scale, bm=bm, bn=bn,
+                            interpret=interpret)
     return out.astype(w0_stack.dtype)
 
 

@@ -73,7 +73,8 @@ MESH_METHODS = ("fedex", "fedex_svd")
 # --------------------------------------------------------------------------
 
 def make_mesh_round_fn(model, lora_scale: float,
-                       train_cfg: TrainConfig) -> Callable:
+                       train_cfg: TrainConfig,
+                       masked: bool = False) -> Callable:
     """One round of local training for ALL lanes in a single jitted program.
 
     ``round_fn(params, lora_stack, batches, lrs)`` scans a lane's
@@ -85,13 +86,23 @@ def make_mesh_round_fn(model, lora_scale: float,
     Base ``params`` broadcast unsharded across lanes; the adapter stack and
     batches shard over the client axis where the caller placed them so XLA
     partitions lane compute across the mesh.
+
+    ``masked=True`` compiles the uneven-budget variant:
+    ``round_fn(params, lora_stack, batches, lrs, budgets)`` takes a
+    per-lane ``(C_max,)`` int step-budget vector and freezes lane c's
+    adapter/optimizer state once ``t ≥ budgets[c]`` (``jnp.where`` selects
+    on every leaf — the scan stays co-scheduled, dead iterations are the
+    padding cost). A frozen lane's reported losses repeat its last live
+    loss, so ``losses[:, -1]`` remains "the lane's final training loss".
+    The default path compiles WITHOUT the masking selects and is
+    bitwise-unchanged.
     """
 
-    def one_lane(params, lora, batches, lrs):
+    def one_lane(params, lora, batches, lrs, budget):
         opt_state = init_adamw(lora)
 
         def body(carry, xs):
-            lora, opt_state = carry
+            lora, opt_state, t, last = carry
             batch, lr = xs
 
             def loss_fn(l):
@@ -100,19 +111,31 @@ def make_mesh_round_fn(model, lora_scale: float,
 
             (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(lora)
             grads, _ = clip_by_global_norm(grads, train_cfg.grad_clip)
-            lora, opt_state = adamw_update(
+            new_lora, new_opt = adamw_update(
                 grads, opt_state, lora, learning_rate=lr,
                 beta1=train_cfg.beta1, beta2=train_cfg.beta2,
                 eps=train_cfg.eps, weight_decay=train_cfg.weight_decay)
-            return (lora, opt_state), loss
+            if masked:
+                live = t < budget
+                sel = lambda n, o: jnp.where(live, n, o)  # noqa: E731
+                new_lora = jax.tree.map(sel, new_lora, lora)
+                new_opt = jax.tree.map(sel, new_opt, opt_state)
+                loss = jnp.where(live, loss, last)
+            return (new_lora, new_opt, t + 1, loss), loss
 
-        (lora, _), losses = jax.lax.scan(body, (lora, opt_state),
-                                         (batches, lrs))
+        (lora, _, _, _), losses = jax.lax.scan(
+            body, (lora, opt_state, jnp.int32(0), jnp.float32(0.0)),
+            (batches, lrs))
         return lora, losses
 
-    def round_fn(params, lora_stack, batches, lrs):
-        return jax.vmap(one_lane, in_axes=(None, 0, 0, None))(
-            params, lora_stack, batches, lrs)
+    if masked:
+        def round_fn(params, lora_stack, batches, lrs, budgets):
+            return jax.vmap(one_lane, in_axes=(None, 0, 0, None, 0))(
+                params, lora_stack, batches, lrs, budgets)
+    else:
+        def round_fn(params, lora_stack, batches, lrs):
+            return jax.vmap(one_lane, in_axes=(None, 0, 0, None, None))(
+                params, lora_stack, batches, lrs, jnp.int32(0))
 
     return jax.jit(round_fn)
 
@@ -311,8 +334,13 @@ class MeshFederatedTrainer:
             self.mesh, self.params, self.global_lora,
             c_max=fc.num_clients, scale=self.scale, method=method,
             svd_rank=svd_rank, recorder=self.recorder)
+        # uneven per-lane step budgets compile the masked-scan variant;
+        # the default budget-free path keeps its bitwise-unchanged program
+        self._budgets = (jnp.asarray(fc.client_local_steps, jnp.int32)
+                         if fc.client_local_steps else None)
         self.round_fn = make_mesh_round_fn(self.model, self.scale,
-                                           self.train_cfg)
+                                           self.train_cfg,
+                                           masked=self._budgets is not None)
         self.eval_fn = make_eval_fn(self.model, self.scale)
         self.history: List[RoundRecord] = []
         self._total_steps = fc.rounds * fc.local_steps
@@ -446,8 +474,12 @@ class MeshFederatedTrainer:
                 self._stack_batches(fc.local_steps))
             with self.recorder.span("mesh.train_round", cat="trainer",
                                     round=rnd, lanes=c):
-                new_stack, losses = self.round_fn(self.params, lora_stack,
-                                                  batches, lrs)
+                if self._budgets is not None:
+                    new_stack, losses = self.round_fn(
+                        self.params, lora_stack, batches, lrs, self._budgets)
+                else:
+                    new_stack, losses = self.round_fn(self.params, lora_stack,
+                                                      batches, lrs)
             # round boundary: the PREVIOUS close's divergence resolves only
             # after this round's training program has been dispatched, so
             # the in-flight close overlaps lane compute (mesh-mode twin of

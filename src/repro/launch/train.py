@@ -128,7 +128,8 @@ def main() -> None:
                          "means WALL seconds")
     ap.add_argument("--arch", default="paper-tiny")
     ap.add_argument("--method", default="fedex",
-                    choices=("fedex", "fedit", "ffa", "fedex_svd", "centralized"))
+                    choices=("fedex", "fedit", "ffa", "fedex_svd", "hetero",
+                             "centralized"))
     ap.add_argument("--assignment", default="average",
                     choices=("average", "keep_local", "reinit"))
     ap.add_argument("--clients", type=int, default=3)
@@ -149,7 +150,14 @@ def main() -> None:
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="Gaussian noise multiplier (σ = mult · clip)")
     ap.add_argument("--client-ranks", default="",
-                    help="comma-separated per-client ranks (hetero-rank mode)")
+                    help="comma-separated per-client ranks, e.g. 2,4,8 — "
+                         "non-empty (or --method hetero) runs the ragged-rank "
+                         "engine close; adapters pad to --rank = r_max at "
+                         "ingest and each lane masks back to its true rank")
+    ap.add_argument("--client-local-steps", default="",
+                    help="comma-separated per-client local step budgets "
+                         "(mesh mode masks scan iterations past a client's "
+                         "budget; empty = every client runs --local-steps)")
     # fedsrv coordinator (partial participation / stragglers / async buffer):
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients sampled per round (fedsrv)")
@@ -261,6 +269,9 @@ def main() -> None:
                         client_ranks=tuple(
                             int(r) for r in args.client_ranks.split(",")
                             if r.strip()),
+                        client_local_steps=tuple(
+                            int(s) for s in args.client_local_steps.split(",")
+                            if s.strip()),
                         participation=args.participation,
                         min_quorum=args.min_quorum,
                         round_deadline=args.deadline,

@@ -78,6 +78,13 @@ def _assert_bitwise_runs(full, resumed):
     fb = jax.tree.leaves((resumed.global_lora, resumed.params))
     for a, b in zip(fa, fb):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # hetero/keep_local runs carry PER-CLIENT bases + adapters — each
+    # client's own residual fold must survive the resume bitwise too
+    if full.client_params is not None:
+        fa = jax.tree.leaves((full.client_params, full._client_lora))
+        fb = jax.tree.leaves((resumed.client_params, resumed._client_lora))
+        for a, b in zip(fa, fb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def _kill_and_resume(fed_cfg, tmp_path, kill_after=1, clients=3):
@@ -137,6 +144,34 @@ class TestKillAndResume:
         cfg = FedConfig(num_clients=5, rounds=ROUNDS, local_steps=2,
                         method="fedex", participation=1.0,
                         weighting="examples", engine="auto", close_chunk=2)
+        _kill_and_resume(cfg, tmp_path, clients=5)
+
+    def test_hetero_round_bitwise(self, tmp_path):
+        """Ragged-rank engine closes (close_hetero) are crash-safe: the
+        checkpoint carries every client's OWN folded base + rank-r_i
+        adapters AND the ring's per-slot rank vectors, so the resumed half
+        replays the masked closes bitwise."""
+        cfg = FedConfig(num_clients=3, rounds=ROUNDS, local_steps=2,
+                        method="hetero", client_ranks=(2, 4, 3),
+                        participation=1.0, engine="auto")
+        full, resumed = _kill_and_resume(cfg, tmp_path)
+        # the ragged ranks actually survived: each client's adapter is at
+        # its OWN rank after the resume
+        from repro.util.tree import flatten_with_paths
+        for i, r in enumerate((2, 4, 3)):
+            for lora in (full._client_lora[i], resumed._client_lora[i]):
+                widths = [np.shape(v)[-1]
+                          for k, v in flatten_with_paths(lora).items()
+                          if k.endswith("/a")]
+                assert widths and all(w == r for w in widths)
+
+    def test_hetero_chunked_midstream_bitwise(self, tmp_path):
+        """close_chunk=2 at 5 ragged clients: every hetero close runs the
+        CHUNKED path (per-chunk rank vectors + partial masked folds live in
+        the ring snapshot) and the resumed run is still bitwise."""
+        cfg = FedConfig(num_clients=5, rounds=ROUNDS, local_steps=2,
+                        method="hetero", client_ranks=(2, 4, 1, 3, 4),
+                        participation=1.0, engine="auto", close_chunk=2)
         _kill_and_resume(cfg, tmp_path, clients=5)
 
     def test_checkpoint_every_skips_rounds(self, tmp_path):
@@ -218,6 +253,62 @@ class TestComponentStateRoundTrips:
         g_f, p_f = close(uninterrupted)
         for a, b in zip(jax.tree.leaves((g_f, p_f)),
                         jax.tree.leaves((g_r, p_r))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ring_midchunk_hetero_rank_state(self):
+        """Hetero twin of test_ring_midchunk_state: the chunked ring
+        snapshot additionally carries per-chunk RANK VECTORS (``_ranks``) —
+        restore mid-chunk into a fresh hetero engine, finish streaming, and
+        the ragged ``close_hetero`` must be bitwise identical, per-client
+        params included."""
+        c, chunk, rmax = 6, 2, 4
+        ranks = [2, 4, 1, 3, 4, 2]
+        rng = np.random.default_rng(33)
+        mk = lambda sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+        params = {"q_proj": {"kernel": mk((16, 12))}}
+        lora_t = {"q_proj": {"a": mk((16, rmax)), "b": mk((rmax, 12))}}
+        from repro.core.hetero import pad_adapters
+        loras = [pad_adapters({"q_proj": {"a": mk((16, r)),
+                                          "b": mk((r, 12))}}, rmax)
+                 for r in ranks]
+        raw_w = [30.0, 50.0, 70.0, 90.0, 110.0, 130.0]
+
+        def make():
+            return RoundCloseEngine(params, lora_t, c_max=c, scale=0.5,
+                                    method="hetero", backend="jnp",
+                                    chunk=chunk, client_ranks=ranks)
+
+        def close(eng):
+            cps, cls, g, div = eng.close_hetero([params] * c, list(range(c)),
+                                                raw_w)
+            div.resolve()
+            return g, cps, cls
+
+        uninterrupted = make()
+        uninterrupted.buffers.begin_round({i: i for i in range(c)})
+        crashed = make()
+        crashed.buffers.begin_round({i: i for i in range(c)})
+        for i in range(c):
+            uninterrupted.buffers.write(i, loras[i], weight=raw_w[i],
+                                        rank=ranks[i])
+            if i < 3:  # crash after chunk 0 folded + chunk 1 half full
+                crashed.buffers.write(i, loras[i], weight=raw_w[i],
+                                      rank=ranks[i])
+        meta, arrays = crashed.buffers.state_dict()
+        assert meta["open"][0]["chunked"]
+        # the rank vectors live in the snapshot alongside the chunk stacks
+        assert any(k.endswith("/_ranks") for k in arrays), \
+            f"no rank vectors in snapshot arrays: {sorted(arrays)}"
+
+        resumed = make()
+        resumed.buffers.load_state(meta, arrays)
+        for i in range(3, c):
+            resumed.buffers.write(i, loras[i], weight=raw_w[i],
+                                  rank=ranks[i])
+        g_r, cps_r, cls_r = close(resumed)
+        g_f, cps_f, cls_f = close(uninterrupted)
+        for a, b in zip(jax.tree.leaves((g_f, cps_f, cls_f)),
+                        jax.tree.leaves((g_r, cps_r, cls_r))):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def test_ledger_state(self):

@@ -272,6 +272,57 @@ class TestCrashTwinExactness:
             assert dropped[rnd] <= base[rnd]  # only dropouts differ
 
 
+HET_RANKS = (4, 2, 1, 4, 2, 1, 4, 2)  # faulted clients 2, 5, 7 are ragged
+
+
+class TestHeteroCrashTwin:
+    """Ragged-rank chaos: under faults the hetero uplinks ride the SAME
+    defended codec path as the uniform methods, so a quarantined ragged
+    lane contributes NOTHING — the close is bitwise identical to the
+    crash twin, per-client bases and rank-r_i adapters included."""
+
+    def _run(self, plan):
+        tr = _trainer(FedConfig(
+            num_clients=8, rounds=2, local_steps=1, method="hetero",
+            client_ranks=HET_RANKS, participation=1.0, engine="auto",
+            faults=plan), clients=8)
+        tr.run()
+        return tr
+
+    def test_c8_hetero_round_bitwise(self):
+        faulty, twin = self._run(PLAN), self._run(TWIN)
+        # ledger buckets: nan + truncate quarantine, replay drops, and the
+        # twin's crashes drop — same survivor subset both runs
+        q = {e.client_id for e in faulty.ledger.entries
+             if e.direction == "quarantined"}
+        d = {e.client_id for e in faulty.ledger.entries
+             if e.direction == "dropped"}
+        assert q == {2, 5} and 7 in d
+        assert {e.client_id for e in twin.ledger.entries
+                if e.direction == "dropped"} == {2, 5, 7}
+        for a, b in zip(_leaves(faulty), _leaves(twin)):
+            np.testing.assert_array_equal(a, b)
+        fa = jax.tree.leaves((faulty.client_params, faulty._client_lora))
+        fb = jax.tree.leaves((twin.client_params, twin._client_lora))
+        assert fa and len(fa) == len(fb)
+        for a, b in zip(fa, fb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_survivor_loras_keep_true_rank(self):
+        tr = self._run(PLAN)
+        for c, r in enumerate(HET_RANKS):
+            widths = [np.shape(v)[-1]
+                      for k, v in
+                      flatten_with_paths(tr._client_lora[c]).items()
+                      if k.endswith("/a")]
+            assert widths and all(w == r for w in widths)
+
+    def test_hetero_faulty_run_is_deterministic(self):
+        runs = [self._run(PLAN) for _ in range(2)]
+        for a, b in zip(_leaves(runs[0]), _leaves(runs[1])):
+            np.testing.assert_array_equal(a, b)
+
+
 class TestDegradedRounds:
     def test_sync_all_quarantined_carries_global_forward(self):
         tr = _trainer(FedConfig(

@@ -35,8 +35,9 @@ from repro.configs.base import FedConfig, ServeConfig
 from repro.core.engine import RoundCloseEngine
 from repro.fedsrv.client import FedClient
 from repro.fedsrv.registry import SimClock
-from repro.fedsrv.server import (FederationServer, start_http_server,
-                                 w0_digest)
+from repro.core.hetero import pad_adapters
+from repro.fedsrv.server import (FederationServer, hetero_w0_digest,
+                                 start_http_server, w0_digest)
 from repro.fedsrv.transport import (AdapterCodec, Payload, StaleUplinkError,
                                     TransportError)
 from repro.fedsrv.wire import payload_from_wire, payload_to_wire
@@ -60,6 +61,14 @@ def _delta(rnd, cid, seed=42):
     g = np.random.default_rng([seed, rnd, cid])
     return {"blk": {"q": {"a": g.normal(size=(M, R)).astype(np.float32),
                           "b": g.normal(size=(R, N)).astype(np.float32)}}}
+
+
+def _ragged_delta(rnd, cid, r, seed=42):
+    """A rank-r delta exactly as a hetero client would uplink it — TRUE
+    rank-r factor widths, no padding (the server pads at decode)."""
+    g = np.random.default_rng([seed, rnd, cid])
+    return {"blk": {"q": {"a": g.normal(size=(M, r)).astype(np.float32),
+                          "b": g.normal(size=(r, N)).astype(np.float32)}}}
 
 
 def _bitwise(a, b):
@@ -191,6 +200,131 @@ class TestServerEndToEnd:
                               [n / tot for n in ns], round_id=0)
         _bitwise(pull.lora, tl)
         assert pull.w0_digest == w0_digest(eng.specs, tp)
+
+
+HET_RANKS = (1, 2, 1)
+
+
+@pytest.fixture
+def hetero_served():
+    """A booted ragged-rank server: 3 clients at ranks (1, 2, 1) against the
+    rank-2 template, 2 rounds, obs trace for assertable counters."""
+    fed_cfg = FedConfig(num_clients=3, rounds=2, obs="trace",
+                        method="hetero", client_ranks=HET_RANKS)
+    srv = FederationServer(_params(), _template(), scale=0.5,
+                           fed_cfg=fed_cfg, serve_cfg=ServeConfig(port=0))
+    httpd = start_http_server(srv, port=0)
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    yield srv, url
+    httpd.shutdown()
+
+
+class TestHeteroServe:
+    """Serve e2e for ragged-rank rounds: mixed-rank uplinks at each client's
+    TRUE width cross the socket, the server pads at decode, and the HTTP
+    close is bitwise identical to an in-process twin that pads with
+    ``pad_adapters`` and closes through ``close_hetero`` — so the wire path
+    and the trainer path are the same computation. The wrong-rank POST must
+    bounce 422 with ``uplink.quarantined[rank]`` and leave the lane open."""
+
+    def _twin(self, rounds, delivered_per_round):
+        eng = RoundCloseEngine(_params(), _template(), c_max=3, scale=0.5,
+                               backend="auto", method="hetero",
+                               client_ranks=list(HET_RANKS))
+        cps = [_params()] * 3
+        tl = None
+        for rnd in range(rounds):
+            eng.buffers.begin_round({i: i for i in range(3)}, round_id=rnd)
+            delivered = delivered_per_round[rnd]
+            for i in delivered:
+                eng.buffers.write(
+                    i, pad_adapters(_ragged_delta(rnd, i, HET_RANKS[i]), R),
+                    round_id=rnd, rank=HET_RANKS[i])
+            new_cp, _loras, tl, div = eng.close_hetero(
+                cps, list(delivered), round_id=rnd)
+            for i, p in new_cp.items():
+                cps[i] = p
+            div.resolve()
+        return tl, cps, eng
+
+    def test_mixed_rank_rounds_close_bitwise_vs_inprocess_twin(
+            self, hetero_served):
+        srv, url = hetero_served
+        clients = [FedClient(url, i) for i in range(3)]
+        for rnd in range(2):
+            for i, c in enumerate(clients):
+                resp = c.submit_delta(_ragged_delta(rnd, i, HET_RANKS[i]),
+                                      round_id=rnd, rank=HET_RANKS[i])
+                assert resp["status"] == "accepted"
+        pull = clients[0].pull_latest()
+        assert pull.version == 2
+        tl, cps, eng = self._twin(2, [(0, 1, 2), (0, 1, 2)])
+        _bitwise(pull.lora, tl)
+        # the ragged witness: one digest chained over EVERY client's folded
+        # base (each absorbed a different rank-r_i residual)
+        assert pull.w0_digest == hetero_w0_digest(eng.specs, cps)
+        # per-client adapters come back at each client's own rank
+        for i in range(3):
+            assert srv.client_loras[i]["blk"]["q"]["a"].shape == \
+                (M, HET_RANKS[i])
+
+    def test_wrong_rank_422_quarantined_lane_stays_open(self, hetero_served):
+        srv, url = hetero_served
+        c0 = FedClient(url, 0)
+        # declared rank beyond the registered r_max → rank quarantine
+        with pytest.raises(TransportError) as ei:
+            c0.submit_delta(_delta(0, 0), round_id=0, rank=R + 3)
+        assert ei.value.reason == "rank"
+        assert not isinstance(ei.value, StaleUplinkError)
+        # declared rank legal but the tensors' rank axis matches neither the
+        # declaration nor r_max → also a rank quarantine, not plain shape
+        with pytest.raises(TransportError) as ei:
+            c0.submit_delta(_ragged_delta(0, 0, R + 1), round_id=0, rank=1)
+        assert ei.value.reason == "rank"
+        snap = srv.rec.metrics.snapshot()["counters"]
+        assert snap["uplink.quarantined[rank]"] == 2
+        # neither quarantine consumed the lane: the real delta still lands
+        resp = c0.submit_delta(_ragged_delta(0, 0, HET_RANKS[0]),
+                               round_id=0, rank=HET_RANKS[0])
+        assert resp["status"] == "accepted"
+        tot = srv.ledger.round_totals(0)
+        assert tot.get("quarantined_bytes", 0) > 0
+
+    def test_quorum_deadline_hetero_close_exact_over_subset(self):
+        fed_cfg = FedConfig(num_clients=3, rounds=1, min_quorum=2,
+                            round_deadline=0.4, method="hetero",
+                            client_ranks=HET_RANKS)
+        srv = FederationServer(_params(), _template(), scale=0.5,
+                               fed_cfg=fed_cfg, serve_cfg=ServeConfig(port=0))
+        httpd = start_http_server(srv, port=0)
+        url = f"http://127.0.0.1:{httpd.server_address[1]}"
+        try:
+            for i in (0, 2):
+                FedClient(url, i).submit_delta(
+                    _ragged_delta(0, i, HET_RANKS[i]), round_id=0,
+                    rank=HET_RANKS[i])
+            assert srv.version == 0
+            deadline = time.monotonic() + 5.0
+            while srv.version == 0 and time.monotonic() < deadline:
+                srv.tick()
+                time.sleep(0.02)
+            assert srv.version == 1 and srv.done
+            pull = FedClient(url, 0).pull_latest()
+        finally:
+            httpd.shutdown()
+        tl, cps, eng = self._twin(1, [(0, 2)])
+        _bitwise(pull.lora, tl)
+        assert pull.w0_digest == hetero_w0_digest(eng.specs, cps)
+
+    def test_uniform_payload_rank_header_absent(self):
+        # legacy frames carry no rank key; a rank-tagged frame round-trips
+        c = AdapterCodec("none")
+        plain = c.encode(_delta(0, 0), round_id=0, client_id=0)
+        assert b'"rank"' not in payload_to_wire(plain)
+        assert payload_from_wire(payload_to_wire(plain)).rank is None
+        tagged = c.encode(_ragged_delta(0, 0, 1), round_id=0, client_id=0,
+                          rank=1)
+        assert payload_from_wire(payload_to_wire(tagged)).rank == 1
 
 
 class TestHTTPStatusMapping:
